@@ -1,0 +1,61 @@
+"""Communication-volume analysis: what self-sufficiency SAVES.
+
+The paper's central claim is that neighborhood expansion trades replicated
+storage/compute for ZERO neighbor traffic.  This analysis quantifies the
+counterfactual — a DistDGL-style system that fetches remote n-hop
+neighborhood state on demand — against the paper's design, per epoch:
+
+  fetch bytes (remote)  = Σ_partitions |remote vertices in the n-hop
+                          closure of its core edges| × d × 4 B × epochs'
+                          (each epoch re-fetches: embeddings change)
+  paper's bytes         = gradient AllReduce only (|params| × 4 B / epoch)
+  paper's one-time cost = support-vertex features shipped ONCE at startup
+
+This is the table DESIGN.md §2 promises; it runs on host numpy only.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import (
+    core_vertices, expand_all, partition_graph,
+)
+from repro.data import synthetic_citation2
+
+
+def run(quick: bool = True):
+    splits = synthetic_citation2(scale=0.0008 if quick else 0.002, seed=0)
+    kg = splits["train"].with_inverse_relations()
+    d = 128                      # feature dim
+    hidden = 32
+    params = d * hidden * 2 + hidden * hidden * 2 + \
+        kg.num_relations * (2 + hidden)      # rgcn basis + decoder approx
+    rows = []
+    for p in (2, 4, 8):
+        parts = partition_graph(kg, p, "vertex_cut", seed=0)
+        expanded = expand_all(kg, parts, num_hops=2)
+        fetch_bytes = 0
+        support_bytes = 0
+        for part, sp in zip(parts, expanded):
+            n_core = sp.num_core_vertices
+            n_support = sp.num_local_vertices - n_core
+            # remote-fetch design: every support vertex's CURRENT state is
+            # re-fetched each epoch (embeddings / hidden states go stale)
+            fetch_bytes += n_support * d * 4
+            # paper's design: the same vertices' INPUT features ship once
+            support_bytes += n_support * d * 4
+        grad_bytes = params * 4 * 2          # ring all-reduce ≈ 2× params
+        rows.append({
+            "name": f"partitions{p}",
+            "us_per_call": 0.0,
+            "remote_fetch_MB_per_epoch": round(fetch_bytes / 1e6, 2),
+            "paper_gradient_MB_per_epoch": round(grad_bytes / 1e6, 3),
+            "paper_one_time_support_MB": round(support_bytes / 1e6, 2),
+            "per_epoch_saving_x": round(fetch_bytes / grad_bytes, 1),
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(emit(run(), "comm")))

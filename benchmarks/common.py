@@ -1,0 +1,45 @@
+"""Shared benchmark utilities.
+
+CPU-container semantics (DESIGN.md §7): the paper's wall-clock speedups came
+from 8 GPUs; on one CPU core we (a) measure real per-batch/per-epoch work,
+and (b) model the cluster epoch time as ``max_i (batches_i × t_batch_i)``
+over trainers — trainers run concurrently in the real system, so the slowest
+trainer sets the epoch time (exactly the straggler argument of §3.2).
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+from typing import Callable, Dict, List
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+
+def time_call(fn: Callable, *args, repeats: int = 3, warmup: int = 1,
+              **kw) -> float:
+    """Median wall seconds of fn(*args)."""
+    for _ in range(warmup):
+        fn(*args, **kw)
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn(*args, **kw)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def fmt_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"
+
+
+def emit(rows: List[Dict], table: str) -> List[str]:
+    out = []
+    for r in rows:
+        name = f"{table}/{r.pop('name')}"
+        us = r.pop("us_per_call", 0.0)
+        derived = ";".join(f"{k}={v}" for k, v in r.items())
+        out.append(fmt_row(name, us, derived))
+    return out

@@ -1,0 +1,80 @@
+"""Kernel microbenchmarks: Pallas (interpret on CPU) vs jnp reference.
+
+On this container the Pallas kernels execute in interpret mode, so absolute
+times are NOT TPU times — the bench exists to (a) pin the op set per paper
+table, (b) compare the XLA reference path's scaling, and (c) give the
+roofline's per-op byte/flop counts a measured sanity anchor."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_call
+from repro.kernels import ops, ref
+
+
+def run(quick: bool = True):
+    rows = []
+    rng = np.random.default_rng(0)
+    v, e, d, nb, r = (512, 2048, 75, 2, 474) if quick else \
+        (4096, 16384, 75, 2, 474)
+    h = jnp.asarray(rng.normal(size=(v, d)), jnp.float32)
+    src = jnp.asarray(np.sort(rng.integers(0, v, e)), jnp.int32)
+    rel = jnp.asarray(rng.integers(0, r, e), jnp.int32)
+    dst = jnp.asarray(rng.integers(0, v, e), jnp.int32)
+    mask = jnp.ones(e, bool)
+    bases = jnp.asarray(rng.normal(size=(nb, d, d)) * 0.1, jnp.float32)
+    coeffs = jnp.asarray(rng.normal(size=(r, nb)), jnp.float32)
+
+    def k_msg():
+        ops.rgcn_message_basis(h, src, rel, dst, mask, bases,
+                               coeffs).block_until_ready()
+
+    def r_msg():
+        ref.rgcn_message_ref(h, src, rel, dst, mask, bases,
+                             coeffs).block_until_ready()
+
+    jr_msg = jax.jit(ref.rgcn_message_ref)
+
+    def rj_msg():
+        jr_msg(h, src, rel, dst, mask, bases, coeffs).block_until_ready()
+
+    t_pallas = time_call(k_msg)
+    t_ref = time_call(rj_msg)
+    flops = 2.0 * e * nb * d * d
+    rows.append({"name": "rgcn_message_pallas_interpret",
+                 "us_per_call": t_pallas * 1e6,
+                 "flops": int(flops), "V": v, "E": e})
+    rows.append({"name": "rgcn_message_xla_ref",
+                 "us_per_call": t_ref * 1e6,
+                 "gflops_per_s": round(flops / t_ref / 1e9, 2)})
+
+    b, c = (256, 4096) if quick else (1024, 16384)
+    hs = jnp.asarray(rng.normal(size=(b, d)), jnp.float32)
+    rl = jnp.asarray(rng.integers(0, r, b), jnp.int32)
+    table = jnp.asarray(rng.normal(size=(r, d)), jnp.float32)
+    cand = jnp.asarray(rng.normal(size=(c, d)), jnp.float32)
+
+    def k_score():
+        ops.distmult_rank_scores(hs, rl, table, cand).block_until_ready()
+
+    jr_score = jax.jit(lambda hs, diag, cand: ref.kge_score_ref(
+        hs, diag, cand))
+
+    def r_score():
+        jr_score(hs, table[rl], cand).block_until_ready()
+
+    t_p = time_call(k_score)
+    t_r = time_call(r_score)
+    bytes_moved = (b * d + c * d + b * c) * 4.0
+    rows.append({"name": "kge_score_pallas_interpret",
+                 "us_per_call": t_p * 1e6, "B": b, "C": c})
+    rows.append({"name": "kge_score_xla_ref",
+                 "us_per_call": t_r * 1e6,
+                 "gbytes_per_s": round(bytes_moved / t_r / 1e9, 2)})
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(emit(run(), "kernels")))

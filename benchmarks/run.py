@@ -1,0 +1,66 @@
+"""Benchmark harness entry point — one function per paper table/figure.
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--full] [--only t2,t3,...]
+
+Prints ``name,us_per_call,derived`` CSV rows (one per measured
+configuration).  ``--full`` uses larger synthetic datasets; the default
+quick mode finishes on a single CPU core in minutes.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks.common import emit
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    quick = not args.full
+
+    from benchmarks import comm_analysis, figs, kernels_bench, roofline, \
+        serve_bench
+    from benchmarks import t2_partition_stats, t3_accuracy_speedup
+    from benchmarks import t4_fixed_updates, t5_partition_strategies
+
+    suites = {
+        "t2": lambda: t2_partition_stats.run(quick),      # Table 2
+        "t3": lambda: t3_accuracy_speedup.run(quick),     # Table 3
+        "t4": lambda: t4_fixed_updates.run(quick),        # Table 4
+        "t5": lambda: t5_partition_strategies.run(quick),  # Table 5
+        "f2": lambda: figs.run_f2(quick),                 # Figure 2
+        "f6": lambda: figs.run_f6(quick),                 # Figure 6
+        "f7": lambda: figs.run_f7(quick),                 # Figure 7
+        "kernels": lambda: kernels_bench.run(quick),
+        "serve": lambda: serve_bench.run(quick),
+        "comm": lambda: comm_analysis.run(quick),
+        "roofline": lambda: roofline.run(quick),          # deliverable (g)
+    }
+    only = [s for s in args.only.split(",") if s]
+    print("name,us_per_call,derived")
+    failed = []
+    for name, fn in suites.items():
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        try:
+            rows = fn()
+            for line in emit(rows, name):
+                print(line, flush=True)
+            print(f"# {name} done in {time.time() - t0:.1f}s",
+                  file=sys.stderr)
+        except Exception:
+            failed.append(name)
+            print(f"# {name} FAILED:\n{traceback.format_exc()}",
+                  file=sys.stderr)
+    if failed:
+        sys.exit(f"benchmark suites failed: {failed}")
+
+
+if __name__ == "__main__":
+    main()

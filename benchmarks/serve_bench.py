@@ -1,0 +1,52 @@
+"""Serving benchmark: batched greedy-decode throughput of the ServeEngine
+(reduced configs, CPU numerics) across architecture families — the per-step
+cost structure (attention KV cache vs recurrent state vs MoE routing) is the
+point of comparison, not absolute tokens/s."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs import get_arch
+from repro.nn import init_params
+from repro.serving import Request, ServeEngine
+
+
+ARCHS = ["gemma-2b", "rwkv6-3b", "recurrentgemma-9b",
+         "deepseek-v2-lite-16b", "whisper-large-v3"]
+
+
+def run(quick: bool = True):
+    rows = []
+    new_tokens = 8 if quick else 32
+    for name in ARCHS:
+        cfg = get_arch(name).reduced()
+        params = init_params(jax.random.PRNGKey(0), cfg, dtype=jnp.float32)
+        engine = ServeEngine(cfg, params, slots=4, max_seq=64)
+        rng = np.random.default_rng(0)
+        reqs = [Request(i, rng.integers(1, cfg.vocab_size, 3)
+                        .astype(np.int32), max_new_tokens=new_tokens)
+                for i in range(4)]
+        engine.run([reqs[0]])         # compile warmup
+        reqs = [Request(10 + i, r.prompt, max_new_tokens=new_tokens)
+                for i, r in enumerate(reqs)]
+        t0 = time.perf_counter()
+        done = engine.run(reqs)
+        dt = time.perf_counter() - t0
+        total_tokens = sum(len(r.output) for r in done)
+        rows.append({
+            "name": name,
+            "us_per_call": dt / max(total_tokens, 1) * 1e6,
+            "tokens": total_tokens,
+            "tokens_per_s": round(total_tokens / dt, 1),
+            "family": cfg.arch_type,
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(emit(run(), "serve")))

@@ -1,0 +1,42 @@
+"""Table 2: partition statistics — core edges, total edges after 2-hop
+neighborhood expansion, replication factor — for P ∈ {2, 4, 8} on both
+dataset shapes."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, time_call
+from repro.core import expand_all, partition_graph, replication_factor
+from repro.data import synthetic_citation2, synthetic_fb15k
+
+
+def run(quick: bool = True):
+    rows = []
+    datasets = {
+        "fb15k237": synthetic_fb15k(scale=0.02 if quick else 0.1)["train"],
+        "citation2": synthetic_citation2(
+            scale=0.0005 if quick else 0.002)["train"],
+    }
+    for dname, kg in datasets.items():
+        kgi = kg.with_inverse_relations()
+        for p in (2, 4, 8):
+            t0 = __import__("time").perf_counter()
+            parts = partition_graph(kgi, p, "vertex_cut", seed=0)
+            exp = expand_all(kgi, parts, num_hops=2)
+            dt = __import__("time").perf_counter() - t0
+            core = np.array([e.num_core_edges for e in exp])
+            total = np.array([e.num_local_edges for e in exp])
+            rows.append({
+                "name": f"{dname}_p{p}",
+                "us_per_call": dt * 1e6,
+                "core_edges_mean": int(core.mean()),
+                "core_edges_std": int(core.std()),
+                "total_edges_mean": int(total.mean()),
+                "total_edges_std": int(total.std()),
+                "rf": round(replication_factor(kgi, parts), 2),
+            })
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(emit(run(), "t2")))

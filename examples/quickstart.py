@@ -1,0 +1,53 @@
+"""Quickstart: the paper's full pipeline in ~60 seconds on CPU.
+
+Partitions a synthetic FB15k-237-shaped knowledge graph with vertex-cut,
+expands partitions to self-sufficiency, trains a 2-layer RGCN + DistMult
+with constraint-based negative sampling on 4 (simulated) trainers with
+AllReduce-averaged gradients, and reports filtered MRR / Hits@k.
+
+Run: PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.data import synthetic_fb15k
+from repro.training import KGETrainer, TrainConfig
+
+
+def main() -> None:
+    splits = synthetic_fb15k(scale=0.02, seed=0)
+    kg = splits["train"]
+    print(f"KG: {kg.num_entities} entities, {kg.num_relations} relations, "
+          f"{kg.num_edges} train edges")
+
+    cfg = TrainConfig(
+        num_trainers=4,           # paper runs 1..8
+        strategy="vertex_cut",    # + neighborhood expansion (§3.2)
+        num_hops=2,               # == RGCN layers
+        hidden_dim=32,
+        num_negatives=1,          # constraint-based, partition-local
+        batch_size=None,          # full edge batch (paper's FB15k setting)
+        learning_rate=0.05,
+        epochs=15,
+    )
+    trainer = KGETrainer(splits, cfg)
+    print(f"partitioned into {cfg.num_trainers} self-sufficient partitions, "
+          f"replication factor {trainer.replication_factor:.2f}")
+
+    trainer.fit(log_fn=lambda r: print(
+        f"  epoch {r['epoch']:3d}  loss {r['loss']:.4f}  "
+        f"({r['t_epoch']:.2f}s)"))
+
+    metrics = trainer.evaluate("test")
+    print("\nfiltered test metrics (Eq. 5/6):")
+    for k, v in metrics.items():
+        print(f"  {k:14s} {v:.4f}")
+    assert metrics["test_mrr"] > 0.03, "training failed to learn"
+    print("\nOK — see examples/distributed_kg_train.py for the "
+          "mini-batch/ogbl-citation2 configuration.")
+
+
+if __name__ == "__main__":
+    main()

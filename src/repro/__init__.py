@@ -1,0 +1,6 @@
+"""repro: production-grade JAX reproduction of "Scaling Knowledge Graph
+Embedding Models" (Sheikh et al., 2022) — self-sufficient graph partitions,
+constraint-based negative sampling, edge mini-batch distributed training —
+plus the assigned 10-architecture transformer substrate sharing the same
+distributed runtime."""
+__version__ = "0.1.0"

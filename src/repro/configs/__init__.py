@@ -1,0 +1,57 @@
+"""Architecture registry: the 10 assigned archs (+ long-context variant) and
+the paper's own RGCN configurations.  ``--arch <id>`` resolves here."""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.nn.transformer import ArchConfig
+
+from repro.configs.glm4_9b import ARCH as GLM4_9B
+from repro.configs.qwen3_32b import ARCH as QWEN3_32B
+from repro.configs.qwen2_5_32b import ARCH as QWEN2_5_32B
+from repro.configs.gemma_2b import ARCH as GEMMA_2B, ARCH_LONG as GEMMA_2B_SW
+from repro.configs.whisper_large_v3 import ARCH as WHISPER_LARGE_V3
+from repro.configs.rwkv6_3b import ARCH as RWKV6_3B
+from repro.configs.recurrentgemma_9b import ARCH as RECURRENTGEMMA_9B
+from repro.configs.arctic_480b import ARCH as ARCTIC_480B
+from repro.configs.qwen2_vl_7b import ARCH as QWEN2_VL_7B
+from repro.configs.deepseek_v2_lite_16b import ARCH as DEEPSEEK_V2_LITE_16B
+
+ARCHS: Dict[str, ArchConfig] = {
+    a.name: a for a in [
+        GLM4_9B, QWEN3_32B, QWEN2_5_32B, GEMMA_2B, WHISPER_LARGE_V3,
+        RWKV6_3B, RECURRENTGEMMA_9B, ARCTIC_480B, QWEN2_VL_7B,
+        DEEPSEEK_V2_LITE_16B,
+    ]
+}
+ARCHS["gemma-2b-sw"] = GEMMA_2B_SW   # long-context sliding-window variant
+
+ASSIGNED = [
+    "glm4-9b", "qwen3-32b", "whisper-large-v3", "rwkv6-3b", "gemma-2b",
+    "recurrentgemma-9b", "arctic-480b", "qwen2-vl-7b", "qwen2.5-32b",
+    "deepseek-v2-lite-16b",
+]
+
+
+def get_arch(name: str) -> ArchConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+# The paper's own model configurations (RGCN link prediction, §4.4)
+from repro.training.trainer import TrainConfig
+
+RGCN_FB15K237 = TrainConfig(
+    num_trainers=8, strategy="vertex_cut", num_hops=2,
+    hidden_dim=75, num_bases=2, num_negatives=1,
+    batch_size=None,            # full edge batch (paper §4.4)
+    learning_rate=0.01, dropout=0.2, epochs=100,
+)
+
+RGCN_CITATION2 = TrainConfig(
+    num_trainers=8, strategy="vertex_cut", num_hops=2,
+    hidden_dim=32, num_bases=2, num_negatives=1,
+    batch_size=118_000,         # paper: ~118k edge mini-batch
+    learning_rate=0.01, dropout=0.2, epochs=100,
+)

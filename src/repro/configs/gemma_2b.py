@@ -1,0 +1,22 @@
+"""gemma-2b [dense] — GeGLU, head_dim=256, MQA (kv=1).  [arXiv:2403.08295]
+
+``sliding_window`` is OUR beyond-config long-context variant enabling the
+``long_500k`` decode shape (sub-quadratic window attention); the paper-exact
+gemma-2b is full attention — the dry-run lowers both (window=None for the
+standard shapes).
+"""
+from repro.nn.transformer import ArchConfig
+
+ARCH = ArchConfig(
+    name="gemma-2b", arch_type="dense",
+    num_layers=18, d_model=2048, num_heads=8, num_kv_heads=1,
+    head_dim=256, d_ff=16384, vocab_size=256000,
+    mlp_act="gelu_tanh", mlp_glu=True, rope_base=10000.0,
+    tie_embeddings=True,
+    citation="arXiv:2403.08295",
+)
+
+# long-context variant (long_500k decode): 4096-token sliding window
+import dataclasses
+ARCH_LONG = dataclasses.replace(ARCH, name="gemma-2b-sw",
+                                sliding_window=4096)

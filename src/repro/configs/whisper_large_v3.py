@@ -1,0 +1,18 @@
+"""whisper-large-v3 [audio enc-dec] — conv/mel frontend is a STUB; this is
+the 32L encoder + 32L decoder transformer backbone.  [arXiv:2212.04356]
+
+Backbone adaptation notes (DESIGN.md §4): Whisper uses learned absolute
+positions + LayerNorm; the backbone here follows the repo-wide pre-norm/RoPE
+conventions — the assigned dimensions (d=1280, 20 heads, d_ff=5120,
+vocab=51866) are exact.
+"""
+from repro.nn.transformer import ArchConfig
+
+ARCH = ArchConfig(
+    name="whisper-large-v3", arch_type="encdec",
+    num_layers=32, d_model=1280, num_heads=20, num_kv_heads=20,
+    d_ff=5120, vocab_size=51866,
+    encoder_layers=32, encoder_frames=1500,
+    mlp_act="gelu", mlp_glu=False, tie_embeddings=True,
+    citation="arXiv:2212.04356",
+)

@@ -1,0 +1,24 @@
+"""Paper core: self-sufficient partitions, constraint-based negative
+sampling, edge mini-batch training (Sheikh et al., 2022)."""
+from repro.core.graph import (
+    KnowledgeGraph, make_synthetic_kg, split_train_valid_test, triplet_set,
+)
+from repro.core.partition import (
+    EdgePartition, partition_graph, vertex_cut_partition, edge_cut_partition,
+    random_partition, replication_factor, load_balance, core_vertices,
+)
+from repro.core.expansion import (
+    SelfSufficientPartition, expand_partition, expand_all, pad_partitions,
+    PaddedPartitionBatch, verify_self_sufficiency,
+)
+from repro.core.negative import (
+    constraint_based_negatives, global_closed_world_negatives, mix_pos_neg,
+    corrupt_triplets,
+)
+from repro.core.minibatch import (
+    EdgeMiniBatch, BatchBudget, plan_budgets, build_comp_graph,
+    build_edge_minibatch, iterate_edge_minibatches, stack_minibatches,
+    sample_epoch_negatives,
+)
+
+__all__ = [n for n in dir() if not n.startswith("_")]

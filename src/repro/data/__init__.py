@@ -1,0 +1,8 @@
+"""Data pipeline: KG datasets (real-format loader + synthetic stand-ins) and
+LM token streams."""
+from repro.data.datasets import (
+    load_fb15k_format, synthetic_fb15k, synthetic_citation2,
+    load_or_synthesize, TokenStream,
+)
+__all__ = ["load_fb15k_format", "synthetic_fb15k", "synthetic_citation2",
+           "load_or_synthesize", "TokenStream"]

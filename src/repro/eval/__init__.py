@@ -1,0 +1,6 @@
+"""Link-prediction evaluation (filtered MRR / Hits@k)."""
+from repro.eval.ranking import (
+    build_filter_index, ranking_metrics, evaluate_both_directions,
+)
+__all__ = ["build_filter_index", "ranking_metrics",
+           "evaluate_both_directions"]

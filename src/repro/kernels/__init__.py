@@ -1,0 +1,18 @@
+"""Pallas TPU kernels for the paper's compute hot spots:
+
+* ``rgcn_message`` — fused basis-decomposed relational message passing
+  (gather → basis projection+mix → MXU one-hot segment sum).
+* ``kge_score`` — blocked DistMult candidate ranking for filtered MRR eval.
+* ``wkv_chunk`` — chunked RWKV-6 WKV with VMEM-resident recurrent state
+  (the §Perf-winning formulation, TPU-native).
+
+``ops`` holds the jit'd public wrappers; ``ref`` the pure-jnp oracles.
+On CPU the kernels run with ``interpret=True``; on TPU they compile.
+"""
+from repro.kernels import ops, ref
+from repro.kernels.ops import (
+    distmult_rank_scores, rgcn_message_basis, wkv_chunked_op,
+)
+
+__all__ = ["ops", "ref", "distmult_rank_scores", "rgcn_message_basis",
+           "wkv_chunked_op"]

@@ -1,0 +1,57 @@
+"""Pallas TPU kernel for blocked DistMult candidate ranking (DESIGN.md §6).
+
+Filtered MRR/Hits@k evaluation scores every test head against up to all N
+entity embeddings: ``scores[b, c] = sum_d h_s[b,d] * m_r[b,d] * cand[c,d]``.
+This is memory-bound in the candidate stream (arithmetic intensity ≈ d per
+candidate row read), so the kernel keeps the query tile ``q = h_s ∘ m_r``
+resident in VMEM and streams 128-row candidate tiles from HBM, fusing the
+diagonal-relation product and the filtered-setting additive mask into the
+matmul (XLA would write q and the unmasked score matrix to HBM between ops).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+Q_BLOCK = 128   # query rows per tile
+C_BLOCK = 128   # candidate rows per tile
+
+
+def _kge_score_kernel(h_s_ref, diag_ref, cand_ref, bias_ref, out_ref):
+    """out = (h_s ∘ diag) @ cand^T + bias for one (Q_blk, C_blk) tile."""
+    q = (h_s_ref[...] * diag_ref[...]).astype(jnp.float32)
+    scores = jax.lax.dot_general(
+        q, cand_ref[...].astype(jnp.float32),
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    out_ref[...] = (scores + bias_ref[...].astype(jnp.float32)).astype(
+        out_ref.dtype)
+
+
+def kge_score(
+    h_s: jax.Array,       # (B, d) head embeddings
+    rel_diag: jax.Array,  # (B, d) gathered DistMult diagonal per query
+    candidates: jax.Array,  # (C, d)
+    bias: jax.Array,      # (B, C) additive mask (0 or -inf for filtered)
+    *, interpret: bool | None = None,
+) -> jax.Array:
+    b, d = h_s.shape
+    c = candidates.shape[0]
+    assert b % Q_BLOCK == 0 and c % C_BLOCK == 0, "wrapper pads to blocks"
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    return pl.pallas_call(
+        _kge_score_kernel,
+        grid=(b // Q_BLOCK, c // C_BLOCK),
+        in_specs=[
+            pl.BlockSpec((Q_BLOCK, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((Q_BLOCK, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((C_BLOCK, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((Q_BLOCK, C_BLOCK), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((Q_BLOCK, C_BLOCK), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, c), jnp.float32),
+        interpret=interpret,
+    )(h_s, rel_diag, candidates, bias)

@@ -1,0 +1,172 @@
+"""Jit-ready wrappers around the Pallas kernels: padding to block multiples,
+gathers that stay in XLA, and de-padding of results.
+
+These are the entry points the model layer uses; on CPU they run the kernels
+in interpret mode, on TPU they compile.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.kge_score import C_BLOCK, Q_BLOCK, kge_score
+from repro.kernels.rgcn_message import (
+    EDGE_BLOCK, VERTEX_BLOCK, basis_message, segment_sum_onehot,
+)
+
+
+def _pad_to(x: jax.Array, n: int, axis: int = 0, fill=0) -> jax.Array:
+    cur = x.shape[axis]
+    if cur == n:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, n - cur)
+    return jnp.pad(x, pad, constant_values=fill)
+
+
+def _round_up(x: int, m: int) -> int:
+    return max(m, ((x + m - 1) // m) * m)
+
+
+@jax.custom_vjp
+def rgcn_message_basis(
+    h: jax.Array,          # (V, d_in) vertex states
+    src: jax.Array,        # (E,) heads (segment ids)
+    rel: jax.Array,        # (E,) relations
+    dst: jax.Array,        # (E,) tails (gather ids)
+    edge_mask: jax.Array,  # (E,) bool
+    bases: jax.Array,      # (B, d_in, d_out)
+    coeffs: jax.Array,     # (R, B)
+) -> jax.Array:
+    """Fused RGCN message layer: gather → basis message kernel →
+    one-hot segment-sum kernel → mean normalize.  Matches
+    ``ref.rgcn_message_ref`` / ``models.rgcn.message_passing_ref``.
+
+    Differentiable: forward runs the Pallas kernels; backward runs the VJP of
+    the mathematically identical reference formulation (the usual pairing —
+    the backward's gather/scatter pattern differs from the forward's and is
+    left to XLA until profiled as a bottleneck)."""
+    return _rgcn_message_basis_fwd_impl(
+        h, src, rel, dst, edge_mask, bases, coeffs)
+
+
+def _rgcn_message_basis_fwd_impl(
+    h, src, rel, dst, edge_mask, bases, coeffs,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    v, d_in = h.shape
+    e = src.shape[0]
+    d_out = bases.shape[-1]
+
+    e_pad = _round_up(e, EDGE_BLOCK)
+    v_pad = _round_up(v, VERTEX_BLOCK)
+
+    dst_p = _pad_to(dst.astype(jnp.int32), e_pad)
+    rel_p = _pad_to(rel.astype(jnp.int32), e_pad)
+    src_p = _pad_to(src.astype(jnp.int32), e_pad)
+    mask_p = _pad_to(edge_mask.astype(jnp.bool_), e_pad, fill=False)
+
+    h_t = h[dst_p]                     # (E_pad, d_in) XLA gather
+    coef = coeffs[rel_p]               # (E_pad, B)
+    msg = basis_message(h_t, coef, bases, mask_p, interpret=interpret)
+    agg, deg = segment_sum_onehot(
+        msg, src_p, mask_p, v_pad, interpret=interpret)
+    out = agg[:v] / jnp.maximum(deg[:v], 1.0)
+    return out.astype(h.dtype)
+
+
+def _rgcn_fwd(h, src, rel, dst, edge_mask, bases, coeffs):
+    out = _rgcn_message_basis_fwd_impl(
+        h, src, rel, dst, edge_mask, bases, coeffs)
+    return out, (h, src, rel, dst, edge_mask, bases, coeffs)
+
+
+def _rgcn_bwd(res, g):
+    from repro.kernels import ref
+    h, src, rel, dst, edge_mask, bases, coeffs = res
+    _, vjp = jax.vjp(
+        lambda h_, bases_, coeffs_: ref.rgcn_message_ref(
+            h_, src, rel, dst, edge_mask, bases_, coeffs_),
+        h, bases, coeffs)
+    dh, dbases, dcoeffs = vjp(g)
+    return dh, None, None, None, None, dbases, dcoeffs
+
+
+rgcn_message_basis.defvjp(_rgcn_fwd, _rgcn_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def distmult_rank_scores(
+    h_s: jax.Array,          # (B, d) head embeddings
+    rel: jax.Array,          # (B,) relation ids
+    rel_diag_table: jax.Array,  # (R, d)
+    candidates: jax.Array,   # (C, d)
+    filter_bias: Optional[jax.Array] = None,  # (B, C) 0 / -inf
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Blocked DistMult ranking: returns (B, C) float32 scores."""
+    b, d = h_s.shape
+    c = candidates.shape[0]
+    b_pad = _round_up(b, Q_BLOCK)
+    c_pad = _round_up(c, C_BLOCK)
+
+    h_p = _pad_to(h_s, b_pad)
+    diag = rel_diag_table[_pad_to(rel.astype(jnp.int32), b_pad)]
+    cand_p = _pad_to(candidates, c_pad)
+    if filter_bias is None:
+        bias = jnp.zeros((b_pad, c_pad), h_s.dtype)
+    else:
+        bias = _pad_to(_pad_to(filter_bias, b_pad, axis=0), c_pad, axis=1)
+    out = kge_score(h_p, diag, cand_p, bias, interpret=interpret)
+    return out[:b, :c]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
+def wkv_chunked_op(
+    r: jax.Array, k: jax.Array, v: jax.Array, log_decay: jax.Array,
+    u: jax.Array, chunk: int = 64,
+) -> jax.Array:
+    """Padded wrapper for the chunked-WKV Pallas kernel: (BH, S, hd) →
+    (BH, S, hd); pads BH to BH_BLOCK and S to the chunk size.
+    Differentiable: forward = Pallas kernel, backward = VJP of the
+    mathematically identical sequential reference (same pairing as
+    ``rgcn_message_basis``)."""
+    return _wkv_fwd_impl(r, k, v, log_decay, u, chunk)
+
+
+def _wkv_fwd_impl(r, k, v, log_decay, u, chunk,
+                  interpret: Optional[bool] = None) -> jax.Array:
+    from repro.kernels.wkv_chunk import BH_BLOCK, wkv_chunked
+    bh, s, hd = r.shape
+    bh_p = _round_up(bh, BH_BLOCK)
+    s_p = _round_up(s, chunk)
+
+    def pad(x, fill=0.0):
+        return _pad_to(_pad_to(x, bh_p, axis=0, fill=fill), s_p, axis=1,
+                       fill=fill)
+
+    out = wkv_chunked(
+        pad(r), pad(k), pad(v), pad(log_decay),
+        _pad_to(u, bh_p, axis=0), chunk=chunk, interpret=interpret)
+    return out[:bh, :s]
+
+
+def _wkv_fwd(r, k, v, log_decay, u, chunk):
+    # custom_vjp fwd receives args in primal order; nondiff args go FIRST
+    # only in the bwd rule
+    return (_wkv_fwd_impl(r, k, v, log_decay, u, chunk),
+            (r, k, v, log_decay, u))
+
+
+def _wkv_bwd(chunk, res, g):
+    from repro.kernels import ref
+    r, k, v, log_decay, u = res
+    _, vjp = jax.vjp(
+        lambda *a: ref.wkv_chunk_ref(*a), r, k, v, log_decay, u)
+    return vjp(g)
+
+
+wkv_chunked_op.defvjp(_wkv_fwd, _wkv_bwd)

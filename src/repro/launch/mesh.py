@@ -1,0 +1,46 @@
+"""Production mesh construction.
+
+Functions, not module-level constants, so importing never touches jax device
+state.  Single pod: 16×16 = 256 chips (``data`` × ``model``); multi-pod:
+2×16×16 = 512 chips with a leading ``pod`` axis (data-parallel across pods —
+the slowest links carry only gradient AllReduce, exactly the paper's
+cross-machine traffic profile).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    ndev = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) < ndev:
+        raise RuntimeError(
+            f"mesh {shape} needs {ndev} devices, have {len(devices)} — "
+            "the dry-run entry point must set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
+            "any jax import")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(AxisType.Auto,) * len(axes),
+        devices=devices[:ndev])
+
+
+def make_host_mesh(data: int = 1, model: int = 1) -> Mesh:
+    """Small mesh over whatever local devices exist (tests / examples)."""
+    devices = jax.devices()[: data * model]
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        axis_types=(AxisType.Auto, AxisType.Auto),
+        devices=devices)
+
+
+# TPU v5e hardware constants used by the roofline (EXPERIMENTS.md §Roofline)
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW = 50e9                   # bytes/s per link

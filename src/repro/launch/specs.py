@@ -1,0 +1,163 @@
+"""Abstract input specs for every (architecture × input shape) pair.
+
+Everything is ``jax.ShapeDtypeStruct`` — weak-type-correct, shardable, zero
+allocation.  Modality frontends are stubs by assignment: whisper gets frame
+embeddings (B, 1500, d); qwen2-vl gets patch embeddings (B, S, 1280) and
+3-D M-RoPE positions.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch
+from repro.nn.transformer import (
+    ArchConfig, init_decode_cache, init_params, stack_plan,
+)
+from repro.training.optimizer import adam
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str        # train | prefill | decode
+
+
+INPUT_SHAPES: Dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+# long_500k needs sub-quadratic attention: run for SSM / hybrid / the
+# sliding-window dense variant; skip pure full-attention archs (DESIGN.md §4)
+LONG_CONTEXT_OK = {"rwkv6-3b", "recurrentgemma-9b", "gemma-2b-sw"}
+
+
+def resolve_arch_for_shape(arch_name: str, shape_name: str
+                           ) -> Tuple[Optional[ArchConfig], str]:
+    """Returns (config-or-None, note).  gemma-2b substitutes its
+    sliding-window variant for long_500k."""
+    if shape_name == "long_500k":
+        if arch_name == "gemma-2b":
+            return get_arch("gemma-2b-sw"), \
+                "substituted sliding-window variant (sub-quadratic)"
+        if arch_name not in LONG_CONTEXT_OK:
+            return None, "skipped: full-attention arch at 500k decode"
+    return get_arch(arch_name), ""
+
+
+def abstract_params(cfg: ArchConfig, dtype=jnp.bfloat16) -> PyTree:
+    return jax.eval_shape(
+        lambda: init_params(jax.random.PRNGKey(0), cfg, dtype=dtype))
+
+
+def abstract_opt_state(params: PyTree, optimizer=None) -> PyTree:
+    opt = optimizer or adam(1e-4)
+    return jax.eval_shape(opt.init, params)
+
+
+def abstract_batch(cfg: ArchConfig, shape: InputShape) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    i32, bf16 = jnp.int32, jnp.bfloat16
+    sds = jax.ShapeDtypeStruct
+
+    if shape.mode in ("train", "prefill"):
+        batch: Dict[str, Any] = {"tokens": sds((b, s), i32)}
+        if shape.mode == "train":
+            batch["labels"] = sds((b, s), i32)
+        if cfg.arch_type == "vlm":
+            batch["vision_embeds"] = sds((b, s, cfg.vision_dim), bf16)
+            batch["positions"] = sds((b, s, 3), i32)
+        if cfg.arch_type == "encdec":
+            batch["audio_frames"] = sds(
+                (b, cfg.encoder_frames, cfg.d_model), bf16)
+        return batch
+
+    # decode: one token against a seq_len cache
+    batch = {"tokens": sds((b, 1), i32), "pos": sds((b,), i32)}
+    if cfg.m_rope:
+        batch["positions_3d"] = sds((b, 1, 3), i32)
+    return batch
+
+
+def abstract_cache(cfg: ArchConfig, shape: InputShape,
+                   dtype=jnp.bfloat16) -> PyTree:
+    return jax.eval_shape(
+        lambda: init_decode_cache(cfg, shape.global_batch, shape.seq_len,
+                                  dtype=dtype))
+
+
+# ---------------------------------------------------------------------- #
+# Analytic FLOPs for the roofline (MODEL_FLOPS)
+# ---------------------------------------------------------------------- #
+def _param_counts(cfg: ArchConfig) -> Tuple[float, float]:
+    """(total, active) parameter counts, from abstract shapes.  Active
+    discounts routed experts to their top_k/num_experts utilization and
+    excludes embeddings (standard 6ND convention)."""
+    import numpy as np
+    params = abstract_params(cfg)
+    total = active = 0.0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        names = [getattr(p, "key", getattr(p, "idx", "")) for p in path]
+        n = float(np.prod(leaf.shape))
+        total += n
+        if any(str(x) in ("embed", "lm_head") for x in names):
+            continue
+        if "moe" in [str(x) for x in names] and str(names[-1]) in (
+                "w_in", "w_gate", "w_out") and len(leaf.shape) >= 3:
+            n = n * (cfg.top_k / max(cfg.num_experts, 1))
+        active += n
+    return total, active
+
+
+def model_flops(cfg: ArchConfig, shape: InputShape) -> float:
+    """Analytic useful FLOPs per step: 6·N_active·tokens (train),
+    2·N_active·tokens (prefill), and for decode 2·N_active·B plus the
+    KV-cache attention term."""
+    total, active = _param_counts(cfg)
+    b, s = shape.global_batch, shape.seq_len
+    hd = cfg.resolved_head_dim
+    if shape.mode == "train":
+        flops = 6.0 * active * b * s
+        # quadratic attention term (scores+values), per layer with attention
+        attn_layers = _attention_layer_count(cfg)
+        flops += 6.0 * b * s * s * cfg.num_heads * hd * attn_layers * 0.5
+        return flops
+    if shape.mode == "prefill":
+        attn_layers = _attention_layer_count(cfg)
+        return (2.0 * active * b * s +
+                2.0 * b * s * s * cfg.num_heads * hd * attn_layers * 0.5)
+    # decode
+    attn_layers = _attention_layer_count(cfg)
+    window = cfg.sliding_window or s
+    kv_len = min(s, window)
+    return (2.0 * active * b +
+            4.0 * b * kv_len * cfg.num_heads * hd * attn_layers)
+
+
+def _attention_layer_count(cfg: ArchConfig) -> int:
+    n = 0
+    for kind, cnt, _ in stack_plan(cfg):
+        if kind == "pattern":
+            per = sum(1 for k in cfg.hybrid_pattern if k == "attn")
+            n += per * cnt
+        elif kind in ("dense", "moe", "dec", "enc"):
+            n += cnt
+    if cfg.arch_type == "encdec":
+        n += cfg.encoder_layers
+    return n
+
+
+def scan_trip_count(cfg: ArchConfig) -> int:
+    """Largest scanned-group length — the collective-bytes loop multiplier."""
+    return max((n for _, n, scanned in stack_plan(cfg) if scanned),
+               default=1)

@@ -1,0 +1,53 @@
+"""Step functions lowered by the dry-run and used by the drivers.
+
+``train_step``   — loss + grad + AllReduce (implicit in pjit) + Adam update.
+``prefill_step`` — full-sequence forward (inference prefill).
+``serve_step``   — ONE new token against a ``seq_len`` KV cache / recurrent
+state, greedy-sampled.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.transformer import (
+    ArchConfig, decode_step, loss_fn, prefill,
+)
+from repro.training.optimizer import Optimizer, apply_updates
+
+PyTree = Any
+
+
+def make_train_step(cfg: ArchConfig, optimizer: Optimizer) -> Callable:
+    def train_step(params, opt_state, batch
+                   ) -> Tuple[PyTree, PyTree, Dict[str, jax.Array]]:
+        (loss, aux), grads = jax.value_and_grad(
+            lambda p: loss_fn(p, cfg, batch), has_aux=True)(params)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        return params, opt_state, {"loss": loss, **aux}
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig) -> Callable:
+    def prefill_step(params, batch) -> jax.Array:
+        last_logits, _ = prefill(
+            params, cfg, batch["tokens"],
+            positions=batch.get("positions"),
+            vision_embeds=batch.get("vision_embeds"),
+            audio_frames=batch.get("audio_frames"))
+        return last_logits
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig) -> Callable:
+    def serve_step(params, cache, batch
+                   ) -> Tuple[jax.Array, PyTree]:
+        logits, cache = decode_step(
+            params, cfg, batch["tokens"], cache, batch["pos"],
+            positions_3d=batch.get("positions_3d"))
+        next_token = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_token, cache
+    return serve_step

@@ -1,0 +1,18 @@
+"""GNN-based KG embedding models (encoder-decoder, paper Fig. 1)."""
+from repro.models.rgcn import (
+    RGCNConfig, init_rgcn_params, rgcn_encode, rgcn_layer,
+    message_passing_ref, relation_matrices, count_params,
+)
+from repro.models.decoders import (
+    SCORERS, init_decoder_params, score_triplets, score_against_candidates,
+    bce_loss, distmult_score, transe_score, complex_score,
+)
+from repro.models.rgat import (
+    RGATConfig, init_rgat_params, rgat_encode, rgat_layer,
+)
+from repro.models.kge import (
+    KGEConfig, init_kge_params, minibatch_loss, fullgraph_loss,
+    encode_partition, vertex_input,
+)
+
+__all__ = [n for n in dir() if not n.startswith("_")]

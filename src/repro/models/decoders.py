@@ -1,0 +1,105 @@
+"""KG-embedding decoders (scoring functions) — paper §2.1 Eq. 4.
+
+The paper trains DistMult (``g(s,r,t) = h_s^T M_r h_t`` with diagonal M_r);
+TransE and ComplEx are included because the paper's approach is "agnostic to
+the used knowledge graph embedding model" (§6) and the related frameworks it
+compares against (DGL-KE, PBG) ship exactly these.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+
+def init_decoder_params(key: jax.Array, name: str, num_relations: int,
+                        dim: int) -> Dict[str, jax.Array]:
+    if name == "distmult":
+        return {"rel_diag": jax.random.normal(key, (num_relations, dim))
+                * (1.0 / jnp.sqrt(dim))}
+    if name == "transe":
+        return {"rel_vec": jax.random.normal(key, (num_relations, dim))
+                * (1.0 / jnp.sqrt(dim))}
+    if name == "complex":
+        if dim % 2:
+            raise ValueError("ComplEx needs even dim")
+        return {"rel_complex": jax.random.normal(key, (num_relations, dim))
+                * (1.0 / jnp.sqrt(dim))}
+    raise ValueError(f"unknown decoder {name!r}")
+
+
+def distmult_score(params, h_s: jax.Array, rel: jax.Array,
+                   h_t: jax.Array) -> jax.Array:
+    """(B,) scores: sum(h_s * m_r * h_t) — Eq. 4 with diagonal M_r."""
+    m = params["rel_diag"][rel]
+    return jnp.sum(h_s * m * h_t, axis=-1)
+
+
+def transe_score(params, h_s, rel, h_t) -> jax.Array:
+    """Negative L2 distance: -||h_s + r - h_t||."""
+    r = params["rel_vec"][rel]
+    return -jnp.linalg.norm(h_s + r - h_t + 1e-9, axis=-1)
+
+
+def complex_score(params, h_s, rel, h_t) -> jax.Array:
+    """Re(<h_s, r, conj(h_t)>) with interleaved re/im halves."""
+    d = h_s.shape[-1] // 2
+    sr, si = h_s[..., :d], h_s[..., d:]
+    tr, ti = h_t[..., :d], h_t[..., d:]
+    r = params["rel_complex"][rel]
+    rr, ri = r[..., :d], r[..., d:]
+    return jnp.sum(sr * rr * tr + si * rr * ti +
+                   sr * ri * ti - si * ri * tr, axis=-1)
+
+
+SCORERS: Dict[str, Callable] = {
+    "distmult": distmult_score,
+    "transe": transe_score,
+    "complex": complex_score,
+}
+
+
+def score_triplets(params, name: str, h: jax.Array,
+                   triplets: jax.Array) -> jax.Array:
+    """Score (T, 3) batch-local triplets against vertex states h (V, d)."""
+    h_s = h[triplets[:, 0]]
+    h_t = h[triplets[:, 2]]
+    return SCORERS[name](params, h_s, triplets[:, 1], h_t)
+
+
+def score_against_candidates(
+    params, name: str, h_s: jax.Array, rel: jax.Array,
+    candidates: jax.Array,
+) -> jax.Array:
+    """Rank-evaluation form: score (B, d) heads × (C, d) candidate tails →
+    (B, C).  For DistMult this is the memory-bound q @ C^T that
+    ``repro.kernels.kge_score`` tiles on TPU."""
+    if name == "distmult":
+        q = h_s * params["rel_diag"][rel]           # (B, d)
+        return q @ candidates.T
+    if name == "transe":
+        r = params["rel_vec"][rel]
+        diff = (h_s + r)[:, None, :] - candidates[None, :, :]
+        return -jnp.linalg.norm(diff + 1e-9, axis=-1)
+    if name == "complex":
+        d = h_s.shape[-1] // 2
+        r = params["rel_complex"][rel]
+        sr, si = h_s[..., :d], h_s[..., d:]
+        rr, ri = r[..., :d], r[..., d:]
+        # Re(<s, r, conj(t)>) = (sr·rr - si·ri)·tr + (sr·ri + si·rr)·ti
+        qr = sr * rr - si * ri
+        qi = sr * ri + si * rr
+        q = jnp.concatenate([qr, qi], axis=-1)      # (B, 2d)
+        return q @ candidates.T
+    raise ValueError(name)
+
+
+def bce_loss(scores: jax.Array, labels: jax.Array,
+             mask: jax.Array) -> jax.Array:
+    """Paper Eq. 3: mean binary cross-entropy over positives+negatives,
+    numerically stable logits form, padding masked out."""
+    per = jnp.maximum(scores, 0) - scores * labels + \
+        jnp.log1p(jnp.exp(-jnp.abs(scores)))
+    denom = jnp.maximum(mask.sum(), 1.0)
+    return jnp.sum(per * mask) / denom

@@ -1,0 +1,7 @@
+"""Transformer/SSM substrate for the assigned architectures."""
+from repro.nn.transformer import (
+    ArchConfig, init_params, forward, loss_fn, prefill, decode_step,
+    init_decode_cache, stack_plan, count_params,
+)
+__all__ = ["ArchConfig", "init_params", "forward", "loss_fn", "prefill",
+           "decode_step", "init_decode_cache", "stack_plan", "count_params"]

@@ -1,0 +1,379 @@
+"""Attention variants for the assigned architectures.
+
+One GQA implementation covers MQA (kv=1, gemma/recurrentgemma), GQA
+(glm4/qwen*), qk-norm (qwen3), QKV bias (qwen2.5/qwen2-vl), sliding windows
+(recurrentgemma local attention, gemma long-context variant), M-RoPE
+(qwen2-vl) and cross-attention (whisper).  DeepSeek's MLA (multi-head latent
+attention, compressed KV cache) is its own pair of functions.
+
+Shapes: activations (B, S, d); caches (B, S_max, H_kv, hd) — batch-major so
+the decode cache shards over (data=batch, model=sequence) per DESIGN.md §5.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.layers import (
+    apply_m_rope, apply_rope, dense_init, rmsnorm, rmsnorm_params, softcap,
+)
+
+
+# ====================================================================== #
+# GQA family
+# ====================================================================== #
+def attn_params(key: jax.Array, d: int, num_heads: int, num_kv_heads: int,
+                head_dim: int, *, qkv_bias: bool = False,
+                qk_norm: bool = False, dtype=jnp.float32) -> Dict:
+    ks = jax.random.split(key, 4)
+    p = {
+        "w_q": dense_init(ks[0], d, num_heads * head_dim, dtype),
+        "w_k": dense_init(ks[1], d, num_kv_heads * head_dim, dtype),
+        "w_v": dense_init(ks[2], d, num_kv_heads * head_dim, dtype),
+        "w_o": dense_init(ks[3], num_heads * head_dim, d, dtype),
+    }
+    if qkv_bias:
+        p["b_q"] = jnp.zeros((num_heads * head_dim,), dtype)
+        p["b_k"] = jnp.zeros((num_kv_heads * head_dim,), dtype)
+        p["b_v"] = jnp.zeros((num_kv_heads * head_dim,), dtype)
+    if qk_norm:
+        p["q_norm"] = rmsnorm_params(head_dim, dtype)
+        p["k_norm"] = rmsnorm_params(head_dim, dtype)
+    return p
+
+
+def _project_qkv(p: Dict, x: jax.Array, num_heads: int, num_kv_heads: int,
+                 head_dim: int) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    b, s, _ = x.shape
+    q = x @ p["w_q"]
+    k = x @ p["w_k"]
+    v = x @ p["w_v"]
+    if "b_q" in p:
+        q = q + p["b_q"]
+        k = k + p["b_k"]
+        v = v + p["b_v"]
+    q = q.reshape(b, s, num_heads, head_dim)
+    k = k.reshape(b, s, num_kv_heads, head_dim)
+    v = v.reshape(b, s, num_kv_heads, head_dim)
+    if "q_norm" in p:
+        q = rmsnorm(p["q_norm"], q)
+        k = rmsnorm(p["k_norm"], k)
+    return q, k, v
+
+
+def _sdpa(q: jax.Array, k: jax.Array, v: jax.Array,
+          mask: Optional[jax.Array], *, logit_cap: Optional[float] = None,
+          ) -> jax.Array:
+    """q (B,Sq,H,hd); k/v (B,Sk,Hkv,hd); GQA by head-group broadcast.
+    mask broadcastable to (B, H, Sq, Sk), True = attend."""
+    b, sq, h, hd = q.shape
+    hkv = k.shape[2]
+    group = h // hkv
+    qg = q.reshape(b, sq, hkv, group, hd)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / (hd ** 0.5)
+    scores = softcap(scores, logit_cap)
+    if mask is not None:
+        m = jnp.broadcast_to(mask, (b, h, sq, scores.shape[-1])) \
+            .reshape(b, hkv, group, sq, -1)
+        scores = jnp.where(m, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", w, v.astype(jnp.float32))
+    return out.reshape(b, sq, h * hd).astype(q.dtype)
+
+
+MEA_MIN_SEQ = 2048    # use chunked online-softmax attention at/above this
+MEA_Q_CHUNK = 1024
+MEA_K_CHUNK = 1024
+
+
+def _mea(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool,
+         window: Optional[int], logit_cap: Optional[float] = None,
+         q_chunk: int = MEA_Q_CHUNK, k_chunk: int = MEA_K_CHUNK
+         ) -> jax.Array:
+    """Memory-efficient attention: lax.scan over query blocks × key blocks
+    with online softmax (flash-attention scheduling in pure JAX).  Temp
+    memory is O(q_chunk · k_chunk) instead of O(S²) — this is what lets the
+    train_4k/prefill_32k dry-runs fit HBM (EXPERIMENTS.md §Perf notes the
+    XLA-materialized S² baseline it replaced)."""
+    b, sq, h, hd = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    vd = v.shape[-1]          # may differ from hd (MLA)
+    g = h // hkv
+    assert sq % q_chunk == 0 and sk % k_chunk == 0, (sq, sk)
+    nq, nk = sq // q_chunk, sk // k_chunk
+    scale = hd ** -0.5
+
+    qb = jnp.moveaxis(
+        q.reshape(b, nq, q_chunk, hkv, g, hd), 1, 0)     # (nq,b,qc,hkv,g,hd)
+    kb = jnp.moveaxis(k.reshape(b, nk, k_chunk, hkv, hd), 1, 0)
+    vb = jnp.moveaxis(v.reshape(b, nk, k_chunk, hkv, vd), 1, 0)
+
+    i_q = jnp.arange(q_chunk)
+    i_k = jnp.arange(k_chunk)
+
+    def q_body(_, xs):
+        qi, q_blk = xs
+        q32 = q_blk.astype(jnp.float32)
+
+        def k_body(carry, kxs):
+            m, l, acc = carry
+            ki, k_blk, v_blk = kxs
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", q32,
+                           k_blk.astype(jnp.float32)) * scale
+            s = softcap(s, logit_cap)
+            rows = qi * q_chunk + i_q                     # global q index
+            cols = ki * k_chunk + i_k
+            mask = jnp.ones((q_chunk, k_chunk), bool)
+            if causal:
+                mask &= cols[None, :] <= rows[:, None]
+            if window is not None:
+                mask &= cols[None, :] > rows[:, None] - window
+            s = jnp.where(mask[None, None, None], s, -1e30)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            p = jnp.where(mask[None, None, None], p, 0.0)
+            corr = jnp.exp(m - m_new)
+            l = l * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p, v_blk.astype(jnp.float32))
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((b, hkv, g, q_chunk), -1e30, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, q_chunk, vd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            k_body, (m0, l0, a0), (jnp.arange(nk), kb, vb))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]      # (b,hkv,g,qc,vd)
+        out = jnp.moveaxis(out, 3, 1).reshape(b, q_chunk, h * vd)
+        return None, out
+
+    _, outs = jax.lax.scan(q_body, None, (jnp.arange(nq), qb))
+    return jnp.moveaxis(outs, 0, 1).reshape(b, sq, h * vd).astype(q.dtype)
+
+
+def causal_mask(sq: int, sk: int, window: Optional[int] = None) -> jax.Array:
+    i = jnp.arange(sq)[:, None]
+    j = jnp.arange(sk)[None, :]
+    m = j <= i
+    if window is not None:
+        m = m & (j > i - window)
+    return m[None, None]   # (1, 1, Sq, Sk)
+
+
+def attention(
+    p: Dict, x: jax.Array, *,
+    num_heads: int, num_kv_heads: int, head_dim: int,
+    positions: jax.Array,                 # (B, S) or (B, S, 3) for m_rope
+    rope_base: float = 10000.0,
+    m_rope: bool = False,
+    causal: bool = True,
+    window: Optional[int] = None,
+    logit_cap: Optional[float] = None,
+) -> jax.Array:
+    """Full-sequence attention (training / prefill)."""
+    q, k, v = _project_qkv(p, x, num_heads, num_kv_heads, head_dim)
+    if m_rope:
+        q = apply_m_rope(q, positions, rope_base)
+        k = apply_m_rope(k, positions, rope_base)
+    else:
+        q = apply_rope(q, positions, rope_base)
+        k = apply_rope(k, positions, rope_base)
+    s = x.shape[1]
+    if s >= MEA_MIN_SEQ and s % MEA_Q_CHUNK == 0:
+        out = _mea(q, k, v, causal=causal, window=window,
+                   logit_cap=logit_cap)
+    else:
+        mask = causal_mask(s, s, window) if causal else None
+        out = _sdpa(q, k, v, mask, logit_cap=logit_cap)
+    return out @ p["w_o"]
+
+
+def attention_decode(
+    p: Dict, x: jax.Array, cache: Dict[str, jax.Array], pos: jax.Array, *,
+    num_heads: int, num_kv_heads: int, head_dim: int,
+    rope_base: float = 10000.0,
+    m_rope: bool = False,
+    positions_3d: Optional[jax.Array] = None,   # (B, 1, 3) for m_rope
+    window: Optional[jax.Array | int] = None,
+    logit_cap: Optional[float] = None,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One-token decode: write k/v at ``pos`` into the cache, attend over the
+    valid prefix.  x (B, 1, d); cache k/v (B, S_max, Hkv, hd); pos (B,)."""
+    b = x.shape[0]
+    q, k, v = _project_qkv(p, x, num_heads, num_kv_heads, head_dim)
+    if m_rope:
+        q = apply_m_rope(q, positions_3d, rope_base)
+        k = apply_m_rope(k, positions_3d, rope_base)
+    else:
+        q = apply_rope(q, pos[:, None], rope_base)
+        k = apply_rope(k, pos[:, None], rope_base)
+
+    def write(buf, val):
+        # per-batch dynamic row write at pos
+        return jax.vmap(
+            lambda bb, vv, pp: jax.lax.dynamic_update_slice_in_dim(
+                bb, vv, pp, axis=0))(buf, val, pos)
+
+    k_cache = write(cache["k"], k)
+    v_cache = write(cache["v"], v)
+    s_max = k_cache.shape[1]
+    j = jnp.arange(s_max)[None, :]                  # (1, S)
+    valid = j <= pos[:, None]
+    if window is not None:
+        valid = valid & (j > pos[:, None] - window)
+    mask = valid[:, None, None, :]                  # (B, 1, 1, S)
+    out = _sdpa(q, k_cache, v_cache, mask, logit_cap=logit_cap)
+    return out @ p["w_o"], {"k": k_cache, "v": v_cache}
+
+
+def cross_attention(
+    p: Dict, x: jax.Array, kv_source: jax.Array, *,
+    num_heads: int, num_kv_heads: int, head_dim: int,
+    cached_kv: Optional[Dict[str, jax.Array]] = None,
+) -> jax.Array:
+    """Whisper-style encoder-decoder cross attention (no positions on k/v —
+    whisper uses learned positions upstream; none needed here).
+
+    ``cached_kv`` (§Perf): decode recomputes K/V from the 1500-frame encoder
+    output on EVERY token step × every layer otherwise; the serving cache
+    precomputes them once per request (``cross_kv_cache``)."""
+    b, s, _ = x.shape
+    q = (x @ p["w_q"]).reshape(b, s, num_heads, head_dim)
+    if cached_kv is not None:
+        k, v = cached_kv["k"], cached_kv["v"]
+    else:
+        se = kv_source.shape[1]
+        k = (kv_source @ p["w_k"]).reshape(b, se, num_kv_heads, head_dim)
+        v = (kv_source @ p["w_v"]).reshape(b, se, num_kv_heads, head_dim)
+    out = _sdpa(q, k, v, None)
+    return out @ p["w_o"]
+
+
+def cross_kv_cache(p: Dict, kv_source: jax.Array, *, num_kv_heads: int,
+                   head_dim: int) -> Dict[str, jax.Array]:
+    """Precompute cross-attention K/V from encoder output (once/request)."""
+    b, se, _ = kv_source.shape
+    return {
+        "k": (kv_source @ p["w_k"]).reshape(b, se, num_kv_heads, head_dim),
+        "v": (kv_source @ p["w_v"]).reshape(b, se, num_kv_heads, head_dim),
+    }
+
+
+# ====================================================================== #
+# MLA — DeepSeek-V2 multi-head latent attention
+# ====================================================================== #
+def mla_params(key: jax.Array, d: int, num_heads: int, *,
+               kv_lora_rank: int, qk_nope_head_dim: int,
+               qk_rope_head_dim: int, v_head_dim: int,
+               dtype=jnp.float32) -> Dict:
+    ks = jax.random.split(key, 5)
+    qd = qk_nope_head_dim + qk_rope_head_dim
+    return {
+        "w_q": dense_init(ks[0], d, num_heads * qd, dtype),
+        "w_dkv": dense_init(ks[1], d, kv_lora_rank, dtype),
+        "w_krope": dense_init(ks[2], d, qk_rope_head_dim, dtype),
+        "kv_norm": rmsnorm_params(kv_lora_rank, dtype),
+        "w_ukv": dense_init(
+            ks[3], kv_lora_rank,
+            num_heads * (qk_nope_head_dim + v_head_dim), dtype),
+        "w_o": dense_init(ks[4], num_heads * v_head_dim, d, dtype),
+    }
+
+
+def _mla_expand(p: Dict, c_kv: jax.Array, num_heads: int,
+                qk_nope_head_dim: int, v_head_dim: int
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Expand compressed latent (B,S,rank) → k_nope/v (B,S,H,·)."""
+    b, s, _ = c_kv.shape
+    kv = (c_kv @ p["w_ukv"]).reshape(
+        b, s, num_heads, qk_nope_head_dim + v_head_dim)
+    return kv[..., :qk_nope_head_dim], kv[..., qk_nope_head_dim:]
+
+
+def mla_attention(
+    p: Dict, x: jax.Array, *, num_heads: int, kv_lora_rank: int,
+    qk_nope_head_dim: int, qk_rope_head_dim: int, v_head_dim: int,
+    positions: jax.Array, rope_base: float = 10000.0, causal: bool = True,
+) -> jax.Array:
+    """Full-sequence MLA (training / prefill)."""
+    b, s, _ = x.shape
+    qd = qk_nope_head_dim + qk_rope_head_dim
+    q = (x @ p["w_q"]).reshape(b, s, num_heads, qd)
+    q_nope, q_rope = q[..., :qk_nope_head_dim], q[..., qk_nope_head_dim:]
+    q_rope = apply_rope(q_rope, positions, rope_base)
+
+    c_kv = rmsnorm(p["kv_norm"], x @ p["w_dkv"])       # (B,S,rank)
+    k_rope = apply_rope(
+        (x @ p["w_krope"])[:, :, None, :], positions, rope_base)  # (B,S,1,r)
+    k_nope, v = _mla_expand(p, c_kv, num_heads, qk_nope_head_dim, v_head_dim)
+
+    if s >= MEA_MIN_SEQ and s % MEA_Q_CHUNK == 0:
+        # concat-form MLA → shared chunked online-softmax path (scale is
+        # qd^-0.5 in both formulations)
+        q_cat = jnp.concatenate([q_nope, q_rope], axis=-1)  # (B,S,H,qd)
+        k_cat = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(
+                k_rope, (b, s, num_heads, qk_rope_head_dim))], axis=-1)
+        out = _mea(q_cat, k_cat, v, causal=causal, window=None)
+        return out @ p["w_o"]
+
+    scale = 1.0 / (qd ** 0.5)
+    scores = (jnp.einsum("bqhd,bkhd->bhqk", q_nope.astype(jnp.float32),
+                         k_nope.astype(jnp.float32)) +
+              jnp.einsum("bqhd,bkxd->bhqk", q_rope.astype(jnp.float32),
+                         k_rope.astype(jnp.float32))) * scale
+    if causal:
+        mask = causal_mask(s, s)[0]                     # (1, Sq, Sk)
+        scores = jnp.where(mask, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", w, v.astype(jnp.float32))
+    out = out.reshape(b, s, num_heads * v_head_dim).astype(x.dtype)
+    return out @ p["w_o"]
+
+
+def mla_decode(
+    p: Dict, x: jax.Array, cache: Dict[str, jax.Array], pos: jax.Array, *,
+    num_heads: int, kv_lora_rank: int, qk_nope_head_dim: int,
+    qk_rope_head_dim: int, v_head_dim: int, rope_base: float = 10000.0,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One-token MLA decode.  The cache is COMPRESSED: c_kv (B,S,rank) +
+    k_rope (B,S,rope_dim) — MLA's entire point (paper-assigned arch note):
+    cache bytes/token = rank + rope_dim instead of 2·H·hd.
+
+    Baseline implementation re-expands the latent per step; the absorbed
+    (w_uk folded into q) variant is a §Perf candidate."""
+    b = x.shape[0]
+    qd = qk_nope_head_dim + qk_rope_head_dim
+    q = (x @ p["w_q"]).reshape(b, 1, num_heads, qd)
+    q_nope, q_rope = q[..., :qk_nope_head_dim], q[..., qk_nope_head_dim:]
+    q_rope = apply_rope(q_rope, pos[:, None], rope_base)
+
+    c_new = rmsnorm(p["kv_norm"], x @ p["w_dkv"])       # (B,1,rank)
+    kr_new = apply_rope((x @ p["w_krope"])[:, :, None, :],
+                        pos[:, None], rope_base)[:, :, 0, :]  # (B,1,r)
+
+    def write(buf, val):
+        return jax.vmap(
+            lambda bb, vv, pp: jax.lax.dynamic_update_slice_in_dim(
+                bb, vv, pp, axis=0))(buf, val, pos)
+
+    c_cache = write(cache["c_kv"], c_new)
+    kr_cache = write(cache["k_rope"], kr_new)
+
+    k_nope, v = _mla_expand(p, c_cache, num_heads, qk_nope_head_dim,
+                            v_head_dim)                  # (B,S,H,·)
+    s_max = c_cache.shape[1]
+    scale = 1.0 / (qd ** 0.5)
+    scores = (jnp.einsum("bqhd,bkhd->bhqk", q_nope.astype(jnp.float32),
+                         k_nope.astype(jnp.float32)) +
+              jnp.einsum("bqhr,bkr->bhqk", q_rope.astype(jnp.float32),
+                         kr_cache.astype(jnp.float32))) * scale
+    valid = (jnp.arange(s_max)[None, :] <= pos[:, None])[:, None, None, :]
+    scores = jnp.where(valid, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", w, v.astype(jnp.float32))
+    out = out.reshape(b, 1, num_heads * v_head_dim).astype(x.dtype)
+    return out @ p["w_o"], {"c_kv": c_cache, "k_rope": kr_cache}

@@ -1,0 +1,141 @@
+"""Shared NN building blocks for the assigned-architecture substrate.
+
+Functional style: parameters are plain nested dicts, apply functions are pure.
+Compute dtype follows the input; norm/softmax statistics accumulate in fp32.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------- #
+# Initializers
+# ---------------------------------------------------------------------- #
+def dense_init(key: jax.Array, d_in: int, d_out: int,
+               dtype=jnp.float32) -> jax.Array:
+    scale = (2.0 / (d_in + d_out)) ** 0.5
+    return (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)
+
+
+def embed_init(key: jax.Array, vocab: int, d: int,
+               dtype=jnp.float32) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d)) * d ** -0.5).astype(dtype)
+
+
+# ---------------------------------------------------------------------- #
+# Norms
+# ---------------------------------------------------------------------- #
+def rmsnorm_params(d: int, dtype=jnp.float32) -> Dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p: Dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_params(d: int, dtype=jnp.float32) -> Dict:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p: Dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x32 - mu), axis=-1, keepdims=True)
+    out = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (out * p["scale"].astype(jnp.float32)
+            + p["bias"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------- #
+# Rotary embeddings — standard RoPE and Qwen2-VL's M-RoPE
+# ---------------------------------------------------------------------- #
+def rope_frequencies(head_dim: int, base: float) -> jax.Array:
+    """(head_dim/2,) inverse frequencies."""
+    half = head_dim // 2
+    return 1.0 / (base ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array,
+               base: float = 10000.0) -> jax.Array:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S) int32.
+
+    Half-split convention (rotate_half), matching Llama/GLM/Qwen."""
+    hd = x.shape[-1]
+    inv = rope_frequencies(hd, base)                       # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * inv  # (..., S, hd/2)
+    angles = angles[..., None, :]                          # (..., S, 1, hd/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_m_rope(x: jax.Array, positions_3d: jax.Array,
+                 base: float = 10000.0,
+                 sections: Optional[Tuple[int, int, int]] = None
+                 ) -> jax.Array:
+    """Qwen2-VL multimodal RoPE: the rotary dim is split into
+    (temporal, height, width) sections, each rotated by its own position
+    stream.  x: (B, S, H, hd); positions_3d: (B, S, 3) int32.
+    ``sections`` are in HALF-dim units and must sum to hd/2; default is the
+    Qwen2-VL 1:1.5:1.5 split ((16, 24, 24) at hd=128)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    if sections is None:
+        t = half // 4
+        h_sec = (half - t) // 2
+        sections = (t, h_sec, half - t - h_sec)
+    assert sum(sections) == half, (sections, half)
+    inv = rope_frequencies(hd, base)                       # (half,)
+    sec_id = jnp.repeat(
+        jnp.arange(3), jnp.array(sections), total_repeat_length=half)
+    # pick, per frequency index, the position stream of its section
+    pos = jnp.take_along_axis(
+        positions_3d.astype(jnp.float32),
+        jnp.broadcast_to(sec_id[None, None, :],
+                         positions_3d.shape[:2] + (half,)).astype(jnp.int32),
+        axis=-1)                                           # (B, S, half)
+    angles = pos * inv                                     # (B, S, half)
+    angles = angles[..., None, :]                          # (B, S, 1, half)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------- #
+# MLPs
+# ---------------------------------------------------------------------- #
+def mlp_params(key: jax.Array, d: int, d_ff: int, glu: bool,
+               dtype=jnp.float32) -> Dict:
+    ks = jax.random.split(key, 3)
+    p = {"w_out": dense_init(ks[0], d_ff, d, dtype)}
+    p["w_in"] = dense_init(ks[1], d, d_ff, dtype)
+    if glu:
+        p["w_gate"] = dense_init(ks[2], d, d_ff, dtype)
+    return p
+
+
+def mlp_apply(p: Dict, x: jax.Array, act: str = "silu") -> jax.Array:
+    a = {"silu": jax.nn.silu, "gelu": jax.nn.gelu,
+         "gelu_tanh": lambda v: jax.nn.gelu(v, approximate=True)}[act]
+    h = x @ p["w_in"]
+    if "w_gate" in p:
+        h = a(x @ p["w_gate"]) * h          # GeGLU / SwiGLU
+    else:
+        h = a(h)
+    return h @ p["w_out"]
+
+
+def softcap(x: jax.Array, cap: Optional[float]) -> jax.Array:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)

@@ -1,0 +1,188 @@
+"""Mixture-of-Experts layer (arctic-480b, deepseek-v2-lite).
+
+TPU-native dense dispatch (DESIGN.md §5): tokens are routed with a top-k
+softmax router and dispatched via one-hot combine einsums rather than a
+dynamic all-to-all — shapes stay static, the expert dimension shards over the
+``model`` mesh axis, and XLA lowers the dispatch/combine contractions to
+all-gather/reduce-scatter on that axis.  This is the one layer where the
+paper's "no cross-partition traffic" invariant cannot hold (experts live on
+other chips); EXPERIMENTS.md quantifies the resulting collective bytes.
+
+Supports: routed experts (top_k), optional shared experts (deepseek), an
+optional parallel dense-FFN residual branch (arctic), and the standard
+load-balance auxiliary loss.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.layers import dense_init, mlp_apply, mlp_params
+from repro.sharding.context import _STATE as _MESH_STATE, _constraint
+
+
+def moe_params(key: jax.Array, d: int, *, num_experts: int,
+               d_ff_expert: int, num_shared: int = 0,
+               dense_residual_ff: int = 0, glu: bool = True,
+               dtype=jnp.float32) -> Dict:
+    ks = jax.random.split(key, 6)
+    p: Dict = {
+        "router": dense_init(ks[0], d, num_experts, dtype=jnp.float32),
+        # experts as stacked tensors (E, d, ff) / (E, ff, d): expert axis
+        # shards over `model`
+        "w_in": _expert_init(ks[1], num_experts, d, d_ff_expert, dtype),
+        "w_out": _expert_init(ks[2], num_experts, d_ff_expert, d, dtype),
+    }
+    if glu:
+        p["w_gate"] = _expert_init(ks[3], num_experts, d, d_ff_expert, dtype)
+    if num_shared:
+        p["shared"] = mlp_params(ks[4], d, d_ff_expert * num_shared, glu,
+                                 dtype)
+    if dense_residual_ff:
+        p["dense"] = mlp_params(ks[5], d, dense_residual_ff, glu, dtype)
+    return p
+
+
+def _expert_init(key, e, d_in, d_out, dtype):
+    scale = (2.0 / (d_in + d_out)) ** 0.5
+    return (jax.random.normal(key, (e, d_in, d_out)) * scale).astype(dtype)
+
+
+def moe_apply(p: Dict, x: jax.Array, *, top_k: int, act: str = "silu",
+              router_noise_key=None) -> Tuple[jax.Array, jax.Array]:
+    """x (B, S, d) → (out (B, S, d), aux_loss scalar).
+
+    Dense dispatch: combine weights (B,S,E) are zero outside the top-k, so
+    the einsum over E computes only-selected experts' results mathematically;
+    XLA shards the E axis so each chip computes its local experts for ALL
+    tokens — compute is O(E_local·tokens) dense, the standard TPU trade
+    (static shapes, MXU-friendly) against ragged dispatch.
+    """
+    b, s, d = x.shape
+    e = p["router"].shape[1]
+    logits = (x.astype(jnp.float32) @ p["router"])          # (B,S,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_vals, top_idx = jax.lax.top_k(probs, top_k)         # (B,S,k)
+    # renormalize selected weights (deepseek/arctic convention)
+    top_vals = top_vals / jnp.sum(top_vals, -1, keepdims=True)
+    combine = jnp.sum(
+        jax.nn.one_hot(top_idx, e, dtype=probs.dtype)
+        * top_vals[..., None], axis=-2)                     # (B,S,E)
+
+    # expert compute on all tokens, combine-weighted
+    h_in = jnp.einsum("bsd,edf->bsef", x, p["w_in"])
+    if "w_gate" in p:
+        a = {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[act]
+        h = a(jnp.einsum("bsd,edf->bsef", x, p["w_gate"])) * h_in
+    else:
+        h = jax.nn.silu(h_in)
+    y = jnp.einsum("bsef,efd->bsed", h, p["w_out"])
+    out = jnp.einsum("bsed,bse->bsd", y,
+                     combine.astype(y.dtype))
+
+    if "shared" in p:
+        out = out + mlp_apply(p["shared"], x, act)
+    if "dense" in p:
+        out = out + mlp_apply(p["dense"], x, act)
+
+    # load-balance aux (Switch-style): E * sum_e f_e * P_e
+    me = jnp.mean(probs, axis=(0, 1))                       # (E,)
+    ce = jnp.mean((combine > 0).astype(jnp.float32), axis=(0, 1))
+    aux = e * jnp.sum(me * ce)
+    return out.astype(x.dtype), aux
+
+
+def moe_apply_capacity(p: Dict, x: jax.Array, *, top_k: int,
+                       act: str = "silu", capacity_factor: float = 1.25
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """Capacity-bounded sparse dispatch (§Perf hillclimb vs dense dispatch).
+
+    Dense dispatch computes ALL experts for ALL tokens — compute waste
+    factor E/top_k (64× for arctic's 128e top-2).  Here tokens are sorted by
+    assigned expert and each expert processes at most
+    ``C = ceil(T·top_k/E · capacity_factor)`` tokens (overflow dropped, the
+    standard GShard/Switch trade).  Expert FLOPs drop by
+    ``E/(top_k·capacity_factor)`` (≈51× for arctic).  Gather/scatter is
+    sort-based — static shapes, TPU-friendly; the expert dim still shards
+    over ``model``.
+    """
+    b, s, d = x.shape
+    t = b * s
+    e = p["router"].shape[1]
+    xf = x.reshape(t, d)
+    logits = xf.astype(jnp.float32) @ p["router"]           # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_vals, top_idx = jax.lax.top_k(probs, top_k)         # (T, k)
+    top_vals = top_vals / jnp.sum(top_vals, -1, keepdims=True)
+
+    flat_expert = top_idx.reshape(-1)                       # (T·k,)
+    flat_token = jnp.arange(t * top_k, dtype=jnp.int32) // top_k
+    flat_gate = top_vals.reshape(-1)
+
+    cap = int(-(-t * top_k * capacity_factor // e))         # ceil
+    cap = max(8, ((cap + 7) // 8) * 8)                      # align
+
+    order = jnp.argsort(flat_expert)                        # group by expert
+    sorted_expert = flat_expert[order]
+    sorted_token = flat_token[order]
+    sorted_gate = flat_gate[order]
+    counts = jnp.sum(jax.nn.one_hot(flat_expert, e, dtype=jnp.int32),
+                     axis=0)                                # (E,)
+    offsets = jnp.cumsum(counts) - counts                   # exclusive
+    slot = offsets[:, None] + jnp.arange(cap)[None, :]      # (E, C)
+    valid = (jnp.arange(cap)[None, :] < counts[:, None])
+    slot = jnp.clip(slot, 0, t * top_k - 1)
+    tok = sorted_token[slot]                                # (E, C)
+    gate = jnp.where(valid, sorted_gate[slot], 0.0)         # (E, C)
+    # guard: slots past an expert's count may alias other experts' tokens;
+    # gate==0 there so they contribute nothing, but compute still touches
+    # them — that is the capacity contract.
+    xe = xf[tok]                                            # (E, C, d)
+    # §Perf: pin the dispatched buffer to expert-parallel layout so the
+    # token movement lowers as a dispatch (all-to-all-like) instead of a
+    # full activation all-gather on the expert axis
+    xe = _shard_expert_buffer(xe)
+
+    h_in = jnp.einsum("ecd,edf->ecf", xe, p["w_in"])
+    if "w_gate" in p:
+        a = {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[act]
+        h = a(jnp.einsum("ecd,edf->ecf", xe, p["w_gate"])) * h_in
+    else:
+        h = jax.nn.silu(h_in)
+    y = jnp.einsum("ecf,efd->ecd", h, p["w_out"])
+    y = y * gate[..., None].astype(y.dtype)
+
+    out = jax.ops.segment_sum(
+        y.reshape(-1, d), tok.reshape(-1), num_segments=t)  # combine
+    out = out.reshape(b, s, d)
+
+    if "shared" in p:
+        out = out + mlp_apply(p["shared"], x, act)
+    if "dense" in p:
+        out = out + mlp_apply(p["dense"], x, act)
+
+    me = jnp.mean(probs, axis=(0,))
+    combine_mask = jnp.sum(jax.nn.one_hot(top_idx, e), axis=1)  # (T, E)
+    ce = jnp.mean(combine_mask, axis=0)
+    aux = e * jnp.sum(me * ce) / max(top_k, 1)
+    return out.astype(x.dtype), aux
+
+
+def _shard_expert_buffer(xe: jax.Array) -> jax.Array:
+    """(E, C, d) dispatched tokens: expert dim over ``model`` when a mesh is
+    installed and E divides it (no-op otherwise)."""
+    from jax.sharding import PartitionSpec as P
+    mesh = _MESH_STATE.get("mesh")
+    if mesh is None or "model" not in mesh.axis_names:
+        return xe
+    if xe.shape[0] % mesh.shape["model"]:
+        return xe
+    return _constraint(xe, P("model", None, None))
+
+
+def moe_apply_decode(p: Dict, x: jax.Array, *, top_k: int,
+                     act: str = "silu") -> jax.Array:
+    out, _ = moe_apply(p, x, top_k=top_k, act=act)
+    return out

@@ -1,0 +1,316 @@
+"""Recurrent sequence-mixing layers: RWKV-6 "Finch" and RG-LRU
+(RecurrentGemma / Griffin).
+
+Both keep ALL recurrent state shard-local (batch-sharded) — the paper's
+self-sufficiency invariant carries over: no cross-shard traffic during the
+scan, only gradient AllReduce (DESIGN.md §4).
+
+Three RWKV training forms with one semantics (tested equal):
+``rwkv_apply`` — the faithful per-token ``lax.scan`` (paper-baseline);
+``rwkv_apply_chunked`` — block-parallel WKV (§Perf winner, 330× memory-term
+reduction at train_4k); ``rwkv_apply_kernel`` — the Pallas TPU kernel of the
+chunked form (VMEM-resident state).  Decoding is the single-step recurrence
+with explicit state.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.layers import dense_init, rmsnorm, rmsnorm_params
+
+
+# ====================================================================== #
+# RWKV-6 (Finch): token-shift + data-dependent decay WKV
+# ====================================================================== #
+def rwkv_params(key: jax.Array, d: int, head_dim: int, *,
+                lora_rank: int = 64, dtype=jnp.float32) -> Dict:
+    h = d // head_dim
+    ks = jax.random.split(key, 10)
+    return {
+        # token-shift mixing coefficients (v6 ddlerp, lite: static mu +
+        # data-dependent lora term)
+        "mu_r": jnp.full((d,), 0.5, dtype),
+        "mu_k": jnp.full((d,), 0.5, dtype),
+        "mu_v": jnp.full((d,), 0.5, dtype),
+        "mu_w": jnp.full((d,), 0.5, dtype),
+        "mu_g": jnp.full((d,), 0.5, dtype),
+        "w_r": dense_init(ks[0], d, d, dtype),
+        "w_k": dense_init(ks[1], d, d, dtype),
+        "w_v": dense_init(ks[2], d, d, dtype),
+        "w_g": dense_init(ks[3], d, d, dtype),
+        # data-dependent decay: w_t = exp(-exp(w0 + tanh(x A) B))
+        "decay_w0": jnp.full((d,), -6.0, dtype),
+        "decay_A": dense_init(ks[4], d, lora_rank, dtype),
+        "decay_B": dense_init(ks[5], lora_rank, d, dtype),
+        "bonus_u": (jax.random.normal(ks[6], (h, head_dim)) * 0.1
+                    ).astype(dtype),
+        "w_o": dense_init(ks[7], d, d, dtype),
+        "ln_x": rmsnorm_params(d, dtype),
+    }
+
+
+def _rwkv_mix(p: Dict, x: jax.Array, x_prev: jax.Array
+              ) -> Tuple[jax.Array, ...]:
+    """Token shift: lerp(x, x_prev, mu) per projection stream.
+    Returns (r, k, v, g, decay) with ``decay = exp(log_decay)``;
+    ``_rwkv_mix_logw`` exposes log_decay directly for the chunked path."""
+    r, k, v, g, logw = _rwkv_mix_logw(p, x, x_prev)
+    return r, k, v, g, jnp.exp(logw)
+
+
+def _rwkv_mix_logw(p: Dict, x: jax.Array, x_prev: jax.Array
+                   ) -> Tuple[jax.Array, ...]:
+    def mix(mu):
+        return x + (x_prev - x) * mu
+    r = mix(p["mu_r"]) @ p["w_r"]
+    k = mix(p["mu_k"]) @ p["w_k"]
+    v = mix(p["mu_v"]) @ p["w_v"]
+    g = mix(p["mu_g"]) @ p["w_g"]
+    wx = mix(p["mu_w"])
+    log_decay = -jnp.exp(
+        p["decay_w0"].astype(jnp.float32) +
+        jnp.tanh(wx.astype(jnp.float32) @ p["decay_A"].astype(jnp.float32))
+        @ p["decay_B"].astype(jnp.float32))
+    return r, k, v, g, log_decay
+
+
+def rwkv_apply(p: Dict, x: jax.Array, head_dim: int) -> jax.Array:
+    """Training-mode RWKV-6 time mix: x (B, S, d) → (B, S, d).
+
+    WKV recurrence per head (state S: (hd_k, hd_v))::
+
+        out_t = r_t · (S_{t-1} + diag(u) k_t^T v_t)
+        S_t   = diag(w_t) S_{t-1} + k_t^T v_t
+    """
+    b, s, d = x.shape
+    h = d // head_dim
+    x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    r, k, v, g, decay = _rwkv_mix(p, x, x_prev)
+
+    def heads(t):
+        return t.reshape(b, s, h, head_dim).astype(jnp.float32)
+    r_, k_, v_, w_ = heads(r), heads(k), heads(v), heads(decay)
+    u = p["bonus_u"].astype(jnp.float32)
+
+    def step(state, inp):
+        r_t, k_t, v_t, w_t = inp           # (B, H, hd)
+        kv = k_t[..., :, None] * v_t[..., None, :]        # (B,H,hd,hd)
+        out = jnp.einsum("bhk,bhkv->bhv", r_t,
+                         state + u[None, :, :, None] * kv)
+        state = w_t[..., :, None] * state + kv
+        return state, out
+
+    init = jnp.zeros((b, h, head_dim, head_dim), jnp.float32)
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (r_, k_, v_, w_))
+    _, outs = jax.lax.scan(step, init, xs)
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, s, d)       # (B,S,d)
+    out = rmsnorm(p["ln_x"], out.astype(x.dtype))
+    out = out * jax.nn.silu(g)
+    return out @ p["w_o"]
+
+
+def rwkv_apply_chunked(p: Dict, x: jax.Array, head_dim: int,
+                       chunk: int = 64) -> jax.Array:
+    """Chunked (block-parallel) WKV — the §Perf optimized form.
+
+    The sequential scan reads/writes the (B, H, hd, hd) state EVERY token:
+    at train_4k that is ~8,400 s of HBM traffic per step (see EXPERIMENTS.md
+    §Perf).  Standard linear-attention chunking [used by all production RWKV
+    kernels] turns the recurrence into per-chunk matmuls:
+
+        within chunk (L = exclusive-cumsum of log decay):
+          out = tril_strict( (r·e^{L}) (k·e^{-L-logw})^T ) v
+                + diag(Σ r·u·k) v  +  (r·e^{L}) S_in
+          S_out = e^{L_total} ⊙ S_in + (k·e^{L_total - L - logw})^T v
+
+    State now moves once per CHUNK (64× less traffic) and everything is an
+    MXU matmul.  Numerics: the e^{±L} factorization is exact in fp32 for the
+    near-1 decays RWKV parameterizes (|L_total| ≲ chunk·|log w|); production
+    kernels renormalize per chunk for extreme decays.
+    Matches ``rwkv_apply`` (tested to 1e-3)."""
+    b, s, d = x.shape
+    h = d // head_dim
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    r, k, v, g, logw = _rwkv_mix_logw(p, x, x_prev)
+
+    def heads(t):
+        return jnp.moveaxis(
+            t.reshape(b, nc, chunk, h, head_dim).astype(jnp.float32),
+            1, 0)                                   # (nc, b, K, h, hd)
+    r_, k_, v_, w_ = heads(r), heads(k), heads(v), heads(logw)
+    u = p["bonus_u"].astype(jnp.float32)            # (h, hd)
+
+    def chunk_step(state, inp):
+        rc, kc, vc, lw = inp                        # (b, K, h, hd)
+        l_exc = jnp.cumsum(lw, axis=1) - lw         # L_tau (exclusive)
+        l_inc = l_exc + lw                          # L_{tau+1}
+        l_tot = l_inc[:, -1:]                       # (b, 1, h, hd)
+        r_t = rc * jnp.exp(l_exc)
+        k_t = kc * jnp.exp(-l_inc)
+        scores = jnp.einsum("bihd,bjhd->bhij", r_t, k_t)
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+        scores = jnp.where(mask[None, None], scores, 0.0)
+        intra = jnp.einsum("bhij,bjhd->bihd", scores, vc)
+        bonus = jnp.sum(rc * u[None, None] * kc, axis=-1)   # (b, K, h)
+        diag = bonus[..., None] * vc
+        cross = jnp.einsum("bihk,bhkv->bihv", r_t, state)
+        out = intra + diag + cross                  # (b, K, h, hd_v)
+        k_out = kc * jnp.exp(l_tot - l_inc)
+        state = jnp.exp(l_tot[:, 0])[..., None] * state + \
+            jnp.einsum("bihk,bihv->bhkv", k_out, vc)
+        return state, out
+
+    init = jnp.zeros((b, h, head_dim, head_dim), jnp.float32)
+    _, outs = jax.lax.scan(chunk_step, init, (r_, k_, v_, w_))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, s, d)     # (b, S, d)
+    out = rmsnorm(p["ln_x"], out.astype(x.dtype))
+    out = out * jax.nn.silu(g)
+    return out @ p["w_o"]
+
+
+def rwkv_apply_kernel(p: Dict, x: jax.Array, head_dim: int,
+                      chunk: int = 64) -> jax.Array:
+    """Chunked WKV through the Pallas kernel (``kernels.wkv_chunk``) — the
+    TPU deployment path of ``rwkv_apply_chunked`` (same math; on CPU the
+    kernel runs in interpret mode, so CPU training prefers the jnp chunked
+    form)."""
+    from repro.kernels.ops import wkv_chunked_op
+    b, s, d = x.shape
+    h = d // head_dim
+    x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    r, k, v, g, logw = _rwkv_mix_logw(p, x, x_prev)
+
+    def flat(t):
+        # (B, S, d) -> (B·H, S, hd)
+        return jnp.moveaxis(t.reshape(b, s, h, head_dim), 2, 1) \
+            .reshape(b * h, s, head_dim).astype(jnp.float32)
+
+    u = jnp.broadcast_to(p["bonus_u"].astype(jnp.float32)[None],
+                         (b, h, head_dim)).reshape(b * h, head_dim)
+    out = wkv_chunked_op(flat(r), flat(k), flat(v), flat(logw), u, chunk)
+    out = jnp.moveaxis(out.reshape(b, h, s, head_dim), 1, 2) \
+        .reshape(b, s, d)
+    out = rmsnorm(p["ln_x"], out.astype(x.dtype))
+    out = out * jax.nn.silu(g)
+    return out @ p["w_o"]
+
+
+def rwkv_decode(p: Dict, x: jax.Array, state: Dict[str, jax.Array],
+                head_dim: int) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Single-token RWKV step.  state = {"wkv": (B,H,hd,hd),
+    "x_prev": (B,d)}; x (B, 1, d)."""
+    b, _, d = x.shape
+    h = d // head_dim
+    x_t = x[:, 0]
+    r, k, v, g, decay = _rwkv_mix(p, x_t, state["x_prev"])
+
+    def heads(t):
+        return t.reshape(b, h, head_dim).astype(jnp.float32)
+    r_, k_, v_, w_ = heads(r), heads(k), heads(v), heads(decay)
+    u = p["bonus_u"].astype(jnp.float32)
+    kv = k_[..., :, None] * v_[..., None, :]
+    out = jnp.einsum("bhk,bhkv->bhv",
+                     r_, state["wkv"] + u[None, :, :, None] * kv)
+    new_wkv = w_[..., :, None] * state["wkv"] + kv
+    out = out.reshape(b, d).astype(x.dtype)
+    out = rmsnorm(p["ln_x"], out)
+    out = out * jax.nn.silu(g)
+    return (out @ p["w_o"])[:, None, :], \
+        {"wkv": new_wkv, "x_prev": x_t}
+
+
+def rwkv_init_state(b: int, d: int, head_dim: int,
+                    dtype=jnp.float32) -> Dict[str, jax.Array]:
+    h = d // head_dim
+    return {"wkv": jnp.zeros((b, h, head_dim, head_dim), jnp.float32),
+            "x_prev": jnp.zeros((b, d), dtype)}
+
+
+# ====================================================================== #
+# RG-LRU (RecurrentGemma / Griffin)
+# ====================================================================== #
+def rglru_params(key: jax.Array, d: int, lru_width: int, *,
+                 conv_width: int = 4, dtype=jnp.float32) -> Dict:
+    ks = jax.random.split(key, 6)
+    w = lru_width
+    return {
+        "w_x": dense_init(ks[0], d, w, dtype),     # input branch
+        "w_y": dense_init(ks[1], d, w, dtype),     # gate branch (GeGLU-ish)
+        "conv_w": (jax.random.normal(ks[2], (conv_width, w)) * 0.1
+                   ).astype(dtype),
+        # recurrence gates
+        "w_input_gate": dense_init(ks[3], w, w, dtype),
+        "w_rec_gate": dense_init(ks[4], w, w, dtype),
+        # Λ parameter: a = exp(-c·softplus(Λ)·sigmoid(rec_gate))
+        "log_lambda": jnp.linspace(0.5, 4.0, w).astype(dtype),
+        "w_o": dense_init(ks[5], w, d, dtype),
+    }
+
+
+_RG_C = 8.0
+
+
+def _rglru_gates(p: Dict, xw: jax.Array):
+    """Per-step gate computation: xw (..., w)."""
+    i_gate = jax.nn.sigmoid(xw.astype(jnp.float32)
+                            @ p["w_input_gate"].astype(jnp.float32))
+    r_gate = jax.nn.sigmoid(xw.astype(jnp.float32)
+                            @ p["w_rec_gate"].astype(jnp.float32))
+    log_a = -_RG_C * jax.nn.softplus(
+        p["log_lambda"].astype(jnp.float32)) * r_gate
+    a = jnp.exp(log_a)
+    # sqrt(1 - a^2) normalizer, computed stably from log a
+    norm = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2 * log_a), 1e-12))
+    return a, norm * i_gate
+
+
+def rglru_apply(p: Dict, x: jax.Array) -> jax.Array:
+    """Training-mode recurrent block: x (B, S, d) → (B, S, d).
+    conv1d (causal, width 4) → gated LRU scan → GeGLU-style merge."""
+    b, s, d = x.shape
+    xw = x @ p["w_x"]                                     # (B,S,w)
+    gate = jax.nn.gelu(x @ p["w_y"])
+    # causal depthwise conv
+    cw = p["conv_w"].shape[0]
+    pad = jnp.pad(xw, ((0, 0), (cw - 1, 0), (0, 0)))
+    conv = sum(pad[:, i:i + s] * p["conv_w"][i] for i in range(cw))
+    a, scale = _rglru_gates(p, conv)                      # (B,S,w) each
+    v = scale * conv.astype(jnp.float32)
+
+    def step(h, inp):
+        a_t, v_t = inp
+        h = a_t * h + v_t
+        return h, h
+
+    init = jnp.zeros((b, xw.shape[-1]), jnp.float32)
+    _, hs = jax.lax.scan(step, init,
+                         (jnp.moveaxis(a, 1, 0), jnp.moveaxis(v, 1, 0)))
+    h = jnp.moveaxis(hs, 0, 1).astype(x.dtype)            # (B,S,w)
+    return (h * gate) @ p["w_o"]
+
+
+def rglru_decode(p: Dict, x: jax.Array, state: Dict[str, jax.Array]
+                 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Single-step RG-LRU.  state = {"h": (B,w), "conv": (B,cw-1,w)}."""
+    b, _, d = x.shape
+    x_t = x[:, 0]
+    xw = x_t @ p["w_x"]                                   # (B,w)
+    gate = jax.nn.gelu(x_t @ p["w_y"])
+    cw = p["conv_w"].shape[0]
+    hist = jnp.concatenate([state["conv"], xw[:, None, :]], axis=1)
+    conv = jnp.einsum("bcw,cw->bw", hist, p["conv_w"])
+    a, scale = _rglru_gates(p, conv)
+    h = a * state["h"] + scale * conv.astype(jnp.float32)
+    out = (h.astype(x.dtype) * gate) @ p["w_o"]
+    return out[:, None, :], {"h": h, "conv": hist[:, 1:]}
+
+
+def rglru_init_state(b: int, lru_width: int, conv_width: int = 4,
+                     dtype=jnp.float32) -> Dict[str, jax.Array]:
+    return {"h": jnp.zeros((b, lru_width), jnp.float32),
+            "conv": jnp.zeros((b, conv_width - 1, lru_width), dtype)}

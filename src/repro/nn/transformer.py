@@ -1,0 +1,660 @@
+"""Composable model definition covering the 10 assigned architectures.
+
+One ``ArchConfig`` describes any of: dense decoder LMs (glm4, qwen3, qwen2.5,
+gemma), MoE LMs (arctic, deepseek-v2 w/ MLA), attention-free RWKV-6, the
+RG-LRU+local-attention hybrid (recurrentgemma), the Whisper encoder-decoder
+backbone, and the Qwen2-VL VLM backbone (M-RoPE + projected patch
+embeddings).
+
+Layer stacks are ``lax.scan``-ed over stacked parameters (fast compile on
+64-layer configs, remat-friendly); heterogeneous stacks scan over their
+repeating pattern group.  Three entry points per architecture:
+
+* ``loss_fn``      — next-token cross-entropy training step body
+* ``prefill``      — full-sequence forward that also writes the decode cache
+* ``decode_step``  — one token against a ``seq_len`` cache/state
+
+Modality frontends are STUBS by assignment: whisper consumes precomputed
+frame embeddings, qwen2-vl consumes precomputed patch embeddings
+(``input_specs`` in repro.launch provides them).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import attention as attn
+from repro.nn import moe as moe_lib
+from repro.nn import recurrent as rec
+from repro.nn.layers import (
+    dense_init, embed_init, mlp_apply, mlp_params, rmsnorm, rmsnorm_params,
+)
+from repro.sharding.context import shard_activation, shard_logits
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    arch_type: str            # dense | moe | rwkv | hybrid | encdec | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None
+    # attention knobs
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    rope_base: float = 10000.0
+    m_rope: bool = False
+    sliding_window: Optional[int] = None     # set => sub-quadratic attention
+    # mlp
+    mlp_act: str = "silu"
+    mlp_glu: bool = True
+    # moe
+    num_experts: int = 0
+    top_k: int = 0
+    num_shared_experts: int = 0
+    d_ff_expert: Optional[int] = None
+    moe_dense_residual: bool = False         # arctic parallel dense branch
+    first_k_dense: int = 0                   # deepseek: first layer(s) dense
+    router_aux_coef: float = 0.01
+    moe_dispatch: str = "dense"              # "dense" | "capacity" (§Perf)
+    moe_capacity_factor: float = 1.25
+    # MLA (deepseek)
+    use_mla: bool = False
+    kv_lora_rank: int = 512
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+    # rwkv / hybrid
+    rwkv_head_dim: int = 64
+    rwkv_mode: str = "sequential"            # "sequential" | "chunked" §Perf
+    rwkv_chunk: int = 64
+    hybrid_pattern: Tuple[str, ...] = ()     # e.g. ("rec","rec","attn")
+    lru_width: Optional[int] = None
+    conv1d_width: int = 4
+    local_window: int = 2048                 # hybrid local-attn window
+    # encoder-decoder (whisper)
+    encoder_layers: int = 0
+    encoder_frames: int = 1500
+    cache_cross_kv: bool = False   # §Perf: precompute decode cross-K/V
+    # vlm
+    vision_dim: int = 0
+    # misc
+    act_seq_shard: bool = False   # §Perf: shard (B,S,d) seq dim over model
+    remat_policy: str = "nothing"  # "nothing" | "dots" (§Perf)
+    tie_embeddings: bool = True
+    norm_eps: float = 1e-6
+    remat: bool = True
+    citation: str = ""
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    def reduced(self) -> "ArchConfig":
+        """Smoke-test variant: 2 layers, d_model ≤ 512, ≤ 4 experts — same
+        family, CPU-runnable."""
+        d = min(self.d_model, 256)
+        heads = min(self.num_heads, 4)
+        kv = max(1, min(self.num_kv_heads, heads))
+        hd = 64 if self.head_dim else d // heads
+        n_exp = min(self.num_experts, 4) if self.num_experts else 0
+        pattern = self.hybrid_pattern
+        return dataclasses.replace(
+            self,
+            name=self.name + "-smoke",
+            num_layers=len(pattern) if pattern else 2,
+            d_model=d, num_heads=heads, num_kv_heads=kv,
+            head_dim=hd if self.head_dim else None,
+            d_ff=min(self.d_ff, 512),
+            d_ff_expert=(min(self.d_ff_expert, 128)
+                         if self.d_ff_expert else None),
+            vocab_size=min(self.vocab_size, 512),
+            num_experts=n_exp,
+            top_k=min(self.top_k, max(1, n_exp)) if n_exp else 0,
+            num_shared_experts=min(self.num_shared_experts, 1),
+            kv_lora_rank=min(self.kv_lora_rank, 64),
+            qk_nope_head_dim=min(self.qk_nope_head_dim, 32),
+            qk_rope_head_dim=min(self.qk_rope_head_dim, 16),
+            v_head_dim=min(self.v_head_dim, 32),
+            lru_width=min(self.lru_width, d) if self.lru_width else None,
+            encoder_layers=min(self.encoder_layers, 2),
+            encoder_frames=min(self.encoder_frames, 32),
+            vision_dim=min(self.vision_dim, 64) if self.vision_dim else 0,
+            first_k_dense=min(self.first_k_dense, 1),
+            sliding_window=(min(self.sliding_window, 64)
+                            if self.sliding_window else None),
+            local_window=min(self.local_window, 32),
+            remat=False,
+        )
+
+
+# ====================================================================== #
+# Block parameter init
+# ====================================================================== #
+def _block_params(key: jax.Array, cfg: ArchConfig, kind: str,
+                  dtype) -> Dict:
+    """kind: dense | moe | rec | attn (hybrid member) | enc | dec."""
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    p: Dict = {"norm1": rmsnorm_params(d, dtype),
+               "norm2": rmsnorm_params(d, dtype)}
+    hd = cfg.resolved_head_dim
+
+    if kind in ("dense", "moe", "enc", "dec", "attn"):
+        if cfg.use_mla:
+            p["attn"] = attn.mla_params(
+                ks[0], d, cfg.num_heads, kv_lora_rank=cfg.kv_lora_rank,
+                qk_nope_head_dim=cfg.qk_nope_head_dim,
+                qk_rope_head_dim=cfg.qk_rope_head_dim,
+                v_head_dim=cfg.v_head_dim, dtype=dtype)
+        else:
+            p["attn"] = attn.attn_params(
+                ks[0], d, cfg.num_heads, cfg.num_kv_heads, hd,
+                qkv_bias=cfg.qkv_bias, qk_norm=cfg.qk_norm, dtype=dtype)
+    if kind == "dec":
+        p["cross_attn"] = attn.attn_params(
+            ks[3], d, cfg.num_heads, cfg.num_heads, hd, dtype=dtype)
+        p["norm_cross"] = rmsnorm_params(d, dtype)
+    if kind == "rec":
+        if cfg.arch_type == "rwkv":
+            p["rec"] = rec.rwkv_params(ks[0], d, cfg.rwkv_head_dim,
+                                       dtype=dtype)
+        else:
+            p["rec"] = rec.rglru_params(
+                ks[0], d, cfg.lru_width or d,
+                conv_width=cfg.conv1d_width, dtype=dtype)
+
+    if kind == "moe":
+        p["moe"] = moe_lib.moe_params(
+            ks[1], d, num_experts=cfg.num_experts,
+            d_ff_expert=cfg.d_ff_expert or cfg.d_ff,
+            num_shared=cfg.num_shared_experts,
+            dense_residual_ff=cfg.d_ff if cfg.moe_dense_residual else 0,
+            glu=cfg.mlp_glu, dtype=dtype)
+    elif cfg.arch_type == "rwkv" and kind == "rec":
+        # RWKV channel mix (token-shifted squared-relu FFN)
+        p["cmix"] = {
+            "mu_k": jnp.full((d,), 0.5, dtype),
+            "mu_r": jnp.full((d,), 0.5, dtype),
+            "w_k": dense_init(ks[1], d, cfg.d_ff, dtype),
+            "w_v": dense_init(ks[2], cfg.d_ff, d, dtype),
+            "w_r": dense_init(ks[3], d, d, dtype),
+        }
+    else:
+        p["mlp"] = mlp_params(ks[1], d, cfg.d_ff, cfg.mlp_glu, dtype)
+    return p
+
+
+# ====================================================================== #
+# Block apply — full sequence
+# ====================================================================== #
+def _attn_full(p, cfg: ArchConfig, h, positions, *, causal=True,
+               window=None, encoder_out=None, kind="dense"):
+    if cfg.use_mla:
+        return attn.mla_attention(
+            p["attn"], h, num_heads=cfg.num_heads,
+            kv_lora_rank=cfg.kv_lora_rank,
+            qk_nope_head_dim=cfg.qk_nope_head_dim,
+            qk_rope_head_dim=cfg.qk_rope_head_dim,
+            v_head_dim=cfg.v_head_dim, positions=positions,
+            rope_base=cfg.rope_base, causal=causal)
+    return attn.attention(
+        p["attn"], h, num_heads=cfg.num_heads,
+        num_kv_heads=cfg.num_kv_heads, head_dim=cfg.resolved_head_dim,
+        positions=positions, rope_base=cfg.rope_base,
+        m_rope=cfg.m_rope, causal=causal, window=window)
+
+
+def _channel_full(p, cfg: ArchConfig, h):
+    """MLP or MoE second half; returns (out, aux)."""
+    if "moe" in p:
+        if cfg.moe_dispatch == "capacity":
+            return moe_lib.moe_apply_capacity(
+                p["moe"], h, top_k=cfg.top_k, act=cfg.mlp_act,
+                capacity_factor=cfg.moe_capacity_factor)
+        return moe_lib.moe_apply(p["moe"], h, top_k=cfg.top_k,
+                                 act=cfg.mlp_act)
+    if "cmix" in p:
+        c = p["cmix"]
+        h_prev = jnp.pad(h, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+        k = (h + (h_prev - h) * c["mu_k"]) @ c["w_k"]
+        r = jax.nn.sigmoid((h + (h_prev - h) * c["mu_r"]) @ c["w_r"])
+        return r * (jnp.square(jax.nn.relu(k)) @ c["w_v"]), 0.0
+    return mlp_apply(p["mlp"], h, cfg.mlp_act), 0.0
+
+
+def block_apply(p: Dict, cfg: ArchConfig, h: jax.Array, positions, *,
+                kind: str, encoder_out=None) -> Tuple[jax.Array, jax.Array]:
+    """Pre-norm residual block.  Returns (h, moe_aux)."""
+    if kind == "rec":
+        if cfg.arch_type == "rwkv":
+            xin = rmsnorm(p["norm1"], h)
+            if cfg.rwkv_mode == "chunked" and \
+                    xin.shape[1] % cfg.rwkv_chunk == 0:
+                mix = rec.rwkv_apply_chunked(p["rec"], xin,
+                                             cfg.rwkv_head_dim,
+                                             chunk=cfg.rwkv_chunk)
+            elif cfg.rwkv_mode == "chunked_kernel":
+                mix = rec.rwkv_apply_kernel(p["rec"], xin,
+                                            cfg.rwkv_head_dim,
+                                            chunk=cfg.rwkv_chunk)
+            else:
+                mix = rec.rwkv_apply(p["rec"], xin, cfg.rwkv_head_dim)
+        else:
+            mix = rec.rglru_apply(p["rec"], rmsnorm(p["norm1"], h))
+    else:
+        window = None
+        causal = kind != "enc"
+        if kind == "attn":                     # hybrid local attention
+            window = cfg.local_window
+        elif cfg.sliding_window is not None:
+            window = cfg.sliding_window
+        mix = _attn_full(p, cfg, rmsnorm(p["norm1"], h), positions,
+                         causal=causal, window=window)
+    h = h + mix
+    if kind == "dec":
+        h = h + attn.cross_attention(
+            p["cross_attn"], rmsnorm(p["norm_cross"], h), encoder_out,
+            num_heads=cfg.num_heads, num_kv_heads=cfg.num_heads,
+            head_dim=cfg.resolved_head_dim)
+    out, aux = _channel_full(p, cfg, rmsnorm(p["norm2"], h))
+    return h + out, aux
+
+
+# ====================================================================== #
+# Block apply — single-token decode
+# ====================================================================== #
+def block_decode(p: Dict, cfg: ArchConfig, h: jax.Array, cache: Dict,
+                 pos: jax.Array, *, kind: str, encoder_out=None,
+                 positions_3d=None) -> Tuple[jax.Array, Dict]:
+    new_cache = {}
+    x = rmsnorm(p["norm1"], h)
+    if kind == "rec":
+        if cfg.arch_type == "rwkv":
+            mix, new_cache["rec"] = rec.rwkv_decode(
+                p["rec"], x, cache["rec"], cfg.rwkv_head_dim)
+        else:
+            mix, new_cache["rec"] = rec.rglru_decode(
+                p["rec"], x, cache["rec"])
+    elif cfg.use_mla:
+        mix, new_cache["attn"] = attn.mla_decode(
+            p["attn"], x, cache["attn"], pos, num_heads=cfg.num_heads,
+            kv_lora_rank=cfg.kv_lora_rank,
+            qk_nope_head_dim=cfg.qk_nope_head_dim,
+            qk_rope_head_dim=cfg.qk_rope_head_dim,
+            v_head_dim=cfg.v_head_dim, rope_base=cfg.rope_base)
+    else:
+        window = cfg.local_window if kind == "attn" else cfg.sliding_window
+        mix, new_cache["attn"] = attn.attention_decode(
+            p["attn"], x, cache["attn"], pos, num_heads=cfg.num_heads,
+            num_kv_heads=cfg.num_kv_heads, head_dim=cfg.resolved_head_dim,
+            rope_base=cfg.rope_base, m_rope=cfg.m_rope,
+            positions_3d=positions_3d, window=window)
+    h = h + mix
+    if kind == "dec":
+        h = h + attn.cross_attention(
+            p["cross_attn"], rmsnorm(p["norm_cross"], h), encoder_out,
+            num_heads=cfg.num_heads, num_kv_heads=cfg.num_heads,
+            head_dim=cfg.resolved_head_dim,
+            cached_kv=cache.get("cross_kv"))
+        if "cross_kv" in cache:
+            new_cache["cross_kv"] = cache["cross_kv"]
+
+    x2 = rmsnorm(p["norm2"], h)
+    if "cmix" in p:
+        c = p["cmix"]
+        x_prev = cache["cmix_x_prev"]
+        x2_t = x2[:, 0]
+        k = (x2_t + (x_prev - x2_t) * c["mu_k"]) @ c["w_k"]
+        r = jax.nn.sigmoid((x2_t + (x_prev - x2_t) * c["mu_r"]) @ c["w_r"])
+        out = (r * (jnp.square(jax.nn.relu(k)) @ c["w_v"]))[:, None]
+        new_cache["cmix_x_prev"] = x2_t
+    elif "moe" in p:
+        if cfg.moe_dispatch == "capacity":
+            out, _ = moe_lib.moe_apply_capacity(
+                p["moe"], x2, top_k=cfg.top_k, act=cfg.mlp_act,
+                capacity_factor=cfg.moe_capacity_factor)
+        else:
+            out = moe_lib.moe_apply_decode(p["moe"], x2, top_k=cfg.top_k,
+                                           act=cfg.mlp_act)
+    else:
+        out = mlp_apply(p["mlp"], x2, cfg.mlp_act)
+    return h + out, new_cache
+
+
+def _block_cache(cfg: ArchConfig, kind: str, batch: int, seq_len: int,
+                 dtype) -> Dict:
+    """Empty decode cache for one block."""
+    hd = cfg.resolved_head_dim
+    d = cfg.d_model
+    c: Dict = {}
+    if kind == "dec" and cfg.cache_cross_kv:
+        c["cross_kv"] = {
+            "k": jnp.zeros((batch, cfg.encoder_frames, cfg.num_heads, hd),
+                           dtype),
+            "v": jnp.zeros((batch, cfg.encoder_frames, cfg.num_heads, hd),
+                           dtype),
+        }
+    if kind == "rec":
+        if cfg.arch_type == "rwkv":
+            c["rec"] = rec.rwkv_init_state(batch, d, cfg.rwkv_head_dim,
+                                           dtype)
+            c["cmix_x_prev"] = jnp.zeros((batch, d), dtype)
+        else:
+            c["rec"] = rec.rglru_init_state(batch, cfg.lru_width or d,
+                                            cfg.conv1d_width, dtype)
+    elif cfg.use_mla:
+        c["attn"] = {
+            "c_kv": jnp.zeros((batch, seq_len, cfg.kv_lora_rank), dtype),
+            "k_rope": jnp.zeros((batch, seq_len, cfg.qk_rope_head_dim),
+                                dtype),
+        }
+    else:
+        s = seq_len
+        if kind == "attn":                 # hybrid local attn: window cache
+            s = min(seq_len, cfg.local_window)
+        elif cfg.sliding_window is not None:
+            s = min(seq_len, cfg.sliding_window)
+        c["attn"] = {
+            "k": jnp.zeros((batch, s, cfg.num_kv_heads, hd), dtype),
+            "v": jnp.zeros((batch, s, cfg.num_kv_heads, hd), dtype),
+        }
+    return c
+
+
+# ====================================================================== #
+# Layer-stack plan: (kind, count, scanned) groups
+# ====================================================================== #
+def stack_plan(cfg: ArchConfig):
+    """Returns a list of (kind, n_layers, scan: bool) groups covering the
+    decoder stack in order."""
+    L = cfg.num_layers
+    if cfg.arch_type in ("dense", "vlm"):
+        return [("dense", L, True)]
+    if cfg.arch_type == "moe":
+        plan = []
+        if cfg.first_k_dense:
+            plan.append(("dense", cfg.first_k_dense, False))
+        plan.append(("moe", L - cfg.first_k_dense, True))
+        return plan
+    if cfg.arch_type == "rwkv":
+        return [("rec", L, True)]
+    if cfg.arch_type == "hybrid":
+        pattern = cfg.hybrid_pattern or ("rec", "rec", "attn")
+        reps, rem = divmod(L, len(pattern))
+        plan = [("pattern", reps, True)] if reps else []
+        for k in pattern[:rem]:
+            plan.append((k, 1, False))
+        return plan
+    if cfg.arch_type == "encdec":
+        return [("dec", L, True)]
+    raise ValueError(cfg.arch_type)
+
+
+# ====================================================================== #
+# Full-model init
+# ====================================================================== #
+def init_params(key: jax.Array, cfg: ArchConfig,
+                dtype=jnp.bfloat16) -> PyTree:
+    keys = jax.random.split(key, 16)
+    params: Dict = {
+        "embed": embed_init(keys[0], cfg.vocab_size, cfg.d_model, dtype),
+        "final_norm": rmsnorm_params(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(keys[1], cfg.d_model,
+                                       cfg.vocab_size, dtype)
+    if cfg.vision_dim:
+        params["vision_proj"] = dense_init(keys[2], cfg.vision_dim,
+                                           cfg.d_model, dtype)
+
+    def stacked(key, n, kinds):
+        """init n copies of a (multi-kind pattern) block, stacked."""
+        def one(k):
+            if len(kinds) == 1:
+                return _block_params(k, cfg, kinds[0], dtype)
+            sub = jax.random.split(k, len(kinds))
+            return {f"sub{i}": _block_params(sub[i], cfg, kd, dtype)
+                    for i, kd in enumerate(kinds)}
+        return jax.vmap(one)(jax.random.split(key, n))
+
+    groups = []
+    for gi, (kind, n, scan) in enumerate(stack_plan(cfg)):
+        k = keys[4 + (gi % 10)]
+        if kind == "pattern":
+            groups.append(stacked(k, n, list(cfg.hybrid_pattern)))
+        elif scan:
+            groups.append(stacked(k, n, [kind]))
+        else:
+            sub = jax.random.split(k, n)
+            groups.append([_block_params(sk, cfg, kind, dtype)
+                           for sk in sub])
+    params["groups"] = groups
+
+    if cfg.arch_type == "encdec":
+        params["encoder"] = {
+            "groups": [jax.vmap(
+                lambda k: _block_params(k, cfg, "enc", dtype))(
+                jax.random.split(keys[3], cfg.encoder_layers))],
+            "final_norm": rmsnorm_params(cfg.d_model, dtype),
+        }
+    return params
+
+
+# ====================================================================== #
+# Forward (training / prefill path)
+# ====================================================================== #
+def _run_group(gparams, cfg: ArchConfig, h, positions, kind, scanned, *,
+               encoder_out=None, remat=False):
+    """Run one stack group; returns (h, aux_sum)."""
+    if not scanned:   # python list of per-layer params
+        aux = 0.0
+        for lp in gparams:
+            h, a = block_apply(lp, cfg, h, positions, kind=kind,
+                               encoder_out=encoder_out)
+            aux = aux + a
+        return h, aux
+
+    if kind == "pattern":
+        kinds = list(cfg.hybrid_pattern)
+
+        def body(carry, lp):
+            hh = carry
+            aux = 0.0
+            for i, kd in enumerate(kinds):
+                hh, a = block_apply(lp[f"sub{i}"], cfg, hh, positions,
+                                    kind=kd, encoder_out=encoder_out)
+                aux = aux + a
+            return hh, aux
+    else:
+        def body(carry, lp):
+            hh, a = block_apply(lp, cfg, carry, positions, kind=kind,
+                                encoder_out=encoder_out)
+            return hh, a
+
+    if remat:
+        policy = None
+        if cfg.remat_policy == "dots":
+            policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        body = jax.checkpoint(body, prevent_cse=False, policy=policy)
+    h, auxs = jax.lax.scan(body, h, gparams)
+    return h, jnp.sum(auxs)
+
+
+def embed_tokens(params, cfg: ArchConfig, tokens: jax.Array,
+                 vision_embeds: Optional[jax.Array] = None) -> jax.Array:
+    h = params["embed"][tokens] * (cfg.d_model ** 0.5)
+    if cfg.vision_dim and vision_embeds is not None:
+        h = h + vision_embeds @ params["vision_proj"]
+    return h
+
+
+def forward(params, cfg: ArchConfig, tokens: jax.Array, *,
+            positions: Optional[jax.Array] = None,
+            vision_embeds=None, audio_frames=None,
+            train: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence forward → (logits (B,S,V), moe_aux)."""
+    b, s = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        if cfg.m_rope:
+            positions = jnp.broadcast_to(positions[..., None], (b, s, 3))
+
+    encoder_out = None
+    if cfg.arch_type == "encdec":
+        assert audio_frames is not None, "whisper needs frame embeddings"
+        enc_pos = jnp.broadcast_to(
+            jnp.arange(audio_frames.shape[1])[None],
+            audio_frames.shape[:2])
+        eh = audio_frames
+        eh, _ = _run_group(params["encoder"]["groups"][0], cfg, eh,
+                           enc_pos, "enc", True, remat=cfg.remat and train)
+        encoder_out = shard_activation(
+            rmsnorm(params["encoder"]["final_norm"], eh))
+
+    h = shard_activation(embed_tokens(params, cfg, tokens, vision_embeds),
+                         seq_over_model=cfg.act_seq_shard)
+    aux = 0.0
+    for gparams, (kind, n, scanned) in zip(params["groups"],
+                                           stack_plan(cfg)):
+        h, a = _run_group(gparams, cfg, h, positions, kind, scanned,
+                          encoder_out=encoder_out,
+                          remat=cfg.remat and train)
+        h = shard_activation(h, seq_over_model=cfg.act_seq_shard)
+        aux = aux + a
+    h = rmsnorm(params["final_norm"], h)
+    if cfg.tie_embeddings:
+        logits = h @ params["embed"].T
+    else:
+        logits = h @ params["lm_head"]
+    return shard_logits(logits), aux
+
+
+def loss_fn(params, cfg: ArchConfig, batch: Dict[str, jax.Array]
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Next-token cross entropy (train_step body)."""
+    logits, aux = forward(
+        params, cfg, batch["tokens"],
+        positions=batch.get("positions"),
+        vision_embeds=batch.get("vision_embeds"),
+        audio_frames=batch.get("audio_frames"),
+        train=True)
+    labels = batch["labels"]
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None],
+                               axis=-1)[..., 0]
+    nll = jnp.mean(logz - gold)
+    total = nll + cfg.router_aux_coef * aux / max(cfg.num_layers, 1)
+    return total, {"nll": nll, "moe_aux": jnp.asarray(aux, jnp.float32)}
+
+
+# ====================================================================== #
+# Decode
+# ====================================================================== #
+def init_decode_cache(cfg: ArchConfig, batch: int, seq_len: int,
+                      dtype=jnp.bfloat16) -> PyTree:
+    """Cache pytree matching the stack plan (stacked along scan dim for
+    scanned groups)."""
+    groups = []
+    for kind, n, scanned in stack_plan(cfg):
+        if kind == "pattern":
+            one = {f"sub{i}": _block_cache(cfg, kd, batch, seq_len, dtype)
+                   for i, kd in enumerate(cfg.hybrid_pattern)}
+        else:
+            one = _block_cache(cfg, kind, batch, seq_len, dtype)
+        if scanned:
+            groups.append(jax.tree_util.tree_map(
+                lambda x: jnp.broadcast_to(x[None], (n,) + x.shape).copy()
+                if n > 1 else x[None], one))
+        else:
+            groups.append([one for _ in range(n)])
+    cache: Dict = {"groups": groups}
+    if cfg.arch_type == "encdec":
+        cache["encoder_out"] = jnp.zeros(
+            (batch, cfg.encoder_frames, cfg.d_model), dtype)
+    return cache
+
+
+def decode_step(params, cfg: ArchConfig, tokens: jax.Array,
+                cache: PyTree, pos: jax.Array, *,
+                positions_3d=None, vision_embeds=None
+                ) -> Tuple[jax.Array, PyTree]:
+    """One-token decode: tokens (B, 1), pos (B,) current write index.
+    Returns (logits (B, 1, V), new_cache)."""
+    encoder_out = cache.get("encoder_out")
+    h = shard_activation(embed_tokens(params, cfg, tokens, vision_embeds))
+    new_groups = []
+    for gparams, gcache, (kind, n, scanned) in zip(
+            params["groups"], cache["groups"], stack_plan(cfg)):
+        if not scanned:
+            ncs = []
+            for lp, lc in zip(gparams, gcache):
+                h, nc = block_decode(lp, cfg, h, lc, pos, kind=kind,
+                                     encoder_out=encoder_out,
+                                     positions_3d=positions_3d)
+                ncs.append(nc)
+            new_groups.append(ncs)
+            continue
+
+        if kind == "pattern":
+            kinds = list(cfg.hybrid_pattern)
+
+            def body(carry, xs):
+                hh = carry
+                lp, lc = xs
+                nc = {}
+                for i, kd in enumerate(kinds):
+                    hh, nci = block_decode(
+                        lp[f"sub{i}"], cfg, hh, lc[f"sub{i}"], pos,
+                        kind=kd, encoder_out=encoder_out,
+                        positions_3d=positions_3d)
+                    nc[f"sub{i}"] = nci
+                return hh, nc
+        else:
+            def body(carry, xs):
+                lp, lc = xs
+                hh, nc = block_decode(lp, cfg, carry, lc, pos, kind=kind,
+                                      encoder_out=encoder_out,
+                                      positions_3d=positions_3d)
+                return hh, nc
+        h, ncache = jax.lax.scan(body, h, (gparams, gcache))
+        new_groups.append(ncache)
+
+    h = rmsnorm(params["final_norm"], h)
+    if cfg.tie_embeddings:
+        logits = h @ params["embed"].T
+    else:
+        logits = h @ params["lm_head"]
+    new_cache = dict(cache)
+    new_cache["groups"] = new_groups
+    return shard_logits(logits), new_cache
+
+
+def prefill(params, cfg: ArchConfig, tokens: jax.Array, *,
+            positions=None, vision_embeds=None, audio_frames=None
+            ) -> Tuple[jax.Array, jax.Array]:
+    """Prefill forward: returns (last-position logits, full logits dropped).
+    The dry-run lowers this for the ``prefill_32k`` shape; cache
+    materialization for chained decode reuses ``forward`` activations in the
+    serving layer."""
+    logits, _ = forward(params, cfg, tokens, positions=positions,
+                        vision_embeds=vision_embeds,
+                        audio_frames=audio_frames, train=False)
+    return logits[:, -1], logits[:, -1].argmax(-1)
+
+
+def count_params(params) -> int:
+    import numpy as np
+    return int(sum(np.prod(x.shape)
+                   for x in jax.tree_util.tree_leaves(params)))

@@ -1,0 +1,3 @@
+"""Serving: batched LM decode engine + KGE link-prediction server."""
+from repro.serving.engine import ServeEngine, Request, KGEServer
+__all__ = ["ServeEngine", "Request", "KGEServer"]

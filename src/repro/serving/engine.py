@@ -1,0 +1,108 @@
+"""Batched serving engine for the assigned LM architectures plus a KGE
+link-prediction service for the paper's models.
+
+``ServeEngine`` is batch-synchronous static batching: up to ``slots``
+requests run together from position 0 — while a slot still has prompt tokens
+it consumes them (teacher forcing), afterwards it consumes its own generated
+token.  One jitted ``serve_step`` per position, correct for both KV-cache
+attention and recurrent-state (RWKV / RG-LRU) architectures.  On-pod the
+same step runs with the cache sharded per DESIGN.md §5 — the dry-run lowers
+exactly this function.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.steps import make_serve_step
+from repro.nn.transformer import ArchConfig, init_decode_cache
+
+
+@dataclasses.dataclass
+class Request:
+    request_id: int
+    prompt: np.ndarray          # (P,) int32
+    max_new_tokens: int = 16
+    output: Optional[List[int]] = None
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg: ArchConfig, params, *, slots: int = 4,
+                 max_seq: int = 256, dtype=jnp.float32):
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.max_seq = max_seq
+        self.dtype = dtype
+        self._step = jax.jit(make_serve_step(cfg), donate_argnums=(1,))
+
+    def _run_batch(self, reqs: List[Request]) -> None:
+        n = self.slots
+        cache = init_decode_cache(self.cfg, n, self.max_seq,
+                                  dtype=self.dtype)
+        if self.cfg.arch_type == "encdec":
+            cache["encoder_out"] = jnp.zeros(
+                (n, self.cfg.encoder_frames, self.cfg.d_model), self.dtype)
+        prompts = [r.prompt for r in reqs] + \
+            [np.zeros(1, np.int32)] * (n - len(reqs))
+        plens = np.array([len(p) for p in prompts])
+        budget = [r.max_new_tokens for r in reqs] + [0] * (n - len(reqs))
+        horizon = int(min(self.max_seq - 1,
+                          max(plens[i] + budget[i] for i in range(n))))
+        for r in reqs:
+            r.output = []
+
+        cur = np.array([p[0] for p in prompts], np.int32)
+        for t in range(horizon):
+            batch = {"tokens": jnp.asarray(cur[:, None]),
+                     "pos": jnp.full((n,), t, jnp.int32)}
+            if self.cfg.m_rope:
+                batch["positions_3d"] = jnp.full((n, 1, 3), t, jnp.int32)
+            nxt, cache = self._step(self.params, cache, batch)
+            nxt = np.asarray(nxt)
+            for i, r in enumerate(reqs):
+                if r.done:
+                    continue
+                if t + 1 < plens[i]:
+                    cur[i] = prompts[i][t + 1]      # still in prompt
+                else:
+                    r.output.append(int(nxt[i]))
+                    cur[i] = nxt[i]
+                    if len(r.output) >= r.max_new_tokens:
+                        r.done = True
+            for i in range(len(reqs), n):
+                cur[i] = 0
+            if all(r.done for r in reqs):
+                break
+        for r in reqs:
+            r.done = True
+
+    def run(self, requests: List[Request]) -> List[Request]:
+        for lo in range(0, len(requests), self.slots):
+            self._run_batch(requests[lo: lo + self.slots])
+        return requests
+
+
+# ---------------------------------------------------------------------- #
+# KGE link-prediction serving (the paper's model family)
+# ---------------------------------------------------------------------- #
+class KGEServer:
+    """Answers (head, relation, ?) queries with top-k tails using the
+    Pallas ranking kernel."""
+
+    def __init__(self, entity_emb: np.ndarray, rel_diag: np.ndarray):
+        self.emb = jnp.asarray(entity_emb)
+        self.rel_diag = jnp.asarray(rel_diag)
+
+    def topk_tails(self, heads: np.ndarray, rels: np.ndarray,
+                   k: int = 10) -> np.ndarray:
+        from repro.kernels.ops import distmult_rank_scores
+        scores = distmult_rank_scores(
+            self.emb[jnp.asarray(heads)], jnp.asarray(rels),
+            self.rel_diag, self.emb)
+        return np.asarray(jax.lax.top_k(scores, k)[1])

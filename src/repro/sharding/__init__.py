@@ -1,0 +1,6 @@
+"""Sharding rules: 2-D (fsdp × tensor) parameter layout, batch/cache specs."""
+from repro.sharding.rules import (
+    param_shardings, opt_state_shardings, batch_shardings, cache_shardings,
+    spec_for_param, spec_for_batch_leaf, spec_for_cache_leaf, fsdp_axes,
+)
+__all__ = [n for n in dir() if not n.startswith("_")]

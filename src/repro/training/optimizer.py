@@ -1,0 +1,148 @@
+"""Optimizers and LR schedules — pure-pytree, no external deps.
+
+Implements what the paper's stack uses (Adam for RGCN link prediction) plus
+AdamW/SGD-momentum for the transformer substrate.  Interface mirrors optax
+(init/update returning update pytrees) so components stay composable.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: PyTree            # first moment (Adam) / momentum (SGD)
+    nu: Optional[PyTree]  # second moment (Adam) or None
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[PyTree], OptState]
+    update: Callable[[PyTree, OptState, PyTree],
+                     Tuple[PyTree, OptState]]  # (grads, state, params)
+
+
+def _zeros_like_tree(tree: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(jnp.zeros_like, tree)
+
+
+def adam(
+    learning_rate: float | Callable[[jax.Array], jax.Array],
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    grad_clip_norm: Optional[float] = None,
+    state_dtype: Optional[jnp.dtype] = None,
+) -> Optimizer:
+    """Adam / AdamW.  ``state_dtype`` lets large models keep moments in
+    bf16 (halves optimizer HBM — see EXPERIMENTS.md memory analysis)."""
+
+    def lr_at(step):
+        return learning_rate(step) if callable(learning_rate) \
+            else jnp.asarray(learning_rate)
+
+    def init(params: PyTree) -> OptState:
+        cast = (lambda x: jnp.zeros_like(
+            x, dtype=state_dtype or x.dtype))
+        return OptState(
+            step=jnp.zeros((), jnp.int32),
+            mu=jax.tree_util.tree_map(cast, params),
+            nu=jax.tree_util.tree_map(cast, params),
+        )
+
+    def update(grads, state, params):
+        if grad_clip_norm is not None:
+            gnorm = global_norm(grads)
+            scale = jnp.minimum(1.0, grad_clip_norm / (gnorm + 1e-9))
+            grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        bc1 = 1 - b1 ** t
+        bc2 = 1 - b2 ** t
+        lr = lr_at(step)
+
+        def upd(g, m, v, p):
+            gf = g.astype(jnp.float32)
+            m2 = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+            v2 = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+            mhat = m2 / bc1
+            vhat = v2 / bc2
+            delta = mhat / (jnp.sqrt(vhat) + eps)
+            if weight_decay:
+                delta = delta + weight_decay * p.astype(jnp.float32)
+            return (-lr * delta).astype(p.dtype), \
+                m2.astype(m.dtype), v2.astype(v.dtype)
+
+        flat_g, treedef = jax.tree_util.tree_flatten(grads)
+        flat_m = treedef.flatten_up_to(state.mu)
+        flat_v = treedef.flatten_up_to(state.nu)
+        flat_p = treedef.flatten_up_to(params)
+        out = [upd(g, m, v, p)
+               for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        updates = treedef.unflatten([o[0] for o in out])
+        mu = treedef.unflatten([o[1] for o in out])
+        nu = treedef.unflatten([o[2] for o in out])
+        return updates, OptState(step=step, mu=mu, nu=nu)
+
+    return Optimizer(init=init, update=update)
+
+
+def sgd(learning_rate: float | Callable, momentum: float = 0.0) -> Optimizer:
+    def lr_at(step):
+        return learning_rate(step) if callable(learning_rate) \
+            else jnp.asarray(learning_rate)
+
+    def init(params):
+        mu = _zeros_like_tree(params) if momentum else None
+        return OptState(step=jnp.zeros((), jnp.int32), mu=mu, nu=None)
+
+    def update(grads, state, params):
+        step = state.step + 1
+        lr = lr_at(step)
+        if momentum:
+            mu = jax.tree_util.tree_map(
+                lambda m, g: momentum * m + g, state.mu, grads)
+            updates = jax.tree_util.tree_map(lambda m: -lr * m, mu)
+        else:
+            mu = None
+            updates = jax.tree_util.tree_map(lambda g: -lr * g, grads)
+        return updates, OptState(step=step, mu=mu, nu=None)
+
+    return Optimizer(init=init, update=update)
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(lambda p, u: p + u, params, updates)
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+# ---------------------------------------------------------------------- #
+# Schedules
+# ---------------------------------------------------------------------- #
+def constant_schedule(lr: float) -> Callable:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def warmup_cosine_schedule(peak_lr: float, warmup_steps: int,
+                           total_steps: int,
+                           end_lr: float = 0.0) -> Callable:
+    def schedule(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(warmup_steps, 1)
+        frac = jnp.clip((step - warmup_steps) /
+                        max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = end_lr + 0.5 * (peak_lr - end_lr) * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return schedule

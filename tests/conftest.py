@@ -1,0 +1,24 @@
+import os
+import sys
+
+# src layout import without install (+ repo root for benchmarks.*)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    KnowledgeGraph, make_synthetic_kg, expand_all, partition_graph,
+)
+
+
+@pytest.fixture(scope="session")
+def small_kg() -> KnowledgeGraph:
+    return make_synthetic_kg(300, 10, 2500, seed=7).with_inverse_relations()
+
+
+@pytest.fixture(scope="session")
+def partitioned(small_kg):
+    parts = partition_graph(small_kg, 4, "vertex_cut", seed=0)
+    return parts, expand_all(small_kg, parts, num_hops=2)

@@ -1,0 +1,114 @@
+"""Per-assigned-architecture smoke tests (deliverable f): a REDUCED variant
+of each family (2 layers, d_model ≤ 256, ≤ 4 experts) runs one forward /
+train step and one decode step on CPU — shapes asserted, no NaNs.  The FULL
+configs are exercised only by the dry-run (ShapeDtypeStruct, no allocation).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, ASSIGNED, get_arch
+from repro.nn import (
+    count_params, decode_step, init_decode_cache, init_params, loss_fn,
+)
+
+B, S = 2, 16
+
+
+def _batch(cfg):
+    rng = np.random.default_rng(0)
+    batch = {
+        "tokens": jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32),
+        "labels": jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32),
+    }
+    if cfg.arch_type == "vlm":
+        batch["vision_embeds"] = jnp.asarray(
+            rng.normal(size=(B, S, cfg.vision_dim)) * 0.1, jnp.float32)
+        batch["positions"] = jnp.broadcast_to(
+            jnp.arange(S)[None, :, None], (B, S, 3)).astype(jnp.int32)
+    if cfg.arch_type == "encdec":
+        batch["audio_frames"] = jnp.asarray(
+            rng.normal(size=(B, cfg.encoder_frames, cfg.d_model)) * 0.1,
+            jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("name", ASSIGNED)
+def test_reduced_train_step(name):
+    cfg = get_arch(name).reduced()
+    params = init_params(jax.random.PRNGKey(0), cfg, dtype=jnp.float32)
+    assert count_params(params) > 0
+    batch = _batch(cfg)
+    (loss, aux), grads = jax.value_and_grad(
+        lambda p: loss_fn(p, cfg, batch), has_aux=True)(params)
+    assert np.isfinite(float(loss))
+    assert float(loss) < 2 * np.log(cfg.vocab_size) + 5
+    for leaf in jax.tree_util.tree_leaves(grads):
+        assert bool(jnp.isfinite(leaf).all())
+    assert aux["nll"].shape == ()
+
+
+@pytest.mark.parametrize("name", ASSIGNED)
+def test_reduced_decode_step(name):
+    cfg = get_arch(name).reduced()
+    params = init_params(jax.random.PRNGKey(0), cfg, dtype=jnp.float32)
+    cache = init_decode_cache(cfg, B, 32, dtype=jnp.float32)
+    if cfg.arch_type == "encdec":
+        cache["encoder_out"] = jnp.zeros(
+            (B, cfg.encoder_frames, cfg.d_model), jnp.float32)
+    kw = {}
+    if cfg.m_rope:
+        kw["positions_3d"] = jnp.zeros((B, 1, 3), jnp.int32)
+    logits, cache2 = decode_step(
+        params, cfg, jnp.ones((B, 1), jnp.int32), cache,
+        jnp.zeros((B,), jnp.int32), **kw)
+    assert logits.shape == (B, 1, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+    # cache structure preserved
+    assert (jax.tree_util.tree_structure(cache2) ==
+            jax.tree_util.tree_structure(cache))
+
+
+def test_full_config_dims_exact():
+    """The assignment table, verbatim."""
+    t = {
+        "glm4-9b": (40, 4096, 32, 2, 13696, 151552),
+        "qwen3-32b": (64, 5120, 64, 8, 25600, 151936),
+        "whisper-large-v3": (32, 1280, 20, 20, 5120, 51866),
+        "rwkv6-3b": (32, 2560, 40, 40, 8960, 65536),
+        "gemma-2b": (18, 2048, 8, 1, 16384, 256000),
+        "recurrentgemma-9b": (38, 4096, 16, 1, 12288, 256000),
+        "arctic-480b": (35, 7168, 56, 8, 4864, 32000),
+        "qwen2-vl-7b": (28, 3584, 28, 4, 18944, 152064),
+        "qwen2.5-32b": (64, 5120, 40, 8, 27648, 152064),
+        "deepseek-v2-lite-16b": (27, 2048, 16, 16, 1408, 102400),
+    }
+    for name, (L, d, h, kv, ff, v) in t.items():
+        cfg = ARCHS[name]
+        assert cfg.num_layers == L, name
+        assert cfg.d_model == d, name
+        assert cfg.num_heads == h, name
+        assert cfg.num_kv_heads == kv, name
+        assert cfg.vocab_size == v, name
+        if name == "deepseek-v2-lite-16b":
+            assert cfg.d_ff_expert == ff
+            assert cfg.kv_lora_rank == 512 and cfg.use_mla
+        else:
+            assert cfg.d_ff == ff, name
+    assert ARCHS["arctic-480b"].num_experts == 128
+    assert ARCHS["arctic-480b"].top_k == 2
+    assert ARCHS["deepseek-v2-lite-16b"].top_k == 6
+    assert ARCHS["recurrentgemma-9b"].hybrid_pattern == \
+        ("rec", "rec", "attn")
+    assert ARCHS["gemma-2b"].head_dim == 256
+
+
+def test_moe_active_params_fraction():
+    """arctic-480b: active params must be far below total (top-2 of 128)."""
+    from repro.launch.specs import _param_counts
+    total, active = _param_counts(ARCHS["arctic-480b"])
+    assert total > 4e11               # ~480B
+    assert active < 0.1 * total       # top-2/128 + dense + attn

@@ -1,0 +1,161 @@
+"""Attention variants: chunked==dense equivalence, decode==prefill, MLA."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.nn import attention as A
+from repro.nn.layers import apply_m_rope, apply_rope
+
+
+def _qkv(rng, b, s, h, hkv, hd):
+    q = jnp.asarray(rng.normal(size=(b, s, h, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, hkv, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, hkv, hd)), jnp.float32)
+    return q, k, v
+
+
+class TestMEA:
+    @pytest.mark.parametrize("window", [None, 64])
+    @pytest.mark.parametrize("hkv", [1, 2, 4])
+    def test_matches_dense(self, window, hkv):
+        rng = np.random.default_rng(0)
+        b, s, h, hd = 2, 256, 4, 16
+        q, k, v = _qkv(rng, b, s, h, hkv, hd)
+        dense = A._sdpa(q, k, v, A.causal_mask(s, s, window))
+        mea = A._mea(q, k, v, causal=True, window=window,
+                     q_chunk=64, k_chunk=64)
+        np.testing.assert_allclose(np.asarray(mea), np.asarray(dense),
+                                   rtol=2e-4, atol=2e-5)
+
+    def test_non_causal(self):
+        rng = np.random.default_rng(1)
+        q, k, v = _qkv(rng, 1, 128, 2, 2, 8)
+        dense = A._sdpa(q, k, v, None)
+        mea = A._mea(q, k, v, causal=False, window=None,
+                     q_chunk=32, k_chunk=32)
+        np.testing.assert_allclose(np.asarray(mea), np.asarray(dense),
+                                   rtol=2e-4, atol=2e-5)
+
+    def test_mixed_value_dim(self):
+        """MLA path: v_dim != head_dim."""
+        rng = np.random.default_rng(2)
+        b, s, h, hd, vd = 1, 128, 2, 24, 16
+        q = jnp.asarray(rng.normal(size=(b, s, h, hd)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(b, s, h, hd)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(b, s, h, vd)), jnp.float32)
+        mea = A._mea(q, k, v, causal=True, window=None,
+                     q_chunk=32, k_chunk=32)
+        # dense reference with value dim vd
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / np.sqrt(hd)
+        mask = A.causal_mask(s, s)[0]
+        scores = jnp.where(mask, scores, -1e30)
+        w = jax.nn.softmax(scores, -1)
+        want = jnp.einsum("bhqk,bkhd->bqhd", w, v).reshape(b, s, h * vd)
+        np.testing.assert_allclose(np.asarray(mea), np.asarray(want),
+                                   rtol=2e-4, atol=2e-5)
+
+
+class TestDecodeConsistency:
+    def test_gqa_decode_matches_full(self):
+        """Decoding tokens one-by-one with the cache must reproduce the
+        full-sequence attention output at every position."""
+        rng = np.random.default_rng(3)
+        b, s, h, hkv, hd, d = 2, 12, 4, 2, 8, 32
+        p = A.attn_params(jax.random.PRNGKey(0), d, h, hkv, hd,
+                          qkv_bias=True, qk_norm=True)
+        x = jnp.asarray(rng.normal(size=(b, s, d)), jnp.float32)
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        full = A.attention(p, x, num_heads=h, num_kv_heads=hkv, head_dim=hd,
+                           positions=positions)
+        cache = {"k": jnp.zeros((b, s, hkv, hd)),
+                 "v": jnp.zeros((b, s, hkv, hd))}
+        outs = []
+        for t in range(s):
+            o, cache = A.attention_decode(
+                p, x[:, t:t + 1], cache, jnp.full((b,), t, jnp.int32),
+                num_heads=h, num_kv_heads=hkv, head_dim=hd)
+            outs.append(o)
+        got = jnp.concatenate(outs, axis=1)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(full),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_mla_decode_matches_full(self):
+        rng = np.random.default_rng(4)
+        b, s, h, d = 1, 10, 2, 32
+        kw = dict(num_heads=h, kv_lora_rank=16, qk_nope_head_dim=8,
+                  qk_rope_head_dim=4, v_head_dim=8)
+        p = A.mla_params(jax.random.PRNGKey(1), d, h, kv_lora_rank=16,
+                         qk_nope_head_dim=8, qk_rope_head_dim=4,
+                         v_head_dim=8)
+        x = jnp.asarray(rng.normal(size=(b, s, d)), jnp.float32)
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        full = A.mla_attention(p, x, positions=positions, **kw)
+        cache = {"c_kv": jnp.zeros((b, s, 16)),
+                 "k_rope": jnp.zeros((b, s, 4))}
+        outs = []
+        for t in range(s):
+            o, cache = A.mla_decode(
+                p, x[:, t:t + 1], cache, jnp.full((b,), t, jnp.int32), **kw)
+            outs.append(o)
+        got = jnp.concatenate(outs, axis=1)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(full),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_sliding_window_decode(self):
+        """Window-limited decode attends to at most `window` positions."""
+        rng = np.random.default_rng(5)
+        b, s, h, hkv, hd, d = 1, 16, 2, 1, 8, 16
+        p = A.attn_params(jax.random.PRNGKey(2), d, h, hkv, hd)
+        x = jnp.asarray(rng.normal(size=(b, s, d)), jnp.float32)
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        full = A.attention(p, x, num_heads=h, num_kv_heads=hkv,
+                           head_dim=hd, positions=positions, window=4)
+        cache = {"k": jnp.zeros((b, s, hkv, hd)),
+                 "v": jnp.zeros((b, s, hkv, hd))}
+        outs = []
+        for t in range(s):
+            o, cache = A.attention_decode(
+                p, x[:, t:t + 1], cache, jnp.full((b,), t, jnp.int32),
+                num_heads=h, num_kv_heads=hkv, head_dim=hd, window=4)
+            outs.append(o)
+        got = jnp.concatenate(outs, axis=1)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(full),
+                                   rtol=1e-4, atol=1e-5)
+
+
+class TestRope:
+    def test_rope_preserves_norm(self):
+        rng = np.random.default_rng(6)
+        x = jnp.asarray(rng.normal(size=(1, 8, 2, 16)), jnp.float32)
+        pos = jnp.arange(8)[None]
+        y = apply_rope(x, pos)
+        np.testing.assert_allclose(
+            np.linalg.norm(np.asarray(x), axis=-1),
+            np.linalg.norm(np.asarray(y), axis=-1), rtol=1e-5)
+
+    def test_rope_relative_property(self):
+        """<rope(q,i), rope(k,j)> depends only on i-j."""
+        rng = np.random.default_rng(7)
+        q = jnp.asarray(rng.normal(size=(1, 1, 1, 32)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(1, 1, 1, 32)), jnp.float32)
+
+        def dot_at(i, j):
+            qi = apply_rope(q, jnp.asarray([[i]]))
+            kj = apply_rope(k, jnp.asarray([[j]]))
+            return float(jnp.sum(qi * kj))
+        assert dot_at(3, 1) == pytest.approx(dot_at(10, 8), rel=1e-4)
+
+    def test_m_rope_sections(self):
+        rng = np.random.default_rng(8)
+        x = jnp.asarray(rng.normal(size=(1, 4, 2, 32)), jnp.float32)
+        pos3 = jnp.zeros((1, 4, 3), jnp.int32)
+        # all-zero positions == identity
+        y = apply_m_rope(x, pos3)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(x), atol=1e-6)
+        # equal 1-D positions == plain rope
+        t = jnp.broadcast_to(jnp.arange(4)[None], (1, 4))
+        y1 = apply_m_rope(x, jnp.broadcast_to(t[..., None], (1, 4, 3)))
+        y2 = apply_rope(x, t)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                                   rtol=1e-5, atol=1e-6)

@@ -1,0 +1,53 @@
+"""Dry-run entry-point integration test (deliverable e) — runs the real CLI
+in a subprocess (it must set XLA_FLAGS before jax import, which cannot
+happen in this test process) for one cheap (arch × shape × mesh) combo and
+validates the emitted record."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.join(os.path.dirname(__file__), "..")
+
+
+@pytest.mark.slow
+def test_dryrun_cli_single_combo(tmp_path):
+    out = tmp_path / "dry.jsonl"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "rwkv6-3b", "--shape", "decode_32k",
+         "--mesh", "single", "--out", str(out), "--force"],
+        cwd=REPO, env=env, capture_output=True, text=True, timeout=540)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+    recs = [json.loads(line) for line in out.read_text().splitlines()]
+    assert len(recs) == 1
+    r = recs[0]
+    assert r["status"] == "ok"
+    assert r["chips"] == 256
+    assert r["roofline"]["dominant"] in ("compute", "memory", "collective")
+    assert r["hlo_flops_per_device"] > 0
+    assert r["hlo_bytes_per_device"] > 0
+    assert r["collective_bytes_per_device"] >= 0
+    assert r["memory"]["argument_bytes"] > 0
+
+
+@pytest.mark.slow
+def test_dryrun_cli_skip_rule(tmp_path):
+    """long_500k on a full-attention arch must be a recorded skip."""
+    out = tmp_path / "dry.jsonl"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "glm4-9b", "--shape", "long_500k",
+         "--mesh", "single", "--out", str(out), "--force"],
+        cwd=REPO, env=env, capture_output=True, text=True, timeout=240)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    r = json.loads(out.read_text().splitlines()[0])
+    assert r["status"] == "skipped"
+    assert "full-attention" in r["note"]

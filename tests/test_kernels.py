@@ -1,0 +1,181 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + hypothesis."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.rgcn_message import basis_message, segment_sum_onehot
+
+
+def _mk(rng, v, e, d_in, d_out, nb, r, dtype=np.float32):
+    return dict(
+        h=jnp.asarray(rng.normal(size=(v, d_in)), dtype),
+        src=jnp.asarray(rng.integers(0, v, e), jnp.int32),
+        rel=jnp.asarray(rng.integers(0, r, e), jnp.int32),
+        dst=jnp.asarray(rng.integers(0, v, e), jnp.int32),
+        mask=jnp.asarray(rng.random(e) > 0.15),
+        bases=jnp.asarray(rng.normal(size=(nb, d_in, d_out)) * 0.2, dtype),
+        coeffs=jnp.asarray(rng.normal(size=(r, nb)), dtype),
+    )
+
+
+SHAPES = [
+    (64, 200, 16, 16, 2, 5),
+    (128, 512, 32, 48, 3, 11),
+    (300, 1024, 75, 75, 2, 474),    # paper's FB15k-237 dims (2×237 rels)
+    (33, 129, 8, 8, 1, 2),          # non-aligned
+]
+
+
+@pytest.mark.parametrize("v,e,d_in,d_out,nb,r", SHAPES)
+def test_rgcn_kernel_allclose(v, e, d_in, d_out, nb, r):
+    rng = np.random.default_rng(v + e)
+    a = _mk(rng, v, e, d_in, d_out, nb, r)
+    got = ops.rgcn_message_basis(a["h"], a["src"], a["rel"], a["dst"],
+                                 a["mask"], a["bases"], a["coeffs"])
+    want = ref.rgcn_message_ref(a["h"], a["src"], a["rel"], a["dst"],
+                                a["mask"], a["bases"], a["coeffs"])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_rgcn_kernel_grads_match_ref():
+    rng = np.random.default_rng(3)
+    a = _mk(rng, 50, 150, 16, 16, 2, 4)
+
+    def f_kernel(h, bases, coeffs):
+        return ops.rgcn_message_basis(
+            h, a["src"], a["rel"], a["dst"], a["mask"], bases, coeffs).sum()
+
+    def f_ref(h, bases, coeffs):
+        return ref.rgcn_message_ref(
+            h, a["src"], a["rel"], a["dst"], a["mask"], bases, coeffs).sum()
+
+    gk = jax.grad(f_kernel, (0, 1, 2))(a["h"], a["bases"], a["coeffs"])
+    gr = jax.grad(f_ref, (0, 1, 2))(a["h"], a["bases"], a["coeffs"])
+    for x, y in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    v=st.integers(8, 200), e=st.integers(8, 600),
+    d=st.sampled_from([8, 16, 32, 75]), nb=st.integers(1, 3),
+    r=st.integers(1, 12), seed=st.integers(0, 99),
+)
+def test_property_rgcn_kernel(v, e, d, nb, r, seed):
+    rng = np.random.default_rng(seed)
+    a = _mk(rng, v, e, d, d, nb, r)
+    got = ops.rgcn_message_basis(a["h"], a["src"], a["rel"], a["dst"],
+                                 a["mask"], a["bases"], a["coeffs"])
+    want = ref.rgcn_message_ref(a["h"], a["src"], a["rel"], a["dst"],
+                                a["mask"], a["bases"], a["coeffs"])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_basis_message_bf16():
+    rng = np.random.default_rng(0)
+    e, d, nb = 256, 32, 2
+    h_t = jnp.asarray(rng.normal(size=(e, d)), jnp.bfloat16)
+    coef = jnp.asarray(rng.normal(size=(e, nb)), jnp.bfloat16)
+    bases = jnp.asarray(rng.normal(size=(nb, d, d)) * 0.1, jnp.bfloat16)
+    mask = jnp.ones(e, bool)
+    got = basis_message(h_t, coef, bases, mask)
+    want = ref.basis_message_ref(h_t.astype(jnp.float32),
+                                 coef.astype(jnp.float32),
+                                 bases.astype(jnp.float32), mask)
+    assert got.dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(got, dtype=np.float32),
+                               np.asarray(want), rtol=0.05, atol=0.05)
+
+
+def test_segment_sum_sorted_and_unsorted():
+    rng = np.random.default_rng(1)
+    e, v, d = 512, 256, 16
+    msg = jnp.asarray(rng.normal(size=(e, d)), jnp.float32)
+    seg = jnp.asarray(rng.integers(0, v, e), jnp.int32)
+    mask = jnp.asarray(rng.random(e) > 0.2)
+    for s in (seg, jnp.sort(seg)):
+        agg, deg = segment_sum_onehot(msg, s, mask, v)
+        wagg, wdeg = ref.segment_mean_ref(msg, s, mask, v)
+        np.testing.assert_allclose(np.asarray(agg), np.asarray(wagg),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(deg[:, 0]),
+                                   np.asarray(wdeg), rtol=1e-6, atol=0)
+
+
+KGE_SHAPES = [(32, 100, 16), (128, 1000, 75), (200, 333, 32), (1, 128, 64)]
+
+
+@pytest.mark.parametrize("b,c,d", KGE_SHAPES)
+def test_kge_score_allclose(b, c, d):
+    rng = np.random.default_rng(b * c)
+    h = jnp.asarray(rng.normal(size=(b, d)), jnp.float32)
+    rel = jnp.asarray(rng.integers(0, 7, b), jnp.int32)
+    table = jnp.asarray(rng.normal(size=(7, d)), jnp.float32)
+    cand = jnp.asarray(rng.normal(size=(c, d)), jnp.float32)
+    bias = jnp.asarray(
+        np.where(rng.random((b, c)) < 0.1, -1e9, 0.0), jnp.float32)
+    got = ops.distmult_rank_scores(h, rel, table, cand, bias)
+    want = ref.kge_score_ref(h, table[rel], cand, bias)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_kge_score_no_bias():
+    rng = np.random.default_rng(9)
+    h = jnp.asarray(rng.normal(size=(10, 8)), jnp.float32)
+    rel = jnp.zeros(10, jnp.int32)
+    table = jnp.asarray(rng.normal(size=(3, 8)), jnp.float32)
+    cand = jnp.asarray(rng.normal(size=(50, 8)), jnp.float32)
+    got = ops.distmult_rank_scores(h, rel, table, cand)
+    want = ref.kge_score_ref(h, table[rel], cand)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------- #
+# Chunked WKV kernel (RWKV-6 time-mix core)
+# ---------------------------------------------------------------------- #
+WKV_SHAPES = [(8, 64, 16, 16), (16, 128, 32, 32), (3, 50, 8, 16),
+              (8, 64, 64, 64)]
+
+
+@pytest.mark.parametrize("bh,s,hd,chunk", WKV_SHAPES)
+def test_wkv_kernel_allclose(bh, s, hd, chunk):
+    from repro.kernels.ops import wkv_chunked_op
+    from repro.kernels.ref import wkv_chunk_ref
+    rng = np.random.default_rng(bh * s)
+    r = jnp.asarray(rng.normal(size=(bh, s, hd)) * 0.5, jnp.float32)
+    k = jnp.asarray(rng.normal(size=(bh, s, hd)) * 0.5, jnp.float32)
+    v = jnp.asarray(rng.normal(size=(bh, s, hd)) * 0.5, jnp.float32)
+    lw = jnp.asarray(-np.exp(rng.normal(size=(bh, s, hd)) * 0.3 - 3),
+                     jnp.float32)
+    u = jnp.asarray(rng.normal(size=(bh, hd)) * 0.1, jnp.float32)
+    got = wkv_chunked_op(r, k, v, lw, u, chunk=chunk)
+    want = wkv_chunk_ref(r, k, v, lw, u)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(bh=st.integers(1, 12), s=st.integers(4, 80),
+       hd=st.sampled_from([8, 16]), seed=st.integers(0, 50))
+def test_property_wkv_kernel(bh, s, hd, seed):
+    from repro.kernels.ops import wkv_chunked_op
+    from repro.kernels.ref import wkv_chunk_ref
+    rng = np.random.default_rng(seed)
+    r = jnp.asarray(rng.normal(size=(bh, s, hd)) * 0.3, jnp.float32)
+    k = jnp.asarray(rng.normal(size=(bh, s, hd)) * 0.3, jnp.float32)
+    v = jnp.asarray(rng.normal(size=(bh, s, hd)) * 0.3, jnp.float32)
+    lw = jnp.asarray(-np.exp(rng.normal(size=(bh, s, hd)) * 0.2 - 3),
+                     jnp.float32)
+    u = jnp.asarray(rng.normal(size=(bh, hd)) * 0.1, jnp.float32)
+    got = wkv_chunked_op(r, k, v, lw, u, chunk=16)
+    want = wkv_chunk_ref(r, k, v, lw, u)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)

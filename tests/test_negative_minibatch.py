@@ -1,0 +1,128 @@
+"""Constraint-based negative sampling (§3.3.1) + edge mini-batch (§3.3.2)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    BatchBudget, build_comp_graph, build_edge_minibatch,
+    constraint_based_negatives, global_closed_world_negatives,
+    iterate_edge_minibatches, mix_pos_neg, plan_budgets,
+    sample_epoch_negatives, stack_minibatches,
+)
+from repro.core.minibatch import _PartitionCSR
+
+
+class TestConstraintNegatives:
+    def test_locality_invariant(self, partitioned):
+        """THE paper property: every corrupted entity is a core vertex of
+        the local partition — zero cross-partition references."""
+        _, expanded = partitioned
+        for sp in expanded:
+            rng = np.random.default_rng(0)
+            neg = sample_epoch_negatives(rng, sp, num_negatives=3)
+            assert (neg[:, 0] < sp.num_core_vertices).all()
+            assert (neg[:, 2] < sp.num_core_vertices).all()
+
+    def test_device_sampler_locality(self):
+        key = jax.random.PRNGKey(0)
+        pos = jnp.asarray(
+            np.stack([np.arange(50), np.zeros(50), np.arange(50) + 1],
+                     axis=1), jnp.int32)
+        neg, is_head = constraint_based_negatives(
+            key, pos, 4, jnp.int32(13))
+        assert neg.shape == (200, 3)
+        corrupted = jnp.where(is_head, neg[:, 0], neg[:, 2])
+        assert bool((corrupted < 13).all())
+        # uncorrupted side is preserved
+        kept = jnp.where(is_head, neg[:, 2], neg[:, 0])
+        orig = jnp.repeat(pos, 4, axis=0)
+        orig_kept = jnp.where(is_head, orig[:, 2], orig[:, 0])
+        assert bool((kept == orig_kept).all())
+
+    def test_global_sampler_range(self):
+        key = jax.random.PRNGKey(1)
+        pos = jnp.zeros((10, 3), jnp.int32)
+        neg, _ = global_closed_world_negatives(key, pos, 2, 1000)
+        assert bool((neg < 1000).all())
+
+    def test_mix_labels(self):
+        pos = jnp.zeros((5, 3), jnp.int32)
+        neg = jnp.ones((10, 3), jnp.int32)
+        trip, labels = mix_pos_neg(pos, neg)
+        assert trip.shape == (15, 3)
+        assert float(labels[:5].sum()) == 5.0
+        assert float(labels[5:].sum()) == 0.0
+
+    @settings(max_examples=20, deadline=None)
+    @given(limit=st.integers(1, 64), s=st.integers(1, 8),
+           seed=st.integers(0, 100))
+    def test_property_candidate_range(self, limit, s, seed):
+        key = jax.random.PRNGKey(seed)
+        pos = jnp.asarray(
+            np.random.default_rng(seed).integers(0, 100, (17, 3)),
+            jnp.int32)
+        neg, is_head = constraint_based_negatives(
+            key, pos, s, jnp.int32(limit))
+        corrupted = jnp.where(is_head, neg[:, 0], neg[:, 2])
+        assert bool((corrupted >= 0).all()) and \
+            bool((corrupted < limit).all())
+
+
+class TestCompGraph:
+    def test_seeds_covered(self, partitioned):
+        _, expanded = partitioned
+        sp = expanded[0]
+        seeds = np.unique(sp.core_edges_local()[:20, [0, 2]].reshape(-1))
+        verts, eids = build_comp_graph(sp, seeds, num_hops=2)
+        assert np.isin(seeds, verts).all()
+
+    def test_hop_closure(self, partitioned):
+        """Every in-edge of a seed must be in the 1-hop comp graph."""
+        _, expanded = partitioned
+        sp = expanded[0]
+        seeds = np.array([0, 1, 2])
+        verts, eids = build_comp_graph(sp, seeds, num_hops=1)
+        in_seed = np.isin(sp.src, seeds)
+        assert np.isin(np.nonzero(in_seed)[0], eids).all()
+
+    def test_budget_enforced(self, partitioned):
+        _, expanded = partitioned
+        sp = expanded[0]
+        pos = sp.core_edges_local()[:8]
+        labels = np.ones(8, np.float32)
+        with pytest.raises(ValueError):
+            build_edge_minibatch(sp, pos, labels, 2, max_vertices=2,
+                                 max_edges=2, max_triplets=128)
+
+    def test_minibatch_shapes_and_masks(self, partitioned):
+        _, expanded = partitioned
+        budget = plan_budgets(expanded, 32, 2, 2)
+        rng = np.random.default_rng(0)
+        mbs = [next(iterate_edge_minibatches(rng, sp, 32, 2, 2, budget))
+               for sp in expanded]
+        st_ = stack_minibatches(mbs)
+        assert st_.gather_ids.shape == (4, budget.max_vertices)
+        assert st_.comp_src.shape == (4, budget.max_edges)
+        # batch-local triplet ids must be inside the comp graph vertex set
+        for i, mb in enumerate(mbs):
+            nt = int(mb.triplet_mask.sum())
+            nv = int(mb.vertex_mask.sum())
+            assert (mb.triplets[:nt, [0, 2]] < nv).all()
+            # gather_global consistency
+            assert (mb.gather_global[:nv] ==
+                    expanded[i].local_to_global[
+                        mb.gather_ids[:nv]]).all()
+
+    def test_epoch_covers_all_positives(self, partitioned):
+        _, expanded = partitioned
+        sp = expanded[0]
+        budget = plan_budgets([sp], 64, 1, 2)
+        rng = np.random.default_rng(1)
+        seen = 0
+        for mb in iterate_edge_minibatches(rng, sp, 64, 1, 2, budget):
+            seen += int((mb.labels[mb.triplet_mask] > 0.5).sum())
+        assert seen == sp.num_core_edges

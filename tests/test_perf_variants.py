@@ -1,0 +1,169 @@
+"""Beyond-paper optimized paths must match their faithful baselines:
+chunked WKV == sequential scan; capacity MoE == dense dispatch (ample
+capacity); cached cross-K/V decode == recompute decode; 1-D sharding rules
+drop the tensor axis."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.nn import decode_step, init_decode_cache, init_params, loss_fn
+from repro.nn import moe as M
+from repro.nn import recurrent as R
+
+
+class TestChunkedRWKV:
+    @pytest.mark.parametrize("chunk", [8, 16, 32])
+    def test_matches_sequential(self, chunk):
+        rng = np.random.default_rng(chunk)
+        b, s, d, hd = 2, 64, 32, 8
+        p = R.rwkv_params(jax.random.PRNGKey(0), d, hd)
+        x = jnp.asarray(rng.normal(size=(b, s, d)), jnp.float32)
+        seq = R.rwkv_apply(p, x, hd)
+        chk = R.rwkv_apply_chunked(p, x, hd, chunk=chunk)
+        np.testing.assert_allclose(np.asarray(chk), np.asarray(seq),
+                                   rtol=1e-3, atol=1e-5)
+
+    def test_grads_match(self):
+        rng = np.random.default_rng(1)
+        p = R.rwkv_params(jax.random.PRNGKey(0), 16, 8)
+        x = jnp.asarray(rng.normal(size=(1, 32, 16)), jnp.float32)
+        g1 = jax.grad(lambda q: R.rwkv_apply(q, x, 8).sum())(p)
+        g2 = jax.grad(
+            lambda q: R.rwkv_apply_chunked(q, x, 8, chunk=16).sum())(p)
+        for a, b in zip(jax.tree_util.tree_leaves(g1),
+                        jax.tree_util.tree_leaves(g2)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=5e-3, atol=1e-4)
+
+    def test_full_model_loss_matches(self):
+        cfg_seq = get_arch("rwkv6-3b").reduced()
+        cfg_chk = dataclasses.replace(cfg_seq, rwkv_mode="chunked",
+                                      rwkv_chunk=8)
+        params = init_params(jax.random.PRNGKey(0), cfg_seq,
+                             dtype=jnp.float32)
+        batch = {"tokens": jnp.ones((2, 16), jnp.int32),
+                 "labels": jnp.ones((2, 16), jnp.int32)}
+        l1, _ = loss_fn(params, cfg_seq, batch)
+        l2, _ = loss_fn(params, cfg_chk, batch)
+        assert float(l1) == pytest.approx(float(l2), rel=1e-4)
+
+
+class TestCapacityMoE:
+    def test_equals_dense_with_ample_capacity(self):
+        rng = np.random.default_rng(0)
+        p = M.moe_params(jax.random.PRNGKey(0), 16, num_experts=4,
+                         d_ff_expert=32, num_shared=1, dense_residual_ff=32)
+        x = jnp.asarray(rng.normal(size=(2, 8, 16)), jnp.float32)
+        od, _ = M.moe_apply(p, x, top_k=2)
+        oc, _ = M.moe_apply_capacity(p, x, top_k=2, capacity_factor=8.0)
+        np.testing.assert_allclose(np.asarray(oc), np.asarray(od),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_capacity_drops_are_bounded(self):
+        """Tight capacity keeps outputs finite and within dense range."""
+        rng = np.random.default_rng(1)
+        p = M.moe_params(jax.random.PRNGKey(1), 8, num_experts=4,
+                         d_ff_expert=16)
+        x = jnp.asarray(rng.normal(size=(1, 32, 8)), jnp.float32)
+        oc, aux = M.moe_apply_capacity(p, x, top_k=2, capacity_factor=1.0)
+        assert bool(jnp.isfinite(oc).all()) and np.isfinite(float(aux))
+
+    def test_full_model_grad_flows(self):
+        cfg = dataclasses.replace(get_arch("arctic-480b").reduced(),
+                                  moe_dispatch="capacity")
+        params = init_params(jax.random.PRNGKey(0), cfg, dtype=jnp.float32)
+        batch = {"tokens": jnp.ones((2, 16), jnp.int32),
+                 "labels": jnp.ones((2, 16), jnp.int32)}
+        g = jax.grad(lambda p: loss_fn(p, cfg, batch)[0])(params)
+        assert all(bool(jnp.isfinite(x).all())
+                   for x in jax.tree_util.tree_leaves(g))
+
+
+class TestCrossKVCache:
+    def test_cached_decode_matches_recompute(self):
+        from repro.nn.attention import cross_kv_cache
+        cfg0 = get_arch("whisper-large-v3").reduced()
+        cfg1 = dataclasses.replace(cfg0, cache_cross_kv=True)
+        params = init_params(jax.random.PRNGKey(0), cfg0,
+                             dtype=jnp.float32)
+        b = 2
+        enc = jnp.asarray(
+            np.random.default_rng(0).normal(
+                size=(b, cfg0.encoder_frames, cfg0.d_model)) * 0.1,
+            jnp.float32)
+        c0 = init_decode_cache(cfg0, b, 16, dtype=jnp.float32)
+        c1 = init_decode_cache(cfg1, b, 16, dtype=jnp.float32)
+        c0["encoder_out"] = enc
+        c1["encoder_out"] = enc
+        gp = params["groups"][0]
+        c1["groups"][0]["cross_kv"] = jax.vmap(
+            lambda lp: cross_kv_cache(
+                lp["cross_attn"], enc, num_kv_heads=cfg1.num_heads,
+                head_dim=cfg1.resolved_head_dim))(gp)
+        tok = jnp.ones((b, 1), jnp.int32)
+        pos = jnp.zeros((b,), jnp.int32)
+        l0, _ = decode_step(params, cfg0, tok, c0, pos)
+        l1, _ = decode_step(params, cfg1, tok, c1, pos)
+        np.testing.assert_allclose(np.asarray(l1), np.asarray(l0),
+                                   rtol=1e-4, atol=1e-5)
+
+
+class TestShardingModes:
+    def test_1d_drops_tensor_axis(self):
+        from jax.sharding import PartitionSpec as P
+        from repro.sharding.rules import spec_for_param
+        mesh = jax.make_mesh((1, 1), ("data", "model"),
+                             devices=jax.devices()[:1])
+        s2d = spec_for_param(("attn", "w_q"), (64, 128), mesh, mode="2d")
+        s1d = spec_for_param(("attn", "w_q"), (64, 128), mesh, mode="1d")
+        assert s2d == P("data", "model")
+        assert s1d == P("data", None)
+
+    def test_model_flops_analytic(self):
+        """MODEL_FLOPS sanity: train ≈ 3× prefill per token; moe active
+        discount applied."""
+        from repro.launch import specs as S
+        cfg = get_arch("glm4-9b")
+        tr = S.model_flops(cfg, S.INPUT_SHAPES["train_4k"])
+        pf = S.model_flops(cfg, S.INPUT_SHAPES["prefill_32k"])
+        tokens_tr = 256 * 4096
+        tokens_pf = 32 * 32768
+        # per-token: train = 6N + attn(4k), prefill = 2N + attn(32k);
+        # the 3:1 param-term ratio is diluted by the longer prefill
+        # attention span, so the measured ratio sits in (2, 3)
+        ratio = (tr / tokens_tr) / (pf / tokens_pf)
+        assert 2.0 < ratio < 3.0
+
+    def test_scan_trip_counts(self):
+        from repro.launch.specs import scan_trip_count
+        assert scan_trip_count(get_arch("qwen3-32b")) == 64
+        assert scan_trip_count(get_arch("recurrentgemma-9b")) == 12
+        assert scan_trip_count(get_arch("deepseek-v2-lite-16b")) == 26
+
+
+class TestWKVKernelMode:
+    def test_kernel_mode_matches_sequential(self):
+        from repro.nn import recurrent as R
+        rng = np.random.default_rng(3)
+        p = R.rwkv_params(jax.random.PRNGKey(0), 32, 8)
+        x = jnp.asarray(rng.normal(size=(2, 32, 32)), jnp.float32)
+        seq = R.rwkv_apply(p, x, 8)
+        krn = R.rwkv_apply_kernel(p, x, 8, chunk=16)
+        np.testing.assert_allclose(np.asarray(krn), np.asarray(seq),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_kernel_mode_trains(self):
+        cfg = dataclasses.replace(get_arch("rwkv6-3b").reduced(),
+                                  rwkv_mode="chunked_kernel", rwkv_chunk=8)
+        params = init_params(jax.random.PRNGKey(0), cfg, dtype=jnp.float32)
+        batch = {"tokens": jnp.ones((2, 16), jnp.int32),
+                 "labels": jnp.ones((2, 16), jnp.int32)}
+        (loss, _), g = jax.value_and_grad(
+            lambda p: loss_fn(p, cfg, batch), has_aux=True)(params)
+        assert np.isfinite(float(loss))
+        assert all(bool(jnp.isfinite(x).all())
+                   for x in jax.tree_util.tree_leaves(g))
