@@ -1,0 +1,97 @@
+"""Input-pipeline benchmark: serial vs async epoch wall-clock and the
+host/device overlap fraction (the Fig. 6 bottleneck, attacked).
+
+Writes ``BENCH_pipeline.json`` next to the repo root so the perf trajectory
+of the input pipeline is recorded across PRs, and emits the usual CSV rows
+via ``benchmarks.run``.
+
+Run: PYTHONPATH=src python -m benchmarks.pipeline_bench [--full]
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List
+
+from benchmarks.common import emit
+import numpy as np
+
+JSON_PATH = os.path.join(os.path.dirname(__file__), "..",
+                         "BENCH_pipeline.json")
+
+
+def _measure(splits, kind: str, quick: bool) -> Dict[str, float]:
+    from repro.training import KGETrainer, TrainConfig
+
+    tr = KGETrainer(splits, TrainConfig(
+        num_trainers=4, strategy="vertex_cut", num_hops=2, hidden_dim=32,
+        num_negatives=1, batch_size=256, learning_rate=0.01, seed=0,
+        pipeline=kind))
+    tr.train_epoch()                      # warmup + compile epoch
+    epochs = 2 if quick else 5
+    walls, recs = [], []
+    for _ in range(epochs):
+        t0 = time.perf_counter()
+        rec = tr.train_epoch()
+        walls.append(time.perf_counter() - t0)
+        recs.append(rec)
+    return {
+        "epoch_wall_s": float(np.median(walls)),
+        "host_build_s": float(np.median(
+            [r["t_host_build"] for r in recs])),
+        "host_exposed_s": float(np.median(
+            [r["t_get_compute_graph"] for r in recs])),
+        "device_step_s": float(np.median(
+            [r["t_device_step"] for r in recs])),
+        "overlap_fraction": float(np.median(
+            [r["overlap_fraction"] for r in recs])),
+        "num_batches": int(recs[0]["num_batches"]),
+    }
+
+
+def run(quick: bool = True) -> List[Dict]:
+    from repro.data import synthetic_citation2
+
+    splits = synthetic_citation2(scale=0.0008 if quick else 0.002, seed=0)
+    kg = splits["train"]
+    results = {kind: _measure(splits, kind, quick)
+               for kind in ("serial", "async")}
+    speedup = results["serial"]["epoch_wall_s"] / \
+        max(results["async"]["epoch_wall_s"], 1e-9)
+
+    payload = {
+        "bench": "pipeline",
+        "graph": {"entities": int(kg.num_entities),
+                  "edges": int(kg.num_edges)},
+        "config": {"trainers": 4, "batch_size": 256, "num_hops": 2,
+                   "hidden_dim": 32, "quick": quick},
+        "serial": results["serial"],
+        "async": results["async"],
+        "async_speedup": round(speedup, 3),
+    }
+    with open(JSON_PATH, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+
+    rows = []
+    for kind in ("serial", "async"):
+        r = results[kind]
+        rows.append({
+            "name": kind,
+            "us_per_call": r["epoch_wall_s"] / max(r["num_batches"], 1)
+            * 1e6,
+            "epoch_wall_s": round(r["epoch_wall_s"], 3),
+            "host_exposed_s": round(r["host_exposed_s"], 3),
+            "overlap": round(r["overlap_fraction"], 3),
+        })
+    rows.append({
+        "name": "speedup",
+        "us_per_call": 0.0,
+        "async_over_serial": round(speedup, 3),
+    })
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(emit(run(), "pipeline")))

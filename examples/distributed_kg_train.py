@@ -22,6 +22,10 @@ def main() -> None:
     ap.add_argument("--updates", type=int, default=200,
                     help="total model updates (a few hundred)")
     ap.add_argument("--trainers", type=int, default=4)
+    ap.add_argument("--pipeline", default="async",
+                    choices=("async", "serial"),
+                    help="host input pipeline (async overlaps "
+                         "getComputeGraph with the device step)")
     args = ap.parse_args()
 
     splits = synthetic_citation2(scale=0.001, seed=0)
@@ -44,9 +48,10 @@ def main() -> None:
         num_trainers=args.trainers, strategy="vertex_cut", num_hops=2,
         hidden_dim=32, num_negatives=1, batch_size=512,
         learning_rate=0.01, epochs=10_000,   # bounded by --updates below
+        pipeline=args.pipeline,
     )
     trainer = KGETrainer(splits, cfg)
-    print(f"\ntraining: {args.trainers} trainers, "
+    print(f"\ntraining: {args.trainers} trainers ({cfg.pipeline} pipeline), "
           f"budget={trainer.budget}")
     updates = 0
     epoch = 0
@@ -57,6 +62,8 @@ def main() -> None:
         print(f"  epoch {epoch:2d}: loss={rec['loss']:.4f} "
               f"updates={updates:4d} "
               f"getComputeGraph={rec['t_get_compute_graph']:.2f}s "
+              f"(built {rec['t_host_build']:.2f}s, "
+              f"overlap {rec['overlap_fraction']:.0%}) "
               f"deviceStep={rec['t_device_step']:.2f}s")
 
     metrics = trainer.evaluate("valid")

@@ -32,19 +32,26 @@ def sample_epoch_negatives(
     rng: np.random.Generator,
     part: SelfSufficientPartition,
     num_negatives: int,
+    sampler: str = "constraint",
 ) -> np.ndarray:
-    """Constraint-based negatives for one epoch: corrupt head or tail of each
-    core edge with a uniform draw from the partition's CORE vertices
-    (local ids [0, num_core_vertices)).  Returns (E_core * s, 3) int32."""
+    """Negatives for one epoch: corrupt head or tail of each core edge with a
+    uniform draw from the partition's CORE vertices (``constraint``, local ids
+    [0, num_core_vertices)) or from ALL local vertices (``global`` — the
+    closed-world ablation restricted to the partition's address space, the
+    same restriction ``fullgraph_loss`` applies).  Returns (E_core * s, 3)
+    int32."""
+    if sampler not in ("constraint", "global"):
+        raise ValueError(f"unknown negative sampler {sampler!r}")
     pos = part.core_edges_local()
     e = pos.shape[0]
     s = num_negatives
     if e == 0 or s == 0:
         return np.zeros((0, 3), np.int32)
+    hi = part.num_core_vertices if sampler == "constraint" \
+        else part.num_local_vertices
     pos_rep = np.repeat(pos, s, axis=0)
     corrupt_head = rng.random(e * s) < 0.5
-    repl = rng.integers(0, max(part.num_core_vertices, 1),
-                        size=e * s).astype(np.int32)
+    repl = rng.integers(0, max(hi, 1), size=e * s).astype(np.int32)
     neg = pos_rep.copy()
     neg[corrupt_head, 0] = repl[corrupt_head]
     neg[~corrupt_head, 2] = repl[~corrupt_head]
@@ -67,6 +74,28 @@ class _PartitionCSR:
         self.dst = part.dst
 
     def in_edges_of(self, vertices: np.ndarray) -> np.ndarray:
+        """Concatenated in-edge spans of ``vertices`` (span order follows the
+        input order).  Vectorized: one ``np.repeat``-based gather instead of a
+        Python loop over per-vertex slices."""
+        v = np.asarray(vertices, dtype=np.int64)
+        if v.size == 0:
+            return np.zeros(0, np.int64)
+        starts = self.indptr[v]
+        counts = self.indptr[v + 1] - starts
+        total = int(counts.sum())
+        if total == 0:
+            return np.zeros(0, np.int64)
+        # index i of the output belongs to the span whose cumulative start
+        # offset was repeated into slot i; shift by the span's CSR start.
+        out_offsets = np.cumsum(counts) - counts
+        idx = (np.arange(total, dtype=np.int64)
+               - np.repeat(out_offsets, counts)
+               + np.repeat(starts, counts))
+        return self.sorted_eids[idx]
+
+    def in_edges_of_loop(self, vertices: np.ndarray) -> np.ndarray:
+        """Reference implementation (per-vertex span loop) kept for the
+        vectorization-equivalence tests."""
         if vertices.size == 0:
             return np.zeros(0, np.int64)
         spans = [
@@ -188,6 +217,19 @@ class BatchBudget:
     max_triplets: int
 
 
+def negatives_of_positives(
+    neg: np.ndarray, take: np.ndarray, num_negatives: int,
+) -> np.ndarray:
+    """Rows of the epoch negative table belonging to positive edges ``take``
+    — the pairing ``iterate_edge_minibatches`` uses (``s`` consecutive rows
+    per positive)."""
+    if neg.shape[0] == 0:
+        return np.zeros((0, 3), np.int32)
+    rows = (take[:, None] * num_negatives +
+            np.arange(num_negatives)[None, :]).reshape(-1)
+    return neg[rows]
+
+
 def plan_budgets(
     parts: Sequence[SelfSufficientPartition],
     batch_size: int,
@@ -196,26 +238,33 @@ def plan_budgets(
     seed: int = 0,
     probe_batches: int = 4,
     slack: float = 1.25,
+    sampler: str = "constraint",
 ) -> BatchBudget:
     """Probe a few random batches per partition to size the fixed budgets
     (then add slack and 128-align).  This replaces DGL's dynamic allocation:
-    budgets are a compile-time contract."""
+    budgets are a compile-time contract.
+
+    Probes pair each sampled positive with ITS OWN epoch negatives (the
+    ``s``-consecutive-rows pairing ``iterate_edge_minibatches`` uses), not
+    with the first ``batch*s`` rows of the epoch table — the latter probes a
+    different seed set than training ever builds and can under-measure the
+    comp-graph budget."""
     rng = np.random.default_rng(seed)
     v_hi, e_hi = 1, 1
     t_hi = batch_size * (1 + num_negatives)
     for part in parts:
         csr = _PartitionCSR(part)
         pos = part.core_edges_local()
+        neg = sample_epoch_negatives(rng, part, num_negatives, sampler)
         for _ in range(probe_batches):
             take = rng.choice(pos.shape[0],
                               size=min(batch_size, pos.shape[0]),
                               replace=False)
             batch_pos = pos[take]
-            neg = sample_epoch_negatives(
-                rng, part, num_negatives)[: take.shape[0] * num_negatives]
+            batch_neg = negatives_of_positives(neg, take, num_negatives)
             seeds = np.unique(
                 np.concatenate([batch_pos[:, [0, 2]].reshape(-1),
-                                neg[:, [0, 2]].reshape(-1)]))
+                                batch_neg[:, [0, 2]].reshape(-1)]))
             verts, eids = build_comp_graph(part, seeds, num_hops, csr)
             v_hi = max(v_hi, verts.shape[0])
             e_hi = max(e_hi, eids.shape[0])
@@ -234,22 +283,20 @@ def iterate_edge_minibatches(
     num_hops: int,
     budget: BatchBudget,
     csr: Optional[_PartitionCSR] = None,
+    sampler: str = "constraint",
 ) -> Iterator[EdgeMiniBatch]:
     """One epoch of Algorithm 1 on one partition: epoch negatives, shuffled
     positive batches, each with its ``s`` negatives and comp graph."""
     csr = csr or _PartitionCSR(part)
     pos = part.core_edges_local()
     e = pos.shape[0]
-    neg = sample_epoch_negatives(rng, part, num_negatives)
+    neg = sample_epoch_negatives(rng, part, num_negatives, sampler)
     perm = rng.permutation(e)
     for lo in range(0, e, batch_size):
         take = perm[lo: lo + batch_size]
         batch_pos = pos[take]
         # negatives of these positives (s per positive, epoch-sampled)
-        neg_rows = (take[:, None] * num_negatives +
-                    np.arange(num_negatives)[None, :]).reshape(-1)
-        batch_neg = neg[neg_rows] if neg.shape[0] else \
-            np.zeros((0, 3), np.int32)
+        batch_neg = negatives_of_positives(neg, take, num_negatives)
         trip = np.concatenate([batch_pos, batch_neg], axis=0)
         labels = np.concatenate(
             [np.ones(batch_pos.shape[0], np.float32),

@@ -53,6 +53,7 @@ def vertex_cut_partition(
     seed: int = 0,
     balance_slack: float = 1.05,
     hdrf_lambda: float = 1.0,
+    chunk_size: int = 4096,
 ) -> List[EdgePartition]:
     """Greedy streaming vertex-cut (HDRF).
 
@@ -64,6 +65,14 @@ def vertex_cut_partition(
     the LOWER-degree endpoint (HDRF's "highest-degree replicated first":
     replicate hubs, keep tails whole).  Hard balance cap at
     ``balance_slack * E / P``.
+
+    Chunked streaming: the replication-gain matrices for a whole block of
+    ``chunk_size`` edges are scored with one numpy gather (endpoint degrees,
+    theta weights, ``replicas`` rows); the sequential sweep inside a chunk
+    only re-gathers the rows of vertices whose replica set changed since the
+    chunk was scored ("dirty" rows).  Bitwise identical to the per-edge
+    reference (``_vertex_cut_partition_loop``) — same IEEE op order per edge
+    — while amortizing the Python/numpy dispatch overhead over the block.
     """
     p = num_partitions
     if p <= 0:
@@ -79,6 +88,87 @@ def vertex_cut_partition(
     # replica sets as bitmaps: (N, P) bool — fine for host preprocessing at
     # the scales we run; production would use hash sets per vertex.
     replicas = np.zeros((kg.num_entities, p), dtype=bool)
+    dirty = np.zeros(kg.num_entities, dtype=bool)
+    load = np.zeros(p, dtype=np.int64)
+    cap = int(np.ceil(balance_slack * e / p))
+    assign = np.empty(e, dtype=np.int32)
+    lam = hdrf_lambda
+
+    src, dst = kg.src, kg.dst
+    for lo in range(0, e, chunk_size):
+        chunk = order[lo: lo + chunk_size]
+        us = src[chunk].astype(np.int64)
+        vs = dst[chunk].astype(np.int64)
+        du = deg[us]
+        dv = deg[vs]
+        theta_u = du / (du + dv + 1e-9)
+        theta_v = 1.0 - theta_u
+        # HDRF degree-weighted replication gain: +1 (+ bias towards the
+        # smaller-degree endpoint) for each endpoint already present.
+        w_u = 1.0 + (1.0 - theta_u)
+        w_v = 1.0 + (1.0 - theta_v)
+        g_u_blk = replicas[us] * w_u[:, None]     # (C, P) block score
+        g_v_blk = replicas[vs] * w_v[:, None]
+        dirty[us] = False                         # block rows are fresh
+        dirty[vs] = False
+        # maxload/minload tracked incrementally (only load[best] changes per
+        # step) — same values as load.max()/load.min(), fewer reductions.
+        maxload = int(load.max())
+        minload = int(load.min())
+        n_capped = int((load >= cap).sum())
+        for j in range(chunk.shape[0]):
+            u = us[j]
+            v = vs[j]
+            g_u = replicas[u] * w_u[j] if dirty[u] else g_u_blk[j]
+            g_v = replicas[v] * w_v[j] if dirty[v] else g_v_blk[j]
+            bal = lam * (maxload - load) / (1e-9 + maxload - minload + 1.0)
+            score = g_u + g_v + bal
+            if n_capped:
+                score[load >= cap] = -np.inf
+            best = int(np.argmax(score))
+            assign[chunk[j]] = best
+            old = int(load[best])
+            load[best] = old + 1
+            if old + 1 > maxload:
+                maxload = old + 1
+            if old == minload and not (load == minload).any():
+                minload += 1          # load only ever grows by 1
+            if old + 1 == cap:
+                n_capped += 1
+            if not replicas[u, best]:
+                replicas[u, best] = True
+                dirty[u] = True
+            if not replicas[v, best]:
+                replicas[v, best] = True
+                dirty[v] = True
+
+    return [
+        EdgePartition(np.nonzero(assign == i)[0].astype(np.int64))
+        for i in range(p)
+    ]
+
+
+def _vertex_cut_partition_loop(
+    kg: KnowledgeGraph,
+    num_partitions: int,
+    seed: int = 0,
+    balance_slack: float = 1.05,
+    hdrf_lambda: float = 1.0,
+) -> List[EdgePartition]:
+    """Per-edge reference HDRF (the pre-vectorization implementation), kept
+    for the chunked-equivalence tests."""
+    p = num_partitions
+    if p <= 0:
+        raise ValueError("num_partitions must be >= 1")
+    e = kg.num_edges
+    if p == 1:
+        return [EdgePartition(np.arange(e, dtype=np.int64))]
+
+    rng = np.random.default_rng(seed)
+    order = rng.permutation(e)
+    deg = kg.degrees().astype(np.float64)
+
+    replicas = np.zeros((kg.num_entities, p), dtype=bool)
     load = np.zeros(p, dtype=np.int64)
     cap = int(np.ceil(balance_slack * e / p))
     assign = np.empty(e, dtype=np.int32)
@@ -89,8 +179,6 @@ def vertex_cut_partition(
         du, dv = deg[u], deg[v]
         theta_u = du / (du + dv + 1e-9)
         theta_v = 1.0 - theta_u
-        # HDRF degree-weighted replication gain: +1 (+ bias towards the
-        # smaller-degree endpoint) for each endpoint already present.
         g_u = replicas[u] * (1.0 + (1.0 - theta_u))
         g_v = replicas[v] * (1.0 + (1.0 - theta_v))
         maxload = load.max()

@@ -1,8 +1,16 @@
-"""Data pipeline: KG datasets (real-format loader + synthetic stand-ins) and
-LM token streams."""
+"""Data pipeline: KG datasets (real-format loader + synthetic stand-ins),
+LM token streams, and the async/serial input pipelines feeding the SPMD
+training step."""
 from repro.data.datasets import (
     load_fb15k_format, synthetic_fb15k, synthetic_citation2,
     load_or_synthesize, TokenStream,
 )
+from repro.data.pipeline import (
+    AsyncMinibatchPipeline, FullGraphPipeline, InputPipeline, PipelineStats,
+    SerialMinibatchPipeline, make_input_pipeline, to_device_batch,
+)
 __all__ = ["load_fb15k_format", "synthetic_fb15k", "synthetic_citation2",
-           "load_or_synthesize", "TokenStream"]
+           "load_or_synthesize", "TokenStream",
+           "AsyncMinibatchPipeline", "FullGraphPipeline", "InputPipeline",
+           "PipelineStats", "SerialMinibatchPipeline", "make_input_pipeline",
+           "to_device_batch"]

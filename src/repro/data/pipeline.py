@@ -1,0 +1,397 @@
+"""Input pipelines: host mini-batch construction decoupled from the device
+step (paper Fig. 6; DGL-KE's overlap argument).
+
+The paper's component breakdown shows ``getComputeGraph`` — host mini-batch
+construction — dominating epoch time on their stack.  Our serial trainer
+reproduced that: build every partition's batch, then block on the device.
+This module turns the host data path into a proper pipeline:
+
+    worker thread (one per partition)
+        iterate_edge_minibatches → bounded prefetch queue
+    collator
+        zip one batch per partition → stack on the trainer axis
+    double buffer
+        host→device transfer of batch k+1 while the device runs batch k
+
+Three implementations share one contract (``InputPipeline``):
+
+* ``SerialMinibatchPipeline`` — the reference: build inline, no overlap.
+  Defines the ground-truth batch stream; the async pipeline must match it
+  bitwise (see ``tests/test_pipeline.py``).
+* ``AsyncMinibatchPipeline`` — one background worker per partition feeding a
+  bounded ``queue.Queue``; batch streams are identical because each partition
+  owns a deterministic per-epoch RNG and the collator zips queues in
+  partition order (exactly the serial zip, truncated at the shortest stream).
+* ``FullGraphPipeline`` — the full-edge-batch mode (one resident padded
+  batch per epoch); trivially prefetched since the batch is device-cached.
+
+Timing contract (``PipelineStats``): ``host_build_s`` is the CPU time spent
+constructing batches (summed over workers); ``exposed_wait_s`` is the part
+of it the consumer actually waited for — the host time left on the critical
+path.  ``overlap_fraction`` = 1 − exposed/build is the benchmark's headline
+number.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import Dict, Iterator, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.expansion import PaddedPartitionBatch, SelfSufficientPartition
+from repro.core.minibatch import (
+    BatchBudget, EdgeMiniBatch, _PartitionCSR, iterate_edge_minibatches,
+    stack_minibatches,
+)
+
+
+@dataclasses.dataclass
+class PipelineStats:
+    """Per-epoch host-side timing of one pipeline run.
+
+    ``host_build_s`` is wall time measured inside the builders; when workers
+    overlap the device step it includes GIL/scheduler interference, so it
+    upper-bounds the pure CPU cost (serial runs measure the pure cost).  It
+    also includes batches built ahead but never consumed (the prefetched
+    tail past the shortest partition stream), so compare overlap fractions
+    on balanced partitions / multi-batch epochs where that tail is noise.
+    """
+
+    host_build_s: float = 0.0    # total batch-construction time (workers)
+    exposed_wait_s: float = 0.0  # construction time on the critical path
+    num_batches: int = 0
+
+    def overlap_fraction(self) -> float:
+        """Fraction of host build time hidden behind the device step."""
+        if self.host_build_s <= 0.0:
+            return 0.0
+        return max(0.0, 1.0 - self.exposed_wait_s / self.host_build_s)
+
+
+def to_device_batch(mb: EdgeMiniBatch) -> Dict[str, "jax.Array"]:
+    """Host→device transfer of one stacked mini-batch (field-name dict, the
+    layout the SPMD step consumes)."""
+    import jax.numpy as jnp
+    return {f.name: jnp.asarray(getattr(mb, f.name))
+            for f in dataclasses.fields(mb)}
+
+
+class InputPipeline:
+    """One training epoch's worth of device-ready batches.
+
+    ``epoch_batches(epoch)`` yields the HOST-side batch stream (stacked
+    ``EdgeMiniBatch`` for mini-batch pipelines, a field dict for the
+    full-graph pipeline); ``device_batches(epoch)`` yields the same stream as
+    device arrays.  ``last_stats`` describes the most recently completed
+    epoch.  Streams are deterministic functions of (seed, epoch), so any two
+    implementations with the same parameters are interchangeable.
+    """
+
+    def __init__(self) -> None:
+        self._stats = PipelineStats()
+
+    @property
+    def last_stats(self) -> PipelineStats:
+        return self._stats
+
+    def epoch_batches(self, epoch: int) -> Iterator:
+        raise NotImplementedError
+
+    def device_batches(self, epoch: int) -> Iterator[Dict]:
+        for mb in self.epoch_batches(epoch):
+            yield to_device_batch(mb)
+
+    def close(self) -> None:
+        """Release background resources (workers are per-epoch, so the base
+        implementation has nothing to do)."""
+
+
+# ====================================================================== #
+# Mini-batch pipelines (Algorithm 1 inner loop)
+# ====================================================================== #
+class _MinibatchPipelineBase(InputPipeline):
+    def __init__(
+        self,
+        partitions: Sequence[SelfSufficientPartition],
+        batch_size: int,
+        num_negatives: int,
+        num_hops: int,
+        budget: BatchBudget,
+        seed: int = 0,
+        sampler: str = "constraint",
+        csrs: Optional[Sequence[_PartitionCSR]] = None,
+    ):
+        super().__init__()
+        self.partitions = list(partitions)
+        self.batch_size = batch_size
+        self.num_negatives = num_negatives
+        self.num_hops = num_hops
+        self.budget = budget
+        self.seed = seed
+        self.sampler = sampler
+        self.csrs = list(csrs) if csrs is not None else [
+            _PartitionCSR(p) for p in self.partitions]
+
+    def partition_stream(self, epoch: int, i: int) -> Iterator[EdgeMiniBatch]:
+        """Partition ``i``'s deterministic batch stream for ``epoch`` — the
+        unit of work a serial step or an async worker consumes.  The RNG
+        derivation is the pipeline's reproducibility contract: any two
+        pipelines with equal (seed, epoch, i) produce equal streams."""
+        rng = np.random.default_rng(
+            hash((self.seed, epoch, i)) % (2 ** 31))
+        return iterate_edge_minibatches(
+            rng, self.partitions[i], self.batch_size, self.num_negatives,
+            self.num_hops, self.budget, self.csrs[i], self.sampler)
+
+
+class SerialMinibatchPipeline(_MinibatchPipelineBase):
+    """Reference implementation: builds every partition's batch inline, so
+    all host work is exposed (``overlap_fraction == 0``)."""
+
+    def epoch_batches(self, epoch: int) -> Iterator[EdgeMiniBatch]:
+        stats = self._stats = PipelineStats()
+        iters = [self.partition_stream(epoch, i)
+                 for i in range(len(self.partitions))]
+        while True:
+            t0 = time.perf_counter()
+            try:
+                mbs = [next(it) for it in iters]
+            except StopIteration:
+                break
+            dt = time.perf_counter() - t0
+            stats.host_build_s += dt
+            stats.exposed_wait_s += dt
+            stats.num_batches += 1
+            yield stack_minibatches(mbs)
+
+
+class _PipelineError:
+    """Sentinel carrying a worker exception to the consumer thread."""
+
+    def __init__(self, exc: BaseException):
+        self.exc = exc
+
+
+_END = object()
+
+
+def _put(q: "queue.Queue", item, stop: threading.Event) -> bool:
+    """Blocking put that gives up when the consumer signalled stop (so
+    workers never deadlock on a full queue after early termination)."""
+    while not stop.is_set():
+        try:
+            q.put(item, timeout=0.05)
+            return True
+        except queue.Full:
+            continue
+    return False
+
+
+def _get(q: "queue.Queue", stop: threading.Event):
+    """Blocking get that resolves to end-of-stream when stop is signalled
+    and nothing is left (a producer that aborted on stop puts no sentinel)."""
+    while True:
+        try:
+            return q.get(timeout=0.05)
+        except queue.Empty:
+            if stop.is_set():
+                return _END
+
+
+class AsyncMinibatchPipeline(_MinibatchPipelineBase):
+    """One background worker per partition feeding a bounded prefetch queue;
+    ``device_batches`` adds a collator thread that stacks + transfers the
+    next batch while the device executes the current one (double buffer).
+
+    Yields the bitwise-identical stream to ``SerialMinibatchPipeline``: each
+    partition's RNG and batch order live entirely in its own worker, and the
+    collator consumes queues in partition order, stopping at the first
+    exhausted stream — the same zip-shortest semantics as the serial loop.
+    """
+
+    def __init__(self, *args, prefetch: int = 2, **kwargs):
+        super().__init__(*args, **kwargs)
+        if prefetch < 1:
+            raise ValueError("prefetch depth must be >= 1")
+        self.prefetch = prefetch
+
+    # ------------------------------------------------------------------ #
+    def _start_workers(self, epoch: int, stop: threading.Event):
+        n = len(self.partitions)
+        queues: List[queue.Queue] = [
+            queue.Queue(maxsize=self.prefetch) for _ in range(n)]
+        build_s = [0.0] * n
+
+        def work(i: int) -> None:
+            try:
+                it = self.partition_stream(epoch, i)
+                while not stop.is_set():
+                    t0 = time.perf_counter()
+                    try:
+                        mb = next(it)
+                    except StopIteration:
+                        break
+                    build_s[i] += time.perf_counter() - t0
+                    if not _put(queues[i], mb, stop):
+                        return
+                _put(queues[i], _END, stop)
+            except BaseException as exc:  # propagate into the consumer
+                _put(queues[i], _PipelineError(exc), stop)
+
+        threads = [
+            threading.Thread(target=work, args=(i,),
+                             name=f"pipeline-worker-{i}", daemon=True)
+            for i in range(n)
+        ]
+        for t in threads:
+            t.start()
+        return queues, threads, build_s
+
+    def _shutdown(self, stop, queues, threads, stats, build_s) -> None:
+        stop.set()
+        for q in queues:            # unblock workers stuck on a full queue
+            while True:
+                try:
+                    q.get_nowait()
+                except queue.Empty:
+                    break
+        for t in threads:
+            t.join(timeout=5.0)
+        stats.host_build_s = float(sum(build_s))
+
+    def _collate(self, queues, stats: PipelineStats, stop: threading.Event,
+                 timed: bool) -> Iterator[EdgeMiniBatch]:
+        """Zip one batch per partition queue (partition order), stacking on
+        the trainer axis; stop at the first exhausted stream."""
+        while True:
+            mbs = []
+            for q in queues:
+                t0 = time.perf_counter()
+                item = _get(q, stop)
+                if timed:
+                    stats.exposed_wait_s += time.perf_counter() - t0
+                if isinstance(item, _PipelineError):
+                    raise RuntimeError(
+                        "input pipeline worker failed") from item.exc
+                if item is _END:
+                    return
+                mbs.append(item)
+            stats.num_batches += 1
+            yield stack_minibatches(mbs)
+
+    # ------------------------------------------------------------------ #
+    def epoch_batches(self, epoch: int) -> Iterator[EdgeMiniBatch]:
+        stats = self._stats = PipelineStats()
+        stop = threading.Event()
+        queues, threads, build_s = self._start_workers(epoch, stop)
+        try:
+            yield from self._collate(queues, stats, stop, timed=True)
+        finally:
+            self._shutdown(stop, queues, threads, stats, build_s)
+
+    def device_batches(self, epoch: int) -> Iterator[Dict]:
+        """Double-buffered host→device path: a collator thread stacks the
+        partition batches and issues the device transfer one step ahead, so
+        the consumer's ``next()`` returns an already-resident batch."""
+        stats = self._stats = PipelineStats()
+        stop = threading.Event()
+        queues, threads, build_s = self._start_workers(epoch, stop)
+        xfer_q: queue.Queue = queue.Queue(maxsize=2)   # double buffer
+
+        def collate_and_transfer() -> None:
+            try:
+                for mb in self._collate(queues, stats, stop, timed=False):
+                    if not _put(xfer_q, to_device_batch(mb), stop):
+                        return
+                _put(xfer_q, _END, stop)
+            except BaseException as exc:
+                _put(xfer_q, _PipelineError(exc), stop)
+
+        collator = threading.Thread(
+            target=collate_and_transfer, name="pipeline-collator",
+            daemon=True)
+        collator.start()
+        try:
+            while True:
+                t0 = time.perf_counter()
+                item = _get(xfer_q, stop)
+                stats.exposed_wait_s += time.perf_counter() - t0
+                if isinstance(item, _PipelineError):
+                    raise RuntimeError(
+                        "input pipeline worker failed") from item.exc
+                if item is _END:
+                    return
+                yield item
+        finally:
+            stop.set()
+            while True:
+                try:
+                    xfer_q.get_nowait()
+                except queue.Empty:
+                    break
+            collator.join(timeout=5.0)
+            self._shutdown(stop, queues, threads, stats, build_s)
+
+
+# ====================================================================== #
+# Full-graph pipeline (paper's FB15k-237 configuration)
+# ====================================================================== #
+class FullGraphPipeline(InputPipeline):
+    """One full-edge-batch per epoch: every padded partition stacked on the
+    trainer axis, transferred to device ONCE and reused every epoch (the
+    batch is epoch-invariant; per-epoch randomness lives in the PRNG keys)."""
+
+    def __init__(self, padded: PaddedPartitionBatch):
+        super().__init__()
+        self._host = {f.name: getattr(padded, f.name)
+                      for f in dataclasses.fields(padded)}
+        self._device: Optional[Dict] = None
+
+    def epoch_batches(self, epoch: int) -> Iterator[Dict]:
+        self._stats = PipelineStats(num_batches=1)
+        yield self._host
+
+    def device_batches(self, epoch: int) -> Iterator[Dict]:
+        import jax.numpy as jnp
+        if self._device is None:
+            self._device = {k: jnp.asarray(v) for k, v in self._host.items()}
+        self._stats = PipelineStats(num_batches=1)
+        yield self._device
+
+
+# ====================================================================== #
+# Factory
+# ====================================================================== #
+PIPELINES = {
+    "serial": SerialMinibatchPipeline,
+    "async": AsyncMinibatchPipeline,
+}
+
+
+def make_input_pipeline(
+    kind: str,
+    partitions: Sequence[SelfSufficientPartition],
+    *,
+    batch_size: int,
+    num_negatives: int,
+    num_hops: int,
+    budget: BatchBudget,
+    seed: int = 0,
+    sampler: str = "constraint",
+    csrs: Optional[Sequence[_PartitionCSR]] = None,
+    prefetch: int = 2,
+) -> InputPipeline:
+    """Build a mini-batch input pipeline (``serial`` reference or ``async``
+    prefetching)."""
+    if kind not in PIPELINES:
+        raise ValueError(
+            f"unknown pipeline {kind!r}; choose from {sorted(PIPELINES)}")
+    kw = dict(batch_size=batch_size, num_negatives=num_negatives,
+              num_hops=num_hops, budget=budget, seed=seed, sampler=sampler,
+              csrs=csrs)
+    if kind == "async":
+        kw["prefetch"] = prefetch
+    return PIPELINES[kind](partitions, **kw)

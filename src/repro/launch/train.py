@@ -40,15 +40,19 @@ def train_kge(args) -> None:
         base, num_trainers=args.trainers, epochs=args.epochs,
         batch_size=args.batch_size if args.batch_size > 0 else
         (None if name == "fb15k-237" else 4096),
-        strategy=args.strategy, use_kernel=args.use_kernel)
+        strategy=args.strategy, use_kernel=args.use_kernel,
+        pipeline=args.pipeline, prefetch=args.prefetch)
     print(f"[train] {name}: {splits['train'].num_edges} train edges, "
           f"{splits['train'].num_entities} entities; "
-          f"{cfg.num_trainers} trainers ({cfg.strategy})")
+          f"{cfg.num_trainers} trainers ({cfg.strategy}, "
+          f"{cfg.pipeline} pipeline)")
     trainer = KGETrainer(splits, cfg)
     print(f"[train] RF={trainer.replication_factor:.2f}")
     trainer.fit(log_fn=lambda r: print(
         f"  epoch {r['epoch']:3d} loss={r['loss']:.4f} "
-        f"t={r['t_epoch']:.2f}s (host {r['t_get_compute_graph']:.2f}s)"))
+        f"t={r['t_epoch']:.2f}s (host exposed "
+        f"{r['t_get_compute_graph']:.2f}s of {r['t_host_build']:.2f}s, "
+        f"overlap {r['overlap_fraction']:.0%})"))
     print("[eval]", trainer.evaluate("test"))
 
 
@@ -103,6 +107,11 @@ def main() -> None:
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--scale", type=float, default=0.01)
     ap.add_argument("--strategy", default="vertex_cut")
+    ap.add_argument("--pipeline", default="async",
+                    choices=("async", "serial"),
+                    help="host input pipeline for mini-batch training")
+    ap.add_argument("--prefetch", type=int, default=2,
+                    help="per-partition prefetch queue depth")
     ap.add_argument("--data-root", default=None)
     ap.add_argument("--use-kernel", action="store_true")
     ap.add_argument("--reduced", action="store_true", default=True)

@@ -9,5 +9,7 @@ from repro.training.distributed import (
 from repro.training.checkpoint import (
     save_checkpoint, restore_checkpoint, latest_checkpoint,
 )
+from repro.training.preprocessing import PreprocessedGraph, preprocess_graph
+from repro.training.evaluation import encode_all_entities, evaluate_split
 from repro.training.trainer import KGETrainer, TrainConfig
 __all__ = [n for n in dir() if not n.startswith("_")]

@@ -1,0 +1,71 @@
+"""Offline preprocessing (paper §3.2): partition → expand → pad → budgets.
+
+One function, one artifact: ``preprocess_graph`` turns a training KG into a
+``PreprocessedGraph`` holding everything the input pipeline and the SPMD
+step need — self-sufficient partitions, the padded full-graph batch, the
+replication factor (paper Eq. 7), and (in mini-batch mode) the comp-graph
+budgets plus per-partition CSR indices.  The trainer, the launch CLI, the
+examples and the benchmarks all go through this seam, so preprocessing can
+be cached/sharded later without touching any of them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+from repro.core import (
+    BatchBudget, KnowledgeGraph, expand_all, pad_partitions, partition_graph,
+    plan_budgets, replication_factor,
+)
+from repro.core.expansion import PaddedPartitionBatch, SelfSufficientPartition
+from repro.core.minibatch import _PartitionCSR
+
+
+@dataclasses.dataclass
+class PreprocessedGraph:
+    """Everything downstream of offline preprocessing."""
+
+    train_kg: KnowledgeGraph
+    partitions: List[SelfSufficientPartition]
+    padded: PaddedPartitionBatch
+    replication_factor: float
+    # mini-batch mode only:
+    budget: Optional[BatchBudget] = None
+    csrs: Optional[List[_PartitionCSR]] = None
+
+    @property
+    def num_partitions(self) -> int:
+        return len(self.partitions)
+
+
+def preprocess_graph(
+    train_kg: KnowledgeGraph,
+    *,
+    num_trainers: int,
+    strategy: str = "vertex_cut",
+    num_hops: int = 2,
+    seed: int = 0,
+    batch_size: Optional[int] = None,
+    num_negatives: int = 1,
+    sampler: str = "constraint",
+) -> PreprocessedGraph:
+    """Partition ``train_kg`` and make every partition self-sufficient.
+
+    With ``batch_size`` set, also probes the comp-graph budgets (sized
+    against the same positive↔negative pairing the mini-batch iterator uses)
+    and builds the per-partition in-edge CSRs the hot path gathers from.
+    """
+    parts = partition_graph(train_kg, num_trainers, strategy, seed=seed)
+    partitions = expand_all(train_kg, parts, num_hops)
+    pre = PreprocessedGraph(
+        train_kg=train_kg,
+        partitions=partitions,
+        padded=pad_partitions(partitions),
+        replication_factor=replication_factor(train_kg, parts),
+    )
+    if batch_size is not None:
+        pre.budget = plan_budgets(
+            partitions, batch_size, num_negatives, num_hops, seed=seed,
+            sampler=sampler)
+        pre.csrs = [_PartitionCSR(p) for p in partitions]
+    return pre

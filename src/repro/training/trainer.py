@@ -1,41 +1,44 @@
 """End-to-end distributed KGE training driver — paper Algorithm 1 + §4.
 
-Pipeline: partition → neighborhood-expand → pad → per-epoch (negative
-sampling → edge mini-batches → grad → AllReduce-average → update) → filtered
-evaluation.  Runs the simulated-trainer step on CPU (mathematically identical
-averaging to the shard_map step used on real meshes — see
-``repro.training.distributed``).
+The trainer is a thin composition of four seams, each usable on its own:
+
+* ``repro.training.preprocessing``  — partition → expand → pad → budgets;
+* ``repro.data.pipeline``           — serial/async host input pipelines
+  (``getComputeGraph`` off the device critical path, double-buffered
+  host→device transfer);
+* ``repro.training.distributed``    — the SPMD step (vmap simulation on CPU,
+  shard_map on real meshes; mathematically identical averaging);
+* ``repro.training.evaluation``     — full-graph encoding + filtered ranking.
 
 Timing instrumentation mirrors the paper's Fig. 6 component breakdown:
-``getComputeGraph`` (host mini-batch construction), ``GNNmodel+loss+backward+
-step`` (the fused device step — XLA fuses what PyTorch runs as three separate
-phases), reported per epoch by the benchmarks.
+``t_get_compute_graph`` is the host batch-construction time left on the
+critical path (== all of it for the serial pipeline; the exposed remainder
+for the async pipeline), ``t_host_build`` the total host construction time,
+``overlap_fraction`` how much of it the pipeline hid behind the device step.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Dict, List, Optional
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (
-    BatchBudget, KnowledgeGraph, expand_all, iterate_edge_minibatches,
-    pad_partitions, partition_graph, plan_budgets, stack_minibatches,
-    replication_factor,
+from repro.core import KnowledgeGraph
+from repro.data.pipeline import (
+    FullGraphPipeline, InputPipeline, make_input_pipeline,
 )
-from repro.core.minibatch import _PartitionCSR
-from repro.eval.ranking import evaluate_both_directions
 from repro.models import (
-    KGEConfig, RGCNConfig, encode_partition, fullgraph_loss, init_kge_params,
-    minibatch_loss,
+    KGEConfig, RGCNConfig, fullgraph_loss, init_kge_params, minibatch_loss,
 )
 from repro.training import optimizer as opt_lib
 from repro.training.distributed import (
     make_simulated_train_step, split_trainer_keys,
 )
+from repro.training.evaluation import encode_all_entities, evaluate_split
+from repro.training.preprocessing import PreprocessedGraph, preprocess_graph
 
 
 @dataclasses.dataclass
@@ -55,10 +58,13 @@ class TrainConfig:
     seed: int = 0
     use_kernel: bool = False
     eval_every: int = 0                 # 0 => only at end
+    pipeline: str = "async"             # "async" | "serial" input pipeline
+    prefetch: int = 2                   # per-partition prefetch queue depth
 
 
 class KGETrainer:
-    """Owns the partitioned data, model params and the SPMD step."""
+    """Owns the preprocessed data, model params, input pipeline and the
+    SPMD step."""
 
     def __init__(self, splits: Dict[str, KnowledgeGraph], cfg: TrainConfig):
         self.cfg = cfg
@@ -67,11 +73,13 @@ class KGETrainer:
         self.train_kg = train_kg
 
         # ---- offline preprocessing (paper §3.2) ----
-        parts = partition_graph(
-            train_kg, cfg.num_trainers, cfg.strategy, seed=cfg.seed)
-        self.partitions = expand_all(train_kg, parts, cfg.num_hops)
-        self.padded = pad_partitions(self.partitions)
-        self.replication_factor = replication_factor(train_kg, parts)
+        self.pre: PreprocessedGraph = preprocess_graph(
+            train_kg,
+            num_trainers=cfg.num_trainers, strategy=cfg.strategy,
+            num_hops=cfg.num_hops, seed=cfg.seed,
+            batch_size=cfg.batch_size, num_negatives=cfg.num_negatives,
+            sampler=cfg.negative_sampler,
+        )
 
         # ---- model ----
         feat = train_kg.features
@@ -101,20 +109,45 @@ class KGETrainer:
         self._epoch = 0
         self.timings: List[Dict[str, float]] = []
 
-        if cfg.batch_size is None:
+        # ---- input pipeline + SPMD step ----
+        self._fullgraph = cfg.batch_size is None
+        if self._fullgraph:
             self._step = make_simulated_train_step(
                 self._fullgraph_loss, optimizer)
-            self._device_parts = {
-                f.name: jnp.asarray(getattr(self.padded, f.name))
-                for f in dataclasses.fields(self.padded)
-            }
+            self.pipeline: InputPipeline = FullGraphPipeline(self.pre.padded)
         else:
             self._step = make_simulated_train_step(
                 self._minibatch_loss, optimizer)
-            self.budget: BatchBudget = plan_budgets(
-                self.partitions, cfg.batch_size, cfg.num_negatives,
-                cfg.num_hops, seed=cfg.seed)
-            self._csrs = [_PartitionCSR(p) for p in self.partitions]
+            self.pipeline = make_input_pipeline(
+                cfg.pipeline, self.pre.partitions,
+                batch_size=cfg.batch_size,
+                num_negatives=cfg.num_negatives,
+                num_hops=cfg.num_hops,
+                budget=self.pre.budget,
+                seed=cfg.seed,
+                sampler=cfg.negative_sampler,
+                csrs=self.pre.csrs,
+                prefetch=cfg.prefetch,
+            )
+
+    # ------------------------------------------------------------------ #
+    # preprocessing artifacts (stable public surface)
+    # ------------------------------------------------------------------ #
+    @property
+    def partitions(self):
+        return self.pre.partitions
+
+    @property
+    def padded(self):
+        return self.pre.padded
+
+    @property
+    def replication_factor(self) -> float:
+        return self.pre.replication_factor
+
+    @property
+    def budget(self):
+        return self.pre.budget
 
     # ------------------------------------------------------------------ #
     def _fullgraph_loss(self, params, batch, key):
@@ -129,58 +162,34 @@ class KGETrainer:
     def train_epoch(self) -> Dict[str, float]:
         cfg = self.cfg
         self._epoch += 1
-        t_host = 0.0
         t_device = 0.0
         losses = []
         keys = split_trainer_keys(self._key, cfg.num_trainers, self._epoch)
 
-        if cfg.batch_size is None:
-            # full edge batch: one model update per epoch (paper FB15k-237)
+        nbatches = 0
+        for batch in self.pipeline.device_batches(self._epoch):
+            if self._fullgraph:
+                skeys = keys     # one update per epoch; keys already fresh
+            else:
+                skeys = jax.vmap(jax.random.fold_in, (0, None))(
+                    keys, nbatches)
             t0 = time.perf_counter()
             self.params, self.opt_state, m = self._step(
-                self.params, self.opt_state, self._device_parts, keys)
+                self.params, self.opt_state, batch, skeys)
             jax.block_until_ready(m["loss"])
             t_device += time.perf_counter() - t0
             losses.append(float(m["loss"]))
-            nbatches = 1
-        else:
-            rngs = [np.random.default_rng(
-                hash((cfg.seed, self._epoch, i)) % (2 ** 31))
-                for i in range(cfg.num_trainers)]
-            iters = [
-                iterate_edge_minibatches(
-                    rngs[i], self.partitions[i], cfg.batch_size,
-                    cfg.num_negatives, cfg.num_hops, self.budget,
-                    self._csrs[i])
-                for i in range(cfg.num_trainers)
-            ]
-            nbatches = 0
-            while True:
-                t0 = time.perf_counter()
-                try:
-                    mbs = [next(it) for it in iters]   # getComputeGraph
-                except StopIteration:
-                    break
-                t_host += time.perf_counter() - t0
-                stacked = stack_minibatches(mbs)
-                batch = {k: jnp.asarray(v) for k, v in
-                         dataclasses.asdict(stacked).items()}
-                skeys = jax.vmap(jax.random.fold_in, (0, None))(
-                    keys, nbatches)
-                t0 = time.perf_counter()
-                self.params, self.opt_state, m = self._step(
-                    self.params, self.opt_state, batch, skeys)
-                jax.block_until_ready(m["loss"])
-                t_device += time.perf_counter() - t0
-                losses.append(float(m["loss"]))
-                nbatches += 1
+            nbatches += 1
 
+        stats = self.pipeline.last_stats
         rec = {
             "epoch": self._epoch,
             "loss": float(np.mean(losses)) if losses else float("nan"),
-            "t_get_compute_graph": t_host,
+            "t_get_compute_graph": stats.exposed_wait_s,
+            "t_host_build": stats.host_build_s,
+            "overlap_fraction": stats.overlap_fraction(),
             "t_device_step": t_device,
-            "t_epoch": t_host + t_device,
+            "t_epoch": stats.exposed_wait_s + t_device,
             "num_batches": nbatches,
         }
         self.timings.append(rec)
@@ -199,34 +208,18 @@ class KGETrainer:
                 log_fn(rec)
         return history
 
+    def close(self) -> None:
+        self.pipeline.close()
+
     # ------------------------------------------------------------------ #
     def encode_all_entities(self) -> np.ndarray:
         """Embed every entity with the full (unpartitioned) train graph —
         the evaluation-time encoder pass."""
-        full = partition_graph(self.train_kg, 1, "random", seed=0)
-        full_part = expand_all(self.train_kg, full, self.cfg.num_hops)
-        pb = pad_partitions(full_part)
-        part0 = {f.name: jnp.asarray(getattr(pb, f.name)[0])
-                 for f in dataclasses.fields(pb)}
-        h = encode_partition(self.params, self.kge_cfg, part0,
-                             features=self.features)
-        # scatter local -> global order
-        out = np.zeros((self.train_kg.num_entities, h.shape[1]), np.float32)
-        l2g = np.asarray(part0["local_to_global"])
-        mask = np.asarray(part0["vertex_mask"])
-        out[l2g[mask]] = np.asarray(h)[mask]
-        return out
+        return encode_all_entities(
+            self.params, self.kge_cfg, self.train_kg, self.cfg.num_hops,
+            features=self.features)
 
     def evaluate(self, split: str = "test") -> Dict[str, float]:
-        emb = self.encode_all_entities()
-        table_key = {"distmult": "rel_diag", "transe": "rel_vec",
-                     "complex": "rel_complex"}[self.cfg.decoder]
-        table = np.asarray(self.params["decoder"][table_key])
-        metrics = evaluate_both_directions(
-            emb, table, self.splits[split],
-            [self.splits["train"], self.splits["valid"],
-             self.splits["test"]],
-            num_relations_base=self.splits["train"].num_relations,
-            decoder=self.cfg.decoder,
-        )
-        return {f"{split}_{k}": v for k, v in metrics.items()}
+        return evaluate_split(
+            self.params, self.kge_cfg, self.splits, split,
+            self.cfg.num_hops, self.cfg.decoder, features=self.features)

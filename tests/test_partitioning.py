@@ -1,7 +1,7 @@
 """Partitioning invariants (paper §3.2) — unit + hypothesis property tests."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (
     expand_all, expand_partition, load_balance, make_synthetic_kg,
