@@ -1,9 +1,12 @@
 """Input-pipeline benchmark: serial vs async epoch wall-clock and the
-host/device overlap fraction (the Fig. 6 bottleneck, attacked).
+host/device overlap fraction (the Fig. 6 bottleneck, attacked), plus the
+sharded-entity-table variant: per-step gather+exchange time and the
+embedding-table bytes each device has to hold at 1/2/4/8 model shards
+(the memory wall row-sharding removes).
 
-Writes ``BENCH_pipeline.json`` next to the repo root so the perf trajectory
-of the input pipeline is recorded across PRs, and emits the usual CSV rows
-via ``benchmarks.run``.
+Writes ``BENCH_pipeline.json`` and ``BENCH_embedding.json`` next to the
+repo root so both perf trajectories are recorded across PRs, and emits the
+usual CSV rows via ``benchmarks.run``.
 
 Run: PYTHONPATH=src python -m benchmarks.pipeline_bench [--full]
 """
@@ -19,6 +22,8 @@ import numpy as np
 
 JSON_PATH = os.path.join(os.path.dirname(__file__), "..",
                          "BENCH_pipeline.json")
+EMBED_JSON_PATH = os.path.join(os.path.dirname(__file__), "..",
+                               "BENCH_embedding.json")
 
 
 def _measure(splits, kind: str, quick: bool) -> Dict[str, float]:
@@ -93,5 +98,76 @@ def run(quick: bool = True) -> List[Dict]:
     return rows
 
 
+# ---------------------------------------------------------------------- #
+# Sharded entity table: gather+exchange time, table bytes per device
+# ---------------------------------------------------------------------- #
+def _time_gather(fn, *args, iters: int = 30) -> float:
+    import jax
+    fn(*args)[0].block_until_ready()           # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def run_embedding(quick: bool = True) -> List[Dict]:
+    """Dense replicated gather vs shard-local gather + exchange at 1-8
+    model shards (simulated mesh).  Per-device table bytes must shrink
+    ∝ 1/num_shards — that is the capacity the sharding buys."""
+    import jax
+    import jax.numpy as jnp
+    from repro.sharding.embedding import (
+        ShardedTableLayout, plan_local_gather, shard_table, sharded_gather,
+    )
+
+    v, d = (20_000, 64) if quick else (200_000, 128)
+    batch = 4096
+    rng = np.random.default_rng(0)
+    table = jnp.asarray(rng.normal(size=(v, d)).astype(np.float32))
+    ids = rng.integers(0, v, size=batch).astype(np.int32)
+
+    dense_us = _time_gather(
+        jax.jit(lambda t, i: (t[i],)), table, jnp.asarray(ids)) * 1e6
+
+    shards_out = []
+    for s in (1, 2, 4, 8):
+        layout = ShardedTableLayout(v, s)
+        sh = shard_table(table, layout)
+        li, ow = plan_local_gather(layout, ids)
+        us = _time_gather(
+            jax.jit(lambda t, i, o: (sharded_gather(t, i, o),)),
+            sh, jnp.asarray(li), jnp.asarray(ow)) * 1e6
+        shards_out.append({
+            "num_shards": s,
+            "gather_exchange_us": round(us, 2),
+            "table_bytes_per_device": layout.bytes_per_shard(d),
+            "rows_per_shard": layout.rows_per_shard,
+        })
+
+    payload = {
+        "bench": "embedding",
+        "table": {"entities": v, "dim": d, "batch_gather": batch,
+                  "dense_bytes": v * d * 4, "quick": quick},
+        "dense_gather_us": round(dense_us, 2),
+        "sharded": shards_out,
+    }
+    with open(EMBED_JSON_PATH, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+
+    rows = [{"name": "dense", "us_per_call": round(dense_us, 2),
+             "table_mib_per_device": round(v * d * 4 / 2**20, 2)}]
+    for r in shards_out:
+        rows.append({
+            "name": f"sharded_{r['num_shards']}",
+            "us_per_call": r["gather_exchange_us"],
+            "table_mib_per_device":
+                round(r["table_bytes_per_device"] / 2**20, 2),
+        })
+    return rows
+
+
 if __name__ == "__main__":
     print("\n".join(emit(run(), "pipeline")))
+    print("\n".join(emit(run_embedding(), "embedding")))

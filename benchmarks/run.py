@@ -30,6 +30,8 @@ def main() -> None:
 
     suites = {
         "pipeline": lambda: pipeline_bench.run(quick),  # BENCH_pipeline.json
+        "embedding":                                    # BENCH_embedding.json
+            lambda: pipeline_bench.run_embedding(quick),
         "t2": lambda: t2_partition_stats.run(quick),      # Table 2
         "t3": lambda: t3_accuracy_speedup.run(quick),     # Table 3
         "t4": lambda: t4_fixed_updates.run(quick),        # Table 4

@@ -25,11 +25,22 @@ Three implementations share one contract (``InputPipeline``):
 * ``FullGraphPipeline`` — the full-edge-batch mode (one resident padded
   batch per epoch); trivially prefetched since the batch is device-cached.
 
-Timing contract (``PipelineStats``): ``host_build_s`` is the CPU time spent
-constructing batches (summed over workers); ``exposed_wait_s`` is the part
-of it the consumer actually waited for — the host time left on the critical
-path.  ``overlap_fraction`` = 1 − exposed/build is the benchmark's headline
-number.
+Sharded embedding tables (``repro.sharding.embedding``): when a pipeline is
+built with a ``table_layout``, the collator also precomputes each batch's
+``ShardedGatherPlan`` — per-shard LOCAL gather indices + ownership masks for
+the row-sharded entity table — on host, and ships it with the batch through
+the same double-buffered transfer path (device keys ``shard_local_ids`` /
+``shard_owned``).  The device step then never does index arithmetic for the
+embedding exchange.
+
+Timing contract (``PipelineStats``): the steady-state clock starts at the
+FIRST CONSUMED BATCH — the wait for it (queue warm-up / pipeline fill) is
+reported separately as ``warmup_s``.  ``host_build_s`` is the construction
+time of batches the consumer actually took after that point (prefetched
+tail batches that are built but never consumed do not count — they hid
+nothing); ``exposed_wait_s`` is the post-warm-up wait on the critical path.
+``overlap_fraction`` = 1 − exposed/build is the benchmark's headline
+number, now honest on short epochs.
 """
 from __future__ import annotations
 
@@ -46,37 +57,54 @@ from repro.core.minibatch import (
     BatchBudget, EdgeMiniBatch, _PartitionCSR, iterate_edge_minibatches,
     stack_minibatches,
 )
+from repro.sharding.embedding import ShardedGatherPlan, ShardedTableLayout
 
 
 @dataclasses.dataclass
 class PipelineStats:
     """Per-epoch host-side timing of one pipeline run.
 
-    ``host_build_s`` is wall time measured inside the builders; when workers
-    overlap the device step it includes GIL/scheduler interference, so it
-    upper-bounds the pure CPU cost (serial runs measure the pure cost).  It
-    also includes batches built ahead but never consumed (the prefetched
-    tail past the shortest partition stream), so compare overlap fractions
-    on balanced partitions / multi-batch epochs where that tail is noise.
+    The clock starts at the first consumed batch: ``warmup_s`` is the wait
+    for that batch (pipeline fill — unavoidable, and previously conflated
+    with steady-state exposure), while ``host_build_s`` /
+    ``exposed_wait_s`` cover only the steady state after it.
+    ``host_build_s`` counts construction time of CONSUMED batches (build
+    times travel with each batch from its worker), so the prefetched tail
+    past the shortest partition stream no longer inflates the overlap
+    fraction on short epochs.  When workers overlap the device step the
+    build times include GIL/scheduler interference, so they upper-bound the
+    pure CPU cost (serial runs measure the pure cost).
     """
 
-    host_build_s: float = 0.0    # total batch-construction time (workers)
+    host_build_s: float = 0.0    # build time of consumed steady-state batches
     exposed_wait_s: float = 0.0  # construction time on the critical path
+    warmup_s: float = 0.0        # wait for the first batch (pipeline fill)
     num_batches: int = 0
 
     def overlap_fraction(self) -> float:
-        """Fraction of host build time hidden behind the device step."""
+        """Fraction of steady-state host build time hidden behind the
+        device step."""
         if self.host_build_s <= 0.0:
             return 0.0
         return max(0.0, 1.0 - self.exposed_wait_s / self.host_build_s)
 
 
-def to_device_batch(mb: EdgeMiniBatch) -> Dict[str, "jax.Array"]:
+def to_device_batch(
+    mb: EdgeMiniBatch,
+    table_layout: Optional[ShardedTableLayout] = None,
+) -> Dict[str, "jax.Array"]:
     """Host→device transfer of one stacked mini-batch (field-name dict, the
-    layout the SPMD step consumes)."""
+    layout the SPMD step consumes).  With a ``table_layout`` the batch also
+    carries its host-precomputed per-shard gather plan
+    (``shard_local_ids`` / ``shard_owned``, trainer axis leading)."""
     import jax.numpy as jnp
-    return {f.name: jnp.asarray(getattr(mb, f.name))
-            for f in dataclasses.fields(mb)}
+    out = {f.name: jnp.asarray(getattr(mb, f.name))
+           for f in dataclasses.fields(mb)}
+    if table_layout is not None:
+        plan = ShardedGatherPlan.for_stacked(table_layout, mb.gather_global)
+        out["shard_local_ids"] = jnp.asarray(plan.local_ids)
+        out["shard_owned"] = jnp.asarray(plan.owned)
+    return out
 
 
 class InputPipeline:
@@ -90,8 +118,11 @@ class InputPipeline:
     implementations with the same parameters are interchangeable.
     """
 
-    def __init__(self) -> None:
+    def __init__(
+        self, table_layout: Optional[ShardedTableLayout] = None,
+    ) -> None:
         self._stats = PipelineStats()
+        self.table_layout = table_layout
 
     @property
     def last_stats(self) -> PipelineStats:
@@ -102,7 +133,7 @@ class InputPipeline:
 
     def device_batches(self, epoch: int) -> Iterator[Dict]:
         for mb in self.epoch_batches(epoch):
-            yield to_device_batch(mb)
+            yield to_device_batch(mb, self.table_layout)
 
     def close(self) -> None:
         """Release background resources (workers are per-epoch, so the base
@@ -123,8 +154,9 @@ class _MinibatchPipelineBase(InputPipeline):
         seed: int = 0,
         sampler: str = "constraint",
         csrs: Optional[Sequence[_PartitionCSR]] = None,
+        table_layout: Optional[ShardedTableLayout] = None,
     ):
-        super().__init__()
+        super().__init__(table_layout)
         self.partitions = list(partitions)
         self.batch_size = batch_size
         self.num_negatives = num_negatives
@@ -162,8 +194,13 @@ class SerialMinibatchPipeline(_MinibatchPipelineBase):
             except StopIteration:
                 break
             dt = time.perf_counter() - t0
-            stats.host_build_s += dt
-            stats.exposed_wait_s += dt
+            if stats.num_batches == 0:
+                # the serial analogue of pipeline fill: the first batch's
+                # build IS its wait, and the steady-state clock starts after
+                stats.warmup_s += dt
+            else:
+                stats.host_build_s += dt
+                stats.exposed_wait_s += dt
             stats.num_batches += 1
             yield stack_minibatches(mbs)
 
@@ -223,7 +260,6 @@ class AsyncMinibatchPipeline(_MinibatchPipelineBase):
         n = len(self.partitions)
         queues: List[queue.Queue] = [
             queue.Queue(maxsize=self.prefetch) for _ in range(n)]
-        build_s = [0.0] * n
 
         def work(i: int) -> None:
             try:
@@ -234,8 +270,11 @@ class AsyncMinibatchPipeline(_MinibatchPipelineBase):
                         mb = next(it)
                     except StopIteration:
                         break
-                    build_s[i] += time.perf_counter() - t0
-                    if not _put(queues[i], mb, stop):
+                    # ship the build time WITH the batch: only consumed
+                    # batches count toward host_build_s (the prefetched
+                    # tail hid nothing)
+                    if not _put(queues[i],
+                                (mb, time.perf_counter() - t0), stop):
                         return
                 _put(queues[i], _END, stop)
             except BaseException as exc:  # propagate into the consumer
@@ -248,9 +287,9 @@ class AsyncMinibatchPipeline(_MinibatchPipelineBase):
         ]
         for t in threads:
             t.start()
-        return queues, threads, build_s
+        return queues, threads
 
-    def _shutdown(self, stop, queues, threads, stats, build_s) -> None:
+    def _shutdown(self, stop, queues, threads) -> None:
         stop.set()
         for q in queues:            # unblock workers stuck on a full queue
             while True:
@@ -260,51 +299,74 @@ class AsyncMinibatchPipeline(_MinibatchPipelineBase):
                     break
         for t in threads:
             t.join(timeout=5.0)
-        stats.host_build_s = float(sum(build_s))
 
     def _collate(self, queues, stats: PipelineStats, stop: threading.Event,
-                 timed: bool) -> Iterator[EdgeMiniBatch]:
+                 timed: bool):
         """Zip one batch per partition queue (partition order), stacking on
-        the trainer axis; stop at the first exhausted stream."""
+        the trainer axis; stop at the first exhausted stream.  Yields
+        ``(stacked, build_s)`` pairs so the consumer end accounts build
+        time only for batches actually taken.  With ``timed`` the stats
+        are recorded here, lazily at the consumer's ``next()`` (the first
+        batch's wait is queue warm-up, ``warmup_s``; the steady-state
+        clock starts after it); untimed mode (the device path, where a
+        collator thread runs ahead of the consumer) mutates no stats."""
+        first = True
         while True:
             mbs = []
+            wait = build = 0.0
             for q in queues:
                 t0 = time.perf_counter()
                 item = _get(q, stop)
-                if timed:
-                    stats.exposed_wait_s += time.perf_counter() - t0
+                wait += time.perf_counter() - t0
                 if isinstance(item, _PipelineError):
                     raise RuntimeError(
                         "input pipeline worker failed") from item.exc
                 if item is _END:
                     return
-                mbs.append(item)
-            stats.num_batches += 1
-            yield stack_minibatches(mbs)
+                mb, dt = item
+                build += dt
+                mbs.append(mb)
+            if timed:
+                if first:
+                    stats.warmup_s += wait
+                else:
+                    stats.host_build_s += build
+                    stats.exposed_wait_s += wait
+                stats.num_batches += 1
+            first = False
+            yield stack_minibatches(mbs), build
 
     # ------------------------------------------------------------------ #
     def epoch_batches(self, epoch: int) -> Iterator[EdgeMiniBatch]:
         stats = self._stats = PipelineStats()
         stop = threading.Event()
-        queues, threads, build_s = self._start_workers(epoch, stop)
+        queues, threads = self._start_workers(epoch, stop)
         try:
-            yield from self._collate(queues, stats, stop, timed=True)
+            for mb, _build in self._collate(queues, stats, stop,
+                                            timed=True):
+                yield mb
         finally:
-            self._shutdown(stop, queues, threads, stats, build_s)
+            self._shutdown(stop, queues, threads)
 
     def device_batches(self, epoch: int) -> Iterator[Dict]:
         """Double-buffered host→device path: a collator thread stacks the
-        partition batches and issues the device transfer one step ahead, so
-        the consumer's ``next()`` returns an already-resident batch."""
+        partition batches, attaches the sharded-table gather plan (when a
+        ``table_layout`` is set) and issues the device transfer one step
+        ahead, so the consumer's ``next()`` returns an already-resident
+        batch."""
         stats = self._stats = PipelineStats()
         stop = threading.Event()
-        queues, threads, build_s = self._start_workers(epoch, stop)
+        queues, threads = self._start_workers(epoch, stop)
         xfer_q: queue.Queue = queue.Queue(maxsize=2)   # double buffer
 
         def collate_and_transfer() -> None:
             try:
-                for mb in self._collate(queues, stats, stop, timed=False):
-                    if not _put(xfer_q, to_device_batch(mb), stop):
+                for mb, build in self._collate(queues, stats, stop,
+                                               timed=False):
+                    if not _put(xfer_q,
+                                (to_device_batch(mb, self.table_layout),
+                                 build),
+                                stop):
                         return
                 _put(xfer_q, _END, stop)
             except BaseException as exc:
@@ -315,16 +377,28 @@ class AsyncMinibatchPipeline(_MinibatchPipelineBase):
             daemon=True)
         collator.start()
         try:
+            first = True
             while True:
                 t0 = time.perf_counter()
                 item = _get(xfer_q, stop)
-                stats.exposed_wait_s += time.perf_counter() - t0
+                dt = time.perf_counter() - t0
                 if isinstance(item, _PipelineError):
                     raise RuntimeError(
                         "input pipeline worker failed") from item.exc
                 if item is _END:
                     return
-                yield item
+                batch, build = item
+                # consumed-batch accounting only: the collator runs up to
+                # the transfer-queue depth ahead, and batches it built
+                # that the consumer never takes must not count
+                if first:
+                    stats.warmup_s += dt
+                    first = False
+                else:
+                    stats.host_build_s += build
+                    stats.exposed_wait_s += dt
+                stats.num_batches += 1
+                yield batch
         finally:
             stop.set()
             while True:
@@ -333,7 +407,7 @@ class AsyncMinibatchPipeline(_MinibatchPipelineBase):
                 except queue.Empty:
                     break
             collator.join(timeout=5.0)
-            self._shutdown(stop, queues, threads, stats, build_s)
+            self._shutdown(stop, queues, threads)
 
 
 # ====================================================================== #
@@ -342,12 +416,20 @@ class AsyncMinibatchPipeline(_MinibatchPipelineBase):
 class FullGraphPipeline(InputPipeline):
     """One full-edge-batch per epoch: every padded partition stacked on the
     trainer axis, transferred to device ONCE and reused every epoch (the
-    batch is epoch-invariant; per-epoch randomness lives in the PRNG keys)."""
+    batch is epoch-invariant; per-epoch randomness lives in the PRNG keys).
+    With a ``table_layout`` the resident batch carries its gather plan for
+    ``local_to_global`` (also epoch-invariant, so precomputed once)."""
 
-    def __init__(self, padded: PaddedPartitionBatch):
-        super().__init__()
+    def __init__(self, padded: PaddedPartitionBatch,
+                 table_layout: Optional[ShardedTableLayout] = None):
+        super().__init__(table_layout)
         self._host = {f.name: getattr(padded, f.name)
                       for f in dataclasses.fields(padded)}
+        if table_layout is not None:
+            plan = ShardedGatherPlan.for_stacked(
+                table_layout, self._host["local_to_global"])
+            self._host["shard_local_ids"] = plan.local_ids
+            self._host["shard_owned"] = plan.owned
         self._device: Optional[Dict] = None
 
     def epoch_batches(self, epoch: int) -> Iterator[Dict]:
@@ -383,15 +465,17 @@ def make_input_pipeline(
     sampler: str = "constraint",
     csrs: Optional[Sequence[_PartitionCSR]] = None,
     prefetch: int = 2,
+    table_layout: Optional[ShardedTableLayout] = None,
 ) -> InputPipeline:
     """Build a mini-batch input pipeline (``serial`` reference or ``async``
-    prefetching)."""
+    prefetching); ``table_layout`` makes every device batch carry its
+    sharded-table gather plan."""
     if kind not in PIPELINES:
         raise ValueError(
             f"unknown pipeline {kind!r}; choose from {sorted(PIPELINES)}")
     kw = dict(batch_size=batch_size, num_negatives=num_negatives,
               num_hops=num_hops, budget=budget, seed=seed, sampler=sampler,
-              csrs=csrs)
+              csrs=csrs, table_layout=table_layout)
     if kind == "async":
         kw["prefetch"] = prefetch
     return PIPELINES[kind](partitions, **kw)

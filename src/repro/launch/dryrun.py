@@ -115,6 +115,8 @@ def lower_rgcn(mesh_kind: str, overrides: str = "") -> Dict:
     t_compile = time.time() - t0
 
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):     # jax<=0.4 returns [dict]
+        cost = cost[0] if cost else {}
     mem = compiled.memory_analysis()
     hlo_text = compiled.as_text()
     coll_bytes, coll_stats = total_collective_bytes(hlo_text)
@@ -201,6 +203,8 @@ def lower_one(arch_name: str, shape_name: str, mesh_kind: str,
     t_compile = time.time() - t0
 
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):     # jax<=0.4 returns [dict]
+        cost = cost[0] if cost else {}
     try:
         mem = compiled.memory_analysis()
         mem_rec = {

@@ -11,7 +11,21 @@ from __future__ import annotations
 import math
 
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+try:  # jax >= 0.5 explicit-sharding API; older jax has no AxisType
+    from jax.sharding import AxisType
+except ImportError:  # pragma: no cover - depends on installed jax
+    AxisType = None
+
+
+def _make_mesh(shape, axes, devices) -> Mesh:
+    if AxisType is None:
+        return jax.make_mesh(shape, axes, devices=devices)
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(AxisType.Auto,) * len(axes),
+        devices=devices)
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
@@ -25,19 +39,13 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
             "the dry-run entry point must set "
             "XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
             "any jax import")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(AxisType.Auto,) * len(axes),
-        devices=devices[:ndev])
+    return _make_mesh(shape, axes, devices[:ndev])
 
 
 def make_host_mesh(data: int = 1, model: int = 1) -> Mesh:
     """Small mesh over whatever local devices exist (tests / examples)."""
     devices = jax.devices()[: data * model]
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(AxisType.Auto, AxisType.Auto),
-        devices=devices)
+    return _make_mesh((data, model), ("data", "model"), devices)
 
 
 # TPU v5e hardware constants used by the roofline (EXPERIMENTS.md §Roofline)

@@ -41,11 +41,15 @@ def train_kge(args) -> None:
         batch_size=args.batch_size if args.batch_size > 0 else
         (None if name == "fb15k-237" else 4096),
         strategy=args.strategy, use_kernel=args.use_kernel,
-        pipeline=args.pipeline, prefetch=args.prefetch)
+        pipeline=args.pipeline, prefetch=args.prefetch,
+        num_table_shards=args.table_shards)
+    pipe = ("full-graph (resident batch)" if cfg.batch_size is None
+            else f"{cfg.pipeline} pipeline")   # --pipeline/--prefetch only
+    #                                            drive the mini-batch path
     print(f"[train] {name}: {splits['train'].num_edges} train edges, "
           f"{splits['train'].num_entities} entities; "
-          f"{cfg.num_trainers} trainers ({cfg.strategy}, "
-          f"{cfg.pipeline} pipeline)")
+          f"{cfg.num_trainers} trainers ({cfg.strategy}, {pipe}, "
+          f"{cfg.num_table_shards}-shard entity table)")
     trainer = KGETrainer(splits, cfg)
     print(f"[train] RF={trainer.replication_factor:.2f}")
     trainer.fit(log_fn=lambda r: print(
@@ -112,6 +116,9 @@ def main() -> None:
                     help="host input pipeline for mini-batch training")
     ap.add_argument("--prefetch", type=int, default=2,
                     help="per-partition prefetch queue depth")
+    ap.add_argument("--table-shards", type=int, default=1,
+                    help="row-shard the entity embedding table over this "
+                         "many model-axis shards (1 = replicated)")
     ap.add_argument("--data-root", default=None)
     ap.add_argument("--use-kernel", action="store_true")
     ap.add_argument("--reduced", action="store_true", default=True)

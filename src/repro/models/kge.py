@@ -23,6 +23,9 @@ from repro.core.negative import (
 )
 from repro.models import decoders
 from repro.models.rgcn import RGCNConfig, init_rgcn_params, rgcn_encode
+from repro.sharding.embedding import (
+    plan_local_gather_device, sharded_gather,
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -36,6 +39,10 @@ class KGEConfig:
     def num_entities(self) -> int:
         return self.rgcn.num_entities
 
+    @property
+    def num_table_shards(self) -> int:
+        return self.rgcn.num_table_shards
+
 
 def init_kge_params(key: jax.Array, cfg: KGEConfig) -> Dict[str, Any]:
     k_enc, k_dec = jax.random.split(key)
@@ -47,11 +54,33 @@ def init_kge_params(key: jax.Array, cfg: KGEConfig) -> Dict[str, Any]:
 
 def vertex_input(params: Dict[str, Any], cfg: KGEConfig,
                  gather_global: jax.Array,
-                 features: Optional[jax.Array]) -> jax.Array:
+                 features: Optional[jax.Array],
+                 shard_local_ids: Optional[jax.Array] = None,
+                 shard_owned: Optional[jax.Array] = None,
+                 *, model_axis: Optional[str] = None) -> jax.Array:
     """Gather the per-vertex model input: learned embedding rows
-    (transductive) or precomputed features (ogbl-citation2 style)."""
+    (transductive) or precomputed features (ogbl-citation2 style).
+
+    With a row-sharded entity table (``(S, rows, d)``, see
+    ``repro.sharding.embedding``) the dense gather becomes a shard-local
+    gather + exchange, driven by a host-precomputed ``ShardedGatherPlan``
+    (``shard_local_ids`` / ``shard_owned``, emitted by the input pipeline)
+    or, when none is provided (full-graph / evaluation paths), by the
+    identical in-jit plan.  ``model_axis`` names the mesh axis when running
+    inside ``shard_map``; ``None`` selects the single-device simulation —
+    both are bitwise equal to the replicated dense gather.
+    """
     if cfg.rgcn.feature_dim is None:
-        return params["entity_embedding"][gather_global]
+        table = params["entity_embedding"]
+        if table.ndim == 3:
+            if shard_local_ids is None:
+                num_shards = (table.shape[0] if model_axis is None
+                              else jax.lax.psum(1, model_axis))
+                shard_local_ids, shard_owned = plan_local_gather_device(
+                    num_shards, table.shape[1], gather_global)
+            return sharded_gather(table, shard_local_ids, shard_owned,
+                                  axis_name=model_axis)
+        return table[gather_global]
     assert features is not None, "feature-mode model needs features"
     return features[gather_global]
 
@@ -65,9 +94,14 @@ def minibatch_loss(
     batch: Dict[str, jax.Array],
     features: Optional[jax.Array] = None,
     dropout_key: Optional[jax.Array] = None,
+    model_axis: Optional[str] = None,
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
-    """Loss on one padded EdgeMiniBatch (fields as device arrays)."""
-    x = vertex_input(params, cfg, batch["gather_global"], features)
+    """Loss on one padded EdgeMiniBatch (fields as device arrays; batches
+    from a sharded-table pipeline also carry the precomputed gather plan
+    under ``shard_local_ids`` / ``shard_owned``)."""
+    x = vertex_input(params, cfg, batch["gather_global"], features,
+                     batch.get("shard_local_ids"),
+                     batch.get("shard_owned"), model_axis=model_axis)
     x = jnp.where(batch["vertex_mask"][:, None], x, 0.0)
     h = rgcn_encode(
         params, cfg.rgcn, x,
@@ -99,13 +133,16 @@ def fullgraph_loss(
     rng: jax.Array,
     features: Optional[jax.Array] = None,
     train: bool = True,
+    model_axis: Optional[str] = None,
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """Full-edge-batch training step on one padded partition (paper's
     FB15k-237 configuration).  Negatives are sampled ON DEVICE from the
     partition's core vertices — legal because the full partition graph is the
     computational graph, so every core vertex already has an embedding."""
     k_neg, k_drop = jax.random.split(rng)
-    x = vertex_input(params, cfg, part["local_to_global"], features)
+    x = vertex_input(params, cfg, part["local_to_global"], features,
+                     part.get("shard_local_ids"),
+                     part.get("shard_owned"), model_axis=model_axis)
     x = jnp.where(part["vertex_mask"][:, None], x, 0.0)
     h = rgcn_encode(
         params, cfg.rgcn, x,
@@ -140,7 +177,8 @@ def encode_partition(
     params: Dict[str, Any], cfg: KGEConfig, part: Dict[str, jax.Array],
     features: Optional[jax.Array] = None,
 ) -> jax.Array:
-    x = vertex_input(params, cfg, part["local_to_global"], features)
+    x = vertex_input(params, cfg, part["local_to_global"], features,
+                     part.get("shard_local_ids"), part.get("shard_owned"))
     x = jnp.where(part["vertex_mask"][:, None], x, 0.0)
     return rgcn_encode(
         params, cfg.rgcn, x,

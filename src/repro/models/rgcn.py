@@ -38,6 +38,9 @@ class RGCNConfig:
     dropout: float = 0.2
     self_loop: bool = True
     use_kernel: bool = False  # route edge compute through the Pallas kernel
+    num_table_shards: int = 1  # >1: entity table stored (S, rows, d), row-
+    #   sharded over the model axis (repro.sharding.embedding); the gather
+    #   becomes shard-local + exchange, bitwise equal to the dense gather
 
     def layer_in_dim(self, layer: int) -> int:
         if layer == 0:
@@ -55,8 +58,17 @@ def init_rgcn_params(key: jax.Array, cfg: RGCNConfig) -> Dict[str, Any]:
     ki = iter(keys)
 
     if cfg.feature_dim is None:
-        params["entity_embedding"] = _glorot(
-            next(ki), (cfg.num_entities, cfg.hidden_dim))
+        table = _glorot(next(ki), (cfg.num_entities, cfg.hidden_dim))
+        if cfg.num_table_shards > 1:
+            # same values as the dense init (same key), stored row-sharded;
+            # padding rows are zero and never gathered, so sharded and
+            # replicated models are initialized bitwise identically
+            from repro.sharding.embedding import (
+                ShardedTableLayout, shard_table,
+            )
+            table = shard_table(table, ShardedTableLayout(
+                cfg.num_entities, cfg.num_table_shards))
+        params["entity_embedding"] = table
 
     layers = []
     for layer in range(cfg.num_layers):

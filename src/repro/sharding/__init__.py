@@ -1,6 +1,13 @@
-"""Sharding rules: 2-D (fsdp × tensor) parameter layout, batch/cache specs."""
+"""Sharding rules: 2-D (fsdp × tensor) parameter layout, batch/cache specs,
+and the model-axis row-sharded embedding table (``repro.sharding.embedding``)."""
+from repro.sharding.embedding import (
+    ShardedGatherPlan, ShardedTableLayout, convert_table_layout,
+    plan_local_gather, plan_local_gather_device, shard_table, sharded_gather,
+    unshard_table,
+)
 from repro.sharding.rules import (
     param_shardings, opt_state_shardings, batch_shardings, cache_shardings,
-    spec_for_param, spec_for_batch_leaf, spec_for_cache_leaf, fsdp_axes,
+    kge_param_specs, spec_for_param, spec_for_batch_leaf, spec_for_cache_leaf,
+    fsdp_axes,
 )
 __all__ = [n for n in dir() if not n.startswith("_")]

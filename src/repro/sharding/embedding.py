@@ -1,0 +1,238 @@
+"""Model-axis-sharded embedding tables (ROADMAP: sharded entity table).
+
+The paper's self-sufficient partitions eliminate cross-partition *activation*
+traffic, but the entity embedding table itself was still replicated on every
+device — the memory wall that caps entity count per device (the scaling axis
+DGL-KE attacks with partitioned embedding storage).  This module shards the
+table row-wise over the ``model`` mesh axis and keeps the math bitwise
+identical to the replicated gather:
+
+* ``ShardedTableLayout`` — the layout contract: ``num_rows`` logical rows
+  split into ``num_shards`` contiguous row blocks of ``rows_per_shard``
+  (= ceil(num_rows / num_shards)); the table is zero-padded to
+  ``padded_rows`` and stored as ``(num_shards, rows_per_shard, d)``.
+* ``shard_table`` / ``unshard_table`` — dense ``(V, d)`` ⇄ sharded
+  ``(S, rows, d)`` conversion (checkpoint interop uses the same functions).
+* ``plan_local_gather`` (host numpy) / ``plan_local_gather_device`` (jnp) —
+  turn global gather ids into per-shard LOCAL ids + ownership masks.  The
+  host version is what the input pipeline precomputes per batch (a
+  ``ShardedGatherPlan``, double-buffered with the rest of the prefetch
+  path); the device version is the in-jit fallback for paths that build
+  their gather ids on device (full-graph training, evaluation).  Both use
+  the same integer arithmetic, so their outputs are identical.
+* ``sharded_gather`` — shard-local gather + exchange.  In the single-device
+  simulation (``axis_name=None``) the exchange is a masked sum over the
+  shard axis; under ``shard_map`` it is a ``jax.lax.psum`` over the model
+  axis.  Exactly one shard owns every row, so each output element is one
+  real value plus zeros — bitwise equal to the dense ``table[ids]`` gather
+  (and its transpose scatter-adds the same cotangents per row, so gradients
+  match bitwise too; ``tests/test_sharded_embedding.py`` enforces this).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedTableLayout:
+    """Row-block layout of one embedding table over the ``model`` axis."""
+
+    num_rows: int     # logical rows (e.g. num_entities)
+    num_shards: int   # model-axis size the table is split over
+
+    def __post_init__(self):
+        if self.num_rows < 1 or self.num_shards < 1:
+            raise ValueError(
+                f"invalid layout: {self.num_rows} rows / "
+                f"{self.num_shards} shards")
+
+    @property
+    def rows_per_shard(self) -> int:
+        return -(-self.num_rows // self.num_shards)   # ceil division
+
+    @property
+    def padded_rows(self) -> int:
+        return self.num_shards * self.rows_per_shard
+
+    def bytes_per_shard(self, dim: int, itemsize: int = 4) -> int:
+        """Per-device table footprint — the quantity sharding shrinks."""
+        return self.rows_per_shard * dim * itemsize
+
+
+def shard_table(table, layout: ShardedTableLayout):
+    """Dense ``(num_rows, d)`` → sharded ``(num_shards, rows_per_shard, d)``
+    (zero-padded tail; works on numpy or jax arrays)."""
+    import jax.numpy as jnp
+    xp = jnp if not isinstance(table, np.ndarray) else np
+    v, d = table.shape
+    if v != layout.num_rows:
+        raise ValueError(f"table has {v} rows, layout expects "
+                         f"{layout.num_rows}")
+    pad = layout.padded_rows - v
+    if pad:
+        table = xp.concatenate(
+            [table, xp.zeros((pad, d), table.dtype)], axis=0)
+    return table.reshape(layout.num_shards, layout.rows_per_shard, d)
+
+
+def unshard_table(shards, num_rows: int):
+    """Sharded ``(S, rows, d)`` → dense ``(num_rows, d)`` (padding rows are
+    at the flattened tail, by construction of ``shard_table``)."""
+    s, rows, d = shards.shape
+    if num_rows > s * rows:
+        raise ValueError(f"layout holds {s * rows} rows, need {num_rows}")
+    return shards.reshape(s * rows, d)[:num_rows]
+
+
+# ---------------------------------------------------------------------- #
+# Gather planning: global ids -> (per-shard local ids, ownership masks)
+# ---------------------------------------------------------------------- #
+def plan_local_gather(layout: ShardedTableLayout,
+                      global_ids: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Host (numpy) gather plan for ids of shape ``(...,)``.
+
+    Returns ``(local_ids, owned)`` with shard axis LEADING:
+    ``local_ids[s] = clip(global_ids - s * rows, 0, rows - 1)`` (int32) and
+    ``owned[s]`` marking the ids shard ``s`` actually stores.  Every valid
+    global id is owned by exactly one shard.
+    """
+    rows = layout.rows_per_shard
+    g = np.asarray(global_ids, dtype=np.int64)
+    offsets = (np.arange(layout.num_shards, dtype=np.int64) * rows
+               ).reshape((layout.num_shards,) + (1,) * g.ndim)
+    local = g[None, ...] - offsets
+    owned = (local >= 0) & (local < rows)
+    return np.clip(local, 0, rows - 1).astype(np.int32), owned
+
+
+def plan_local_gather_device(num_shards: int, rows_per_shard: int,
+                             global_ids):
+    """In-jit (jnp) twin of ``plan_local_gather`` for ``(V,)`` ids — same
+    integer arithmetic, so host and device plans are identical."""
+    import jax.numpy as jnp
+    g = global_ids.astype(jnp.int32)
+    offsets = (jnp.arange(num_shards, dtype=jnp.int32)
+               * rows_per_shard)[:, None]
+    local = g[None, :] - offsets
+    owned = (local >= 0) & (local < rows_per_shard)
+    return jnp.clip(local, 0, rows_per_shard - 1), owned
+
+
+@dataclasses.dataclass
+class ShardedGatherPlan:
+    """Host-precomputed per-shard gather indices for one stacked batch.
+
+    ``local_ids`` / ``owned`` are ``(P, S, V_b)`` — trainer axis leading
+    (matching the stacked batch the SPMD step consumes), then the shard
+    axis.  Emitted by the input-pipeline collator alongside each batch and
+    double-buffered with it, so the device step never computes index
+    arithmetic for the embedding exchange.
+    """
+
+    local_ids: np.ndarray   # (P, S, V_b) int32
+    owned: np.ndarray       # (P, S, V_b) bool
+
+    @classmethod
+    def for_stacked(cls, layout: ShardedTableLayout,
+                    gather_global: np.ndarray) -> "ShardedGatherPlan":
+        """Plan for a trainer-stacked ``(P, V_b)`` global-id array."""
+        local, owned = plan_local_gather(layout, gather_global)  # (S, P, V)
+        return cls(local_ids=np.moveaxis(local, 0, 1),
+                   owned=np.moveaxis(owned, 0, 1))
+
+
+# ---------------------------------------------------------------------- #
+# Shard-local gather + exchange
+# ---------------------------------------------------------------------- #
+def sharded_gather(table, local_ids, owned, *, axis_name=None):
+    """Gather ``(V_b, d)`` rows from a row-sharded table.
+
+    * ``axis_name=None`` (single-device simulation): ``table`` is the full
+      ``(S, rows, d)`` stack; each shard gathers its local ids, non-owned
+      lanes are zeroed, and the sum over the shard axis reconstructs the
+      dense gather (bitwise: one real value + zeros per element).
+    * ``axis_name="model"`` (inside ``shard_map``): ``table`` is this
+      device's ``(1, rows, d)`` block; the masked local gather is exchanged
+      with ``jax.lax.psum`` over the model axis — the AllReduce that
+      replaces replicated-table storage with replicated *activations*.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    if axis_name is None:
+        g = jax.vmap(lambda t, i: t[i])(table, local_ids)     # (S, V, d)
+        return jnp.sum(jnp.where(owned[:, :, None], g, 0.0), axis=0)
+    if table.shape[0] != 1:
+        # a replicated (S, rows, d) table inside shard_map would gather
+        # shard 0's rows against every shard's local ids and psum S wrong
+        # answers with consistent shapes — fail at trace time instead
+        raise ValueError(
+            f"sharded_gather under shard_map expects this device's "
+            f"(1, rows, d) row block, got {table.shape} — shard the table "
+            f"over {axis_name!r} (see kge_param_specs)")
+    s = jax.lax.axis_index(axis_name)
+    x = table[0][local_ids[s]]                                # (V, d)
+    x = jnp.where(owned[s][:, None], x, 0.0)
+    return jax.lax.psum(x, axis_name)
+
+
+def _layout_row_range(shape) -> Tuple[int, int]:
+    """Logical row counts a table shape can represent: a dense ``(V, d)``
+    is exactly ``V``; a sharded ``(S, rows, d)`` is any ``V`` with
+    ``rows == ceil(V / S)`` (the tail padding is less than one shard)."""
+    if len(shape) == 2:
+        return shape[0], shape[0]
+    s, rows = shape[0], shape[1]
+    return s * (rows - 1) + 1, s * rows
+
+
+def convert_table_layout(arr: np.ndarray, target_shape,
+                         num_rows: int = None) -> np.ndarray:
+    """Convert an embedding table between layouts: dense ``(V, d)`` ⇄
+    sharded ``(S, rows, d)`` (any shard count).  Row blocks are contiguous,
+    so flattening a sharded table recovers global row order with the zero
+    padding at the tail; restores pad/trim that tail as needed.  Used by
+    ``repro.training.checkpoint`` so checkpoints round-trip across layouts.
+
+    Only LAYOUT differences convert: the two shapes must be able to
+    describe the same logical row count (a mismatched vocabulary — e.g. a
+    checkpoint from a different dataset — raises rather than being silently
+    truncated or zero-padded).  A sharded shape hides the exact count
+    inside its tail padding (any ``V`` with ``ceil(V/S) == rows`` fits), so
+    pass ``num_rows`` — the model's true entity count — when known to close
+    that ambiguity window; without it, mismatches smaller than one shard's
+    padding are undetectable from the shapes alone.
+    """
+    target_shape = tuple(target_shape)
+    arr = np.asarray(arr)
+    if arr.shape == target_shape:
+        return arr
+    if arr.ndim not in (2, 3) or len(target_shape) not in (2, 3) or \
+            arr.shape[-1] != target_shape[-1]:
+        raise ValueError(
+            f"cannot convert table layout {arr.shape} -> {target_shape}")
+    lo_a, hi_a = _layout_row_range(arr.shape)
+    lo_b, hi_b = _layout_row_range(target_shape)
+    lo, hi = max(lo_a, lo_b), min(hi_a, hi_b)
+    if num_rows is not None and not (lo_a <= num_rows <= hi_a and
+                                     lo_b <= num_rows <= hi_b):
+        raise ValueError(
+            f"table layouts {arr.shape} / {target_shape} cannot hold "
+            f"exactly {num_rows} logical rows "
+            f"({lo_a}-{hi_a} vs {lo_b}-{hi_b})"
+            " — refusing to truncate or zero-pad real embedding rows")
+    if lo > hi:
+        raise ValueError(
+            f"table layouts {arr.shape} and {target_shape} describe "
+            f"disjoint logical row counts ({lo_a}-{hi_a} vs {lo_b}-{hi_b})"
+            " — refusing to truncate or zero-pad real embedding rows")
+    d = arr.shape[-1]
+    dense = arr.reshape(-1, d)
+    need = int(np.prod(target_shape[:-1]))
+    if dense.shape[0] < need:
+        dense = np.concatenate(
+            [dense, np.zeros((need - dense.shape[0], d), dense.dtype)])
+    return np.ascontiguousarray(dense[:need].reshape(target_shape))

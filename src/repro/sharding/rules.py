@@ -11,6 +11,16 @@ have head counts indivisible by 16, which is itself a roofline finding).
 Logical axes:
   fsdp   → ("data",) single-pod, ("pod", "data") multi-pod
   tensor → ("model",)
+
+KGE embedding tables (``repro.sharding.embedding``): the entity table is
+row-sharded over ``model`` — as dense ``(V, d)`` the vocab dim goes on
+``tensor``; in the prefetchable sharded layout ``(S, rows, d)`` the leading
+shard dim goes on ``tensor`` (one row block per model-axis device).
+Relation tables (``rel_diag`` / ``rel_vec`` / ``rel_complex``) follow the
+same row-wise rule for *storage* analysis; ``kge_param_specs`` — the spec
+tree the shard_map train step consumes — keeps them replicated because the
+compute path gathers them densely, and only the entity table goes through
+the shard-local gather + psum exchange.
 """
 from __future__ import annotations
 
@@ -54,11 +64,20 @@ _RULES = {
     "w_rec_gate": ("fsdp", "tensor"),
     "decay_A": ("fsdp", None),
     "decay_B": (None, "fsdp"),
+    # KGE tables: rows over the model axis (repro.sharding.embedding)
+    "entity_embedding": ("tensor", None),
+    "rel_diag": ("tensor", None),
+    "rel_vec": ("tensor", None),
+    "rel_complex": ("tensor", None),
 }
 _EXPERT_RULES = {   # under a "moe" scope, 3-D expert tensors
     "w_in": ("tensor", "fsdp", None),
     "w_gate": ("tensor", "fsdp", None),
     "w_out": ("tensor", None, "fsdp"),
+}
+# sharded-layout entity table (S, rows, d): shard dim on the model axis
+_SHARDED_TABLE_RULES = {
+    "entity_embedding": ("tensor", None, None),
 }
 
 
@@ -94,6 +113,8 @@ def spec_for_param(path_names: Sequence[str], shape: Tuple[int, ...],
     rule = None
     if in_moe and name in _EXPERT_RULES and len(shape) >= 3:
         rule = _EXPERT_RULES[name]
+    elif name in _SHARDED_TABLE_RULES and len(shape) == 3:
+        rule = _SHARDED_TABLE_RULES[name]
     elif name in _RULES:
         rule = _RULES[name]
     if rule is None or len(shape) < len(rule):
@@ -198,3 +219,27 @@ def cache_shardings(cache: PyTree, mesh: Mesh) -> PyTree:
         spec = spec_for_cache_leaf(_path_names(path), np.shape(leaf), mesh)
         return NamedSharding(mesh, spec)
     return jax.tree_util.tree_map_with_path(one, cache)
+
+
+# ---------------------------------------------------------------------- #
+# KGE parameter specs for the shard_map train step
+# ---------------------------------------------------------------------- #
+def kge_param_specs(params: PyTree, mesh: Mesh) -> PyTree:
+    """PartitionSpec tree for the KGE ``shard_map`` step: a sharded-layout
+    entity table ``(S, rows, d)`` splits its shard dim over ``model`` (one
+    row block per model-axis device — requires ``S == mesh.shape['model']``);
+    every other leaf is replicated (relation tables are gathered densely in
+    compute, so they stay replicated here even though ``_RULES`` records a
+    row-wise storage rule for them)."""
+    model = int(mesh.shape.get("model", 1))
+
+    def one(path, leaf):
+        names, shape = _path_names(path), np.shape(leaf)
+        if names[-1] == "entity_embedding" and len(shape) == 3:
+            if shape[0] != model:
+                raise ValueError(
+                    f"entity table has {shape[0]} shards but the model "
+                    f"axis has {model} devices")
+            return P("model", None, None)
+        return P()
+    return jax.tree_util.tree_map_with_path(one, params)

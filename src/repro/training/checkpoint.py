@@ -70,8 +70,22 @@ def latest_checkpoint(directory: str) -> Optional[str]:
     return os.path.join(directory, ckpts[-1]) if ckpts else None
 
 
-def restore_checkpoint(path: str, like: PyTree) -> Tuple[int, PyTree]:
-    """Restore into the structure of ``like`` (shape/dtype verified)."""
+def restore_checkpoint(path: str, like: PyTree,
+                       entity_rows: Optional[int] = None
+                       ) -> Tuple[int, PyTree]:
+    """Restore into the structure of ``like`` (shape/dtype verified).
+
+    The entity embedding table round-trips across storage layouts: a
+    checkpoint saved with a dense ``(V, d)`` table restores into a model
+    holding a model-axis row-sharded ``(S, rows, d)`` table and vice versa
+    (and across shard counts) — the row blocks are contiguous, so the
+    conversion is a pad/trim + reshape (``repro.sharding.embedding``).
+    Pass ``entity_rows`` (the model's true entity count) to verify the
+    conversion exactly; without it, sharded layouts can only be checked up
+    to their tail padding.  Every other leaf keeps the strict shape check.
+    """
+    from repro.sharding.embedding import convert_table_layout
+
     data = np.load(path)
     with open(path.replace(".npz", ".json")) as f:
         manifest = json.load(f)
@@ -83,8 +97,12 @@ def restore_checkpoint(path: str, like: PyTree) -> Tuple[int, PyTree]:
             raise KeyError(f"checkpoint missing leaf {k!r}")
         arr = data[k]
         if tuple(arr.shape) != tuple(np.shape(v)):
-            raise ValueError(
-                f"shape mismatch at {k}: ckpt {arr.shape} vs model "
-                f"{np.shape(v)}")
+            if k.split("/")[-1] == "entity_embedding":
+                arr = convert_table_layout(arr, np.shape(v),
+                                           num_rows=entity_rows)
+            else:
+                raise ValueError(
+                    f"shape mismatch at {k}: ckpt {arr.shape} vs model "
+                    f"{np.shape(v)}")
         out.append(arr)
     return manifest["step"], jax.tree_util.tree_unflatten(treedef, out)

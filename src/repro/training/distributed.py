@@ -26,7 +26,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.training.optimizer import Optimizer, apply_updates
+from repro.training.optimizer import Optimizer, OptState, apply_updates
 
 PyTree = Any
 # loss_fn(params, batch_slice, key) -> (loss, aux)
@@ -67,6 +67,8 @@ def make_spmd_train_step(
     mesh: Mesh,
     data_axes: Sequence[str] = ("data",),
     replicate_params_axes: Optional[Sequence[str]] = None,
+    param_specs: Optional[Any] = None,
+    opt_state_specs: Optional[Any] = None,
 ):
     """shard_map train step over a real mesh.
 
@@ -76,6 +78,24 @@ def make_spmd_train_step(
     each trainer computes its gradient on its own partition (self-sufficient:
     no neighbor traffic), then ``pmean`` — the AllReduce of Algorithm 1
     line 8 — averages gradients before the shared optimizer step.
+
+    ``param_specs`` (a PartitionSpec pytree mirroring ``params``, e.g.
+    ``repro.sharding.kge_param_specs``) opts individual parameters out of
+    replication: a model-axis row-sharded entity table
+    (``repro.sharding.embedding``) stays sharded through the step — its
+    gradients are shard-local by construction (the forward psum exchange
+    broadcasts the cotangent, each shard scatter-adds only its own rows),
+    so they are pmean'd over ``data_axes`` only, like every other leaf, and
+    the optimizer updates each row block in place.  The ``loss_fn`` must
+    perform the shard-local gather + exchange itself (pass
+    ``model_axis="model"`` into the model's ``vertex_input`` path).
+
+    With ``param_specs`` set, the optimizer-state specs default to
+    adam-shaped moments (``OptState(step, mu, nu)`` with both moment trees
+    mirroring the params).  An optimizer whose state has a different
+    structure (plain SGD has ``mu=None``; momentum SGD has ``nu=None``)
+    needs an explicit ``opt_state_specs`` tree, otherwise shard_map raises
+    a pytree-structure error at trace time.
     """
     data_axes = tuple(data_axes)
     all_axes = tuple(mesh.axis_names)
@@ -83,6 +103,17 @@ def make_spmd_train_step(
 
     batch_spec = P(data_axes)      # leading trainer axis sharded
     rep_spec = P()                 # params replicated
+    p_spec = rep_spec if param_specs is None else param_specs
+    # Adam-style moments mirror their parameters, so they shard the same
+    # way (matches opt_state_shardings in repro.sharding.rules); the step
+    # scalar stays replicated.  Optimizers with a different state
+    # structure must pass opt_state_specs (see docstring).
+    if opt_state_specs is not None:
+        o_spec = opt_state_specs
+    elif param_specs is not None:
+        o_spec = OptState(step=rep_spec, mu=param_specs, nu=param_specs)
+    else:
+        o_spec = rep_spec
 
     def shard_body(params, opt_state, batch, keys):
         # strip the per-shard leading axis of size trainers/shard (==1 when
@@ -110,8 +141,8 @@ def make_spmd_train_step(
 
     sharded = shard_map(
         shard_body, mesh=mesh,
-        in_specs=(rep_spec, rep_spec, batch_spec, batch_spec),
-        out_specs=(rep_spec, rep_spec, rep_spec),
+        in_specs=(p_spec, o_spec, batch_spec, batch_spec),
+        out_specs=(p_spec, o_spec, rep_spec),
         check_rep=False,
     )
 

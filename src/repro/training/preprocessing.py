@@ -19,6 +19,7 @@ from repro.core import (
 )
 from repro.core.expansion import PaddedPartitionBatch, SelfSufficientPartition
 from repro.core.minibatch import _PartitionCSR
+from repro.sharding.embedding import ShardedTableLayout
 
 
 @dataclasses.dataclass
@@ -32,6 +33,9 @@ class PreprocessedGraph:
     # mini-batch mode only:
     budget: Optional[BatchBudget] = None
     csrs: Optional[List[_PartitionCSR]] = None
+    # entity-table layout when the embedding table is row-sharded over the
+    # model axis (repro.sharding.embedding); None = replicated table
+    table_layout: Optional[ShardedTableLayout] = None
 
     @property
     def num_partitions(self) -> int:
@@ -48,12 +52,16 @@ def preprocess_graph(
     batch_size: Optional[int] = None,
     num_negatives: int = 1,
     sampler: str = "constraint",
+    num_table_shards: int = 1,
 ) -> PreprocessedGraph:
     """Partition ``train_kg`` and make every partition self-sufficient.
 
     With ``batch_size`` set, also probes the comp-graph budgets (sized
     against the same positive↔negative pairing the mini-batch iterator uses)
     and builds the per-partition in-edge CSRs the hot path gathers from.
+    With ``num_table_shards > 1``, derives the entity-table
+    ``ShardedTableLayout`` the pipeline's gather plans and the model's
+    row-sharded table both follow.
     """
     parts = partition_graph(train_kg, num_trainers, strategy, seed=seed)
     partitions = expand_all(train_kg, parts, num_hops)
@@ -62,6 +70,9 @@ def preprocess_graph(
         partitions=partitions,
         padded=pad_partitions(partitions),
         replication_factor=replication_factor(train_kg, parts),
+        table_layout=(
+            ShardedTableLayout(train_kg.num_entities, num_table_shards)
+            if num_table_shards > 1 else None),
     )
     if batch_size is not None:
         pre.budget = plan_budgets(

@@ -60,6 +60,9 @@ class TrainConfig:
     eval_every: int = 0                 # 0 => only at end
     pipeline: str = "async"             # "async" | "serial" input pipeline
     prefetch: int = 2                   # per-partition prefetch queue depth
+    num_table_shards: int = 1           # >1: row-shard the entity embedding
+    #   table over the model axis (repro.sharding.embedding); the pipeline
+    #   then emits per-shard gather plans with every batch
 
 
 class KGETrainer:
@@ -72,6 +75,12 @@ class KGETrainer:
         train_kg = splits["train"].with_inverse_relations()
         self.train_kg = train_kg
 
+        feat = train_kg.features
+        if cfg.num_table_shards > 1 and feat is not None:
+            raise ValueError(
+                "num_table_shards > 1 requires learned entity embeddings "
+                "(feature-mode models have no table to shard)")
+
         # ---- offline preprocessing (paper §3.2) ----
         self.pre: PreprocessedGraph = preprocess_graph(
             train_kg,
@@ -79,10 +88,10 @@ class KGETrainer:
             num_hops=cfg.num_hops, seed=cfg.seed,
             batch_size=cfg.batch_size, num_negatives=cfg.num_negatives,
             sampler=cfg.negative_sampler,
+            num_table_shards=cfg.num_table_shards,
         )
 
         # ---- model ----
-        feat = train_kg.features
         self.kge_cfg = KGEConfig(
             rgcn=RGCNConfig(
                 num_entities=train_kg.num_entities,
@@ -93,6 +102,7 @@ class KGETrainer:
                 feature_dim=None if feat is None else feat.shape[1],
                 dropout=cfg.dropout,
                 use_kernel=cfg.use_kernel,
+                num_table_shards=cfg.num_table_shards,
             ),
             decoder=cfg.decoder,
             num_negatives=cfg.num_negatives,
@@ -114,7 +124,8 @@ class KGETrainer:
         if self._fullgraph:
             self._step = make_simulated_train_step(
                 self._fullgraph_loss, optimizer)
-            self.pipeline: InputPipeline = FullGraphPipeline(self.pre.padded)
+            self.pipeline: InputPipeline = FullGraphPipeline(
+                self.pre.padded, table_layout=self.pre.table_layout)
         else:
             self._step = make_simulated_train_step(
                 self._minibatch_loss, optimizer)
@@ -128,6 +139,7 @@ class KGETrainer:
                 sampler=cfg.negative_sampler,
                 csrs=self.pre.csrs,
                 prefetch=cfg.prefetch,
+                table_layout=self.pre.table_layout,
             )
 
     # ------------------------------------------------------------------ #
@@ -187,9 +199,10 @@ class KGETrainer:
             "loss": float(np.mean(losses)) if losses else float("nan"),
             "t_get_compute_graph": stats.exposed_wait_s,
             "t_host_build": stats.host_build_s,
+            "t_warmup": stats.warmup_s,
             "overlap_fraction": stats.overlap_fraction(),
             "t_device_step": t_device,
-            "t_epoch": stats.exposed_wait_s + t_device,
+            "t_epoch": stats.warmup_s + stats.exposed_wait_s + t_device,
             "num_batches": nbatches,
         }
         self.timings.append(rec)

@@ -16,9 +16,10 @@ from repro.core.partition import (
     _vertex_cut_partition_loop, vertex_cut_partition,
 )
 from repro.data.pipeline import (
-    AsyncMinibatchPipeline, FullGraphPipeline, SerialMinibatchPipeline,
-    make_input_pipeline,
+    AsyncMinibatchPipeline, FullGraphPipeline, PipelineStats,
+    SerialMinibatchPipeline, make_input_pipeline,
 )
+from repro.sharding.embedding import ShardedTableLayout
 
 
 def _expanded(kg, p, seed=0):
@@ -82,6 +83,30 @@ class TestPipelineEquivalence:
                 np.testing.assert_array_equal(
                     np.asarray(db[f.name]), getattr(hb, f.name))
 
+    @pytest.mark.parametrize("num_shards", [2, 4])
+    def test_async_device_batches_carry_identical_plans(self, small_kg,
+                                                        num_shards):
+        """serial == async extends to sharded-table batches: the gather
+        plan the collator precomputes is part of the equivalence."""
+        parts = _expanded(small_kg, 2)
+        budget = plan_budgets(parts, 32, 1, 2, seed=0)
+        layout = ShardedTableLayout(small_kg.num_entities, num_shards)
+        kw = dict(batch_size=32, num_negatives=1, num_hops=2,
+                  budget=budget, seed=13, table_layout=layout)
+        serial = SerialMinibatchPipeline(parts, **kw)
+        asynch = AsyncMinibatchPipeline(parts, prefetch=2, **kw)
+        got_s = list(serial.device_batches(1))
+        got_a = list(asynch.device_batches(1))
+        assert len(got_s) == len(got_a) > 0
+        for sb, ab in zip(got_s, got_a):
+            assert set(sb) == set(ab)
+            assert "shard_local_ids" in sb and "shard_owned" in sb
+            # (P, S, V_b): trainer axis leading, then the shard axis
+            assert sb["shard_local_ids"].shape[:2] == (2, num_shards)
+            for k in sb:
+                np.testing.assert_array_equal(np.asarray(sb[k]),
+                                              np.asarray(ab[k]))
+
     def test_async_stats_overlap_bounds(self, small_kg):
         parts = _expanded(small_kg, 4)
         budget = plan_budgets(parts, 32, 1, 2, seed=0)
@@ -92,6 +117,7 @@ class TestPipelineEquivalence:
         stats = pipe.last_stats
         assert stats.num_batches == n > 0
         assert stats.host_build_s > 0
+        assert stats.warmup_s > 0       # pipeline fill is accounted...
         assert 0.0 <= stats.overlap_fraction() <= 1.0
 
     def test_worker_error_propagates(self, small_kg):
@@ -212,6 +238,136 @@ class TestBudgetPairing:
         assert corrupted.max() >= sp.num_core_vertices  # support vertex hit
         with pytest.raises(ValueError, match="unknown negative sampler"):
             sample_epoch_negatives(rng, sp, 1, sampler="nope")
+
+
+# ====================================================================== #
+# Pipeline stats: warm-up split out, only consumed batches counted
+# ====================================================================== #
+class TestPipelineStatsAccounting:
+    def test_overlap_uses_steady_state_only(self):
+        """overlap_fraction divides exposed by CONSUMED steady-state build
+        time; warm-up lives in its own field and does not inflate it."""
+        stats = PipelineStats(host_build_s=2.0, exposed_wait_s=0.5,
+                              warmup_s=10.0, num_batches=5)
+        assert stats.overlap_fraction() == pytest.approx(0.75)
+        # degenerate single-batch epoch: everything is warm-up, overlap 0
+        assert PipelineStats(warmup_s=1.0,
+                             num_batches=1).overlap_fraction() == 0.0
+
+    def test_serial_first_batch_is_warmup(self, small_kg):
+        parts = _expanded(small_kg, 2)
+        budget = plan_budgets(parts, 32, 1, 2, seed=0)
+        pipe = SerialMinibatchPipeline(
+            parts, batch_size=32, num_negatives=1, num_hops=2,
+            budget=budget, seed=0)
+        n = sum(1 for _ in pipe.epoch_batches(1))
+        stats = pipe.last_stats
+        assert stats.num_batches == n
+        assert stats.warmup_s > 0
+        # serial exposes every steady-state build
+        assert stats.exposed_wait_s == stats.host_build_s
+        assert stats.overlap_fraction() == 0.0
+
+    def test_unconsumed_prefetch_tail_not_counted(self, small_kg):
+        """With a deep prefetch queue and a consumer that stops early, the
+        tail of built-but-never-consumed batches must not count toward
+        host_build_s (the double-counting that inflated overlap)."""
+        parts = _expanded(small_kg, 2)
+        budget = plan_budgets(parts, 32, 1, 2, seed=0)
+        deep = AsyncMinibatchPipeline(
+            parts, batch_size=32, num_negatives=1, num_hops=2,
+            budget=budget, seed=0, prefetch=8)
+        it = deep.epoch_batches(1)
+        for _ in range(3):          # consume 3 batches, abandon the rest
+            next(it)
+        it.close()
+        shallow_total = deep.last_stats.host_build_s
+        # 2 steady-state batches of build time, not 3 + the prefetched tail
+        full = AsyncMinibatchPipeline(
+            parts, batch_size=32, num_negatives=1, num_hops=2,
+            budget=budget, seed=0, prefetch=8)
+        n_total = sum(1 for _ in full.epoch_batches(1))
+        assert n_total > 3
+        assert deep.last_stats.num_batches == 3
+        assert shallow_total < full.last_stats.host_build_s
+        # same contract on the device path, where the collator thread runs
+        # ahead of the consumer: abandoned batches never enter the stats
+        dev = AsyncMinibatchPipeline(
+            parts, batch_size=32, num_negatives=1, num_hops=2,
+            budget=budget, seed=0, prefetch=8)
+        it = dev.device_batches(1)
+        for _ in range(3):
+            next(it)
+        it.close()
+        assert dev.last_stats.num_batches == 3
+        assert dev.last_stats.host_build_s < full.last_stats.host_build_s
+
+
+# ====================================================================== #
+# Sharded-table checkpoints round-trip across layouts
+# ====================================================================== #
+class TestShardedCheckpointRoundTrip:
+    def test_save_sharded_restore_replicated_and_back(self, tmp_path):
+        import jax
+        from repro.models import KGEConfig, RGCNConfig, init_kge_params
+        from repro.training import restore_checkpoint, save_checkpoint
+        from repro.sharding.embedding import unshard_table
+
+        def cfg(s):
+            return KGEConfig(rgcn=RGCNConfig(
+                num_entities=101, num_relations=6, hidden_dim=16,
+                num_layers=2, num_bases=2, num_table_shards=s))
+
+        p_dense = init_kge_params(jax.random.PRNGKey(0), cfg(1))
+        p_shard = init_kge_params(jax.random.PRNGKey(0), cfg(4))
+        assert p_shard["entity_embedding"].shape[0] == 4
+
+        # sharded -> replicated
+        path = save_checkpoint(str(tmp_path / "a"), 1, p_shard)
+        step, restored = restore_checkpoint(path, p_dense)
+        assert step == 1
+        for a, b in zip(jax.tree_util.tree_leaves(restored),
+                        jax.tree_util.tree_leaves(p_dense)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+        # replicated -> sharded (and across shard counts)
+        path = save_checkpoint(str(tmp_path / "b"), 2, p_dense)
+        _, restored = restore_checkpoint(path, p_shard)
+        np.testing.assert_array_equal(
+            np.asarray(restored["entity_embedding"]),
+            np.asarray(p_shard["entity_embedding"]))
+        p2 = init_kge_params(jax.random.PRNGKey(0), cfg(2))
+        path = save_checkpoint(str(tmp_path / "c"), 3, p_shard)
+        _, restored = restore_checkpoint(path, p2)
+        np.testing.assert_array_equal(
+            unshard_table(np.asarray(restored["entity_embedding"]), 101),
+            np.asarray(p_dense["entity_embedding"]))
+
+    def test_non_table_shape_mismatch_still_strict(self, tmp_path):
+        from repro.training import restore_checkpoint, save_checkpoint
+        path = save_checkpoint(str(tmp_path), 0, {"w": np.zeros((3, 4))})
+        with pytest.raises(ValueError, match="shape mismatch"):
+            restore_checkpoint(path, {"w": np.zeros((4, 4))})
+
+
+# ====================================================================== #
+# Full-graph pipeline carries an epoch-invariant plan
+# ====================================================================== #
+class TestFullGraphShardedPlan:
+    def test_resident_batch_has_plan(self, partitioned):
+        from repro.core import pad_partitions
+        _, expanded = partitioned
+        pb = pad_partitions(expanded)
+        n_ent = int(pb.local_to_global.max()) + 1
+        pipe = FullGraphPipeline(
+            pb, table_layout=ShardedTableLayout(n_ent, 2))
+        (b,) = list(pipe.device_batches(1))
+        assert b["shard_local_ids"].shape[:2] == \
+            (pb.local_to_global.shape[0], 2)
+        # exactly one owner per (trainer, vertex) slot
+        np.testing.assert_array_equal(
+            np.asarray(b["shard_owned"]).sum(axis=1),
+            np.ones(pb.local_to_global.shape))
 
 
 # ====================================================================== #
