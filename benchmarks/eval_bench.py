@@ -1,0 +1,141 @@
+"""Evaluation-subsystem benchmark (PR 3): the host filter-index cost and the
+filtered-ranking wall clock, dense vs candidate-axis-sharded.
+
+Three measurements:
+
+* filter-index BUILD — the per-triplet dict-of-sets Python loop
+  (``build_filter_index``, kept as reference) vs the one-lexsort vectorized
+  ``CSRFilterIndex.build``;
+* per-batch BIAS construction — the Python double loop over (test row,
+  known tail) vs the CSR searchsorted + scatter;
+* end-to-end filtered ranking — dense ``ranking_metrics`` vs
+  ``sharded_ranking_metrics`` at 2/4 shards (simulated mesh), recording that
+  the sharded metrics are EXACTLY the dense ones.
+
+Writes ``BENCH_eval.json`` next to the repo root so the eval-path perf
+trajectory is recorded across PRs (acceptance gate: CSR filter build ≥5x
+the loop baseline), and emits the usual CSV rows via ``benchmarks.run``.
+
+Run: PYTHONPATH=src python -m benchmarks.eval_bench [--full]
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import emit, time_call
+
+JSON_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_eval.json")
+
+
+def run(quick: bool = True) -> List[Dict]:
+    from repro.core.graph import make_synthetic_kg, split_train_valid_test
+    from repro.eval import (
+        CSRFilterIndex, build_filter_index, ranking_metrics,
+        sharded_ranking_metrics,
+    )
+    from repro.eval.ranking import _filter_bias
+
+    n_ent, n_rel, n_edge = (3000, 24, 60_000) if quick else \
+        (20_000, 120, 400_000)
+    kg = make_synthetic_kg(n_ent, n_rel, n_edge, seed=0)
+    splits = split_train_valid_test(kg)
+    graphs = [g.with_inverse_relations() for g in splits.values()]
+    n_trip = sum(g.num_edges for g in graphs)
+
+    # ---- filter-index build: Python loop vs vectorized CSR ----
+    # capture each timed call's last result so nothing runs an extra
+    # time just to fetch it (the loop build dominates --full wall clock)
+    res: Dict[str, object] = {}
+
+    def timed(name, fn):
+        seconds = time_call(lambda: res.__setitem__(name, fn()))
+        return seconds, res[name]
+
+    loop_s, ref_idx = timed("ref", lambda: build_filter_index(graphs))
+    csr_s, csr_idx = timed("csr", lambda: CSRFilterIndex.build(graphs))
+    build_speedup = loop_s / max(csr_s, 1e-9)
+
+    # ---- per-batch bias: double loop vs searchsorted + scatter ----
+    test = splits["test"].with_inverse_relations().triplets()[:512]
+    bias_loop_s, bias_loop = timed(
+        "bias_ref", lambda: _filter_bias(ref_idx, test, n_ent))
+    bias_csr_s, bias_csr = timed(
+        "bias_csr", lambda: _filter_bias(csr_idx, test, n_ent))
+    np.testing.assert_array_equal(bias_loop, bias_csr)
+    bias_speedup = bias_loop_s / max(bias_csr_s, 1e-9)
+
+    # ---- ranking wall clock: dense vs candidate-axis-sharded ----
+    rng = np.random.default_rng(0)
+    d = 32 if quick else 64
+    emb = rng.normal(size=(n_ent, d)).astype(np.float32)
+    table = rng.normal(size=(2 * n_rel, d)).astype(np.float32)
+    rank_trips = test[:256]
+    dense_s, m_dense = timed(
+        "dense", lambda: ranking_metrics(emb, table, rank_trips, csr_idx))
+    sharded_rows = []
+    for s in (2, 4):
+        wall, m_sh = timed(
+            f"sh{s}", lambda s=s: sharded_ranking_metrics(
+                emb, table, rank_trips, csr_idx, s))
+        sharded_rows.append({
+            "num_shards": s,
+            "rank_wall_s": round(wall, 4),
+            "metrics_equal_dense": m_sh == m_dense,
+        })
+
+    payload = {
+        "bench": "eval",
+        "graph": {"entities": n_ent, "relations": n_rel,
+                  "filter_triplets": n_trip, "quick": quick},
+        "filter_build": {
+            "loop_s": round(loop_s, 4),
+            "csr_s": round(csr_s, 4),
+            "speedup": round(build_speedup, 2),
+        },
+        "bias_build": {
+            "batch": int(test.shape[0]),
+            "loop_s": round(bias_loop_s, 4),
+            "csr_s": round(bias_csr_s, 4),
+            "speedup": round(bias_speedup, 2),
+        },
+        "ranking": {
+            "test_triplets": int(rank_trips.shape[0]),
+            "hidden_dim": d,
+            "dense_wall_s": round(dense_s, 4),
+            "mrr": m_dense["mrr"],
+            "sharded": sharded_rows,
+        },
+    }
+    with open(JSON_PATH, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+
+    rows = [
+        {"name": "filter_build_loop", "us_per_call": loop_s * 1e6,
+         "triplets": n_trip},
+        {"name": "filter_build_csr", "us_per_call": csr_s * 1e6,
+         "speedup_vs_loop": round(build_speedup, 2)},
+        {"name": "bias_loop", "us_per_call": bias_loop_s * 1e6,
+         "batch": int(test.shape[0])},
+        {"name": "bias_csr", "us_per_call": bias_csr_s * 1e6,
+         "speedup_vs_loop": round(bias_speedup, 2)},
+        {"name": "rank_dense", "us_per_call": dense_s * 1e6,
+         "mrr": round(m_dense["mrr"], 5)},
+    ]
+    for r in sharded_rows:
+        rows.append({"name": f"rank_sharded_{r['num_shards']}",
+                     "us_per_call": r["rank_wall_s"] * 1e6,
+                     "equal_dense": r["metrics_equal_dense"]})
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    print("\n".join(emit(run(quick=not ap.parse_args().full), "eval")))

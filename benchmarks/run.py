@@ -23,7 +23,7 @@ def main() -> None:
     args = ap.parse_args()
     quick = not args.full
 
-    from benchmarks import comm_analysis, figs, kernels_bench, \
+    from benchmarks import comm_analysis, eval_bench, figs, kernels_bench, \
         pipeline_bench, roofline, serve_bench
     from benchmarks import t2_partition_stats, t3_accuracy_speedup
     from benchmarks import t4_fixed_updates, t5_partition_strategies
@@ -32,6 +32,7 @@ def main() -> None:
         "pipeline": lambda: pipeline_bench.run(quick),  # BENCH_pipeline.json
         "embedding":                                    # BENCH_embedding.json
             lambda: pipeline_bench.run_embedding(quick),
+        "eval": lambda: eval_bench.run(quick),          # BENCH_eval.json
         "t2": lambda: t2_partition_stats.run(quick),      # Table 2
         "t3": lambda: t3_accuracy_speedup.run(quick),     # Table 3
         "t4": lambda: t4_fixed_updates.run(quick),        # Table 4

@@ -57,7 +57,9 @@ from repro.core.minibatch import (
     BatchBudget, EdgeMiniBatch, _PartitionCSR, iterate_edge_minibatches,
     stack_minibatches,
 )
-from repro.sharding.embedding import ShardedGatherPlan, ShardedTableLayout
+from repro.sharding.embedding import (
+    ShardedGatherPlan, ShardedTableLayout, plan_local_gather,
+)
 
 
 @dataclasses.dataclass
@@ -442,6 +444,32 @@ class FullGraphPipeline(InputPipeline):
             self._device = {k: jnp.asarray(v) for k, v in self._host.items()}
         self._stats = PipelineStats(num_batches=1)
         yield self._device
+
+
+def eval_partition_batches(
+    padded: PaddedPartitionBatch,
+    table_layout: Optional[ShardedTableLayout] = None,
+) -> Iterator[Dict]:
+    """Per-partition device batches for the eval-time encoder pass.
+
+    The evaluation twin of ``FullGraphPipeline``'s resident batch: yields
+    one partition slice of the padded batch at a time (the encoder streams
+    partitions instead of materializing one full-graph mega-partition), and
+    with a row-sharded entity table attaches the host-precomputed
+    ``ShardedGatherPlan`` for the slice's ``local_to_global`` gather — the
+    same plan the training collator ships with every mini-batch, so
+    ``encode_partition`` never plans indices in-jit on this path.
+    """
+    import jax.numpy as jnp
+    for i in range(padded.num_partitions):
+        part = {f.name: jnp.asarray(getattr(padded, f.name)[i])
+                for f in dataclasses.fields(padded)}
+        if table_layout is not None:
+            local, owned = plan_local_gather(
+                table_layout, np.asarray(padded.local_to_global[i]))
+            part["shard_local_ids"] = jnp.asarray(local)
+            part["shard_owned"] = jnp.asarray(owned)
+        yield part
 
 
 # ====================================================================== #

@@ -1,6 +1,14 @@
-"""Link-prediction evaluation (filtered MRR / Hits@k)."""
+"""Link-prediction evaluation (filtered MRR / Hits@k): vectorized CSR
+filter index, dense blocked ranking, and the candidate-axis-sharded path
+over the row-sharded entity table (``repro.eval.sharded``)."""
 from repro.eval.ranking import (
-    build_filter_index, ranking_metrics, evaluate_both_directions,
+    CSRFilterIndex, FILTER_BIAS, build_filter_index, evaluate_both_directions,
+    mean_rank, metrics_from_ranks, ranking_metrics,
 )
-__all__ = ["build_filter_index", "ranking_metrics",
-           "evaluate_both_directions"]
+from repro.eval.sharded import (
+    make_sharded_rank_step, sharded_rank_counts, sharded_ranking_metrics,
+)
+__all__ = ["CSRFilterIndex", "FILTER_BIAS", "build_filter_index",
+           "ranking_metrics", "evaluate_both_directions", "mean_rank",
+           "metrics_from_ranks", "make_sharded_rank_step",
+           "sharded_rank_counts", "sharded_ranking_metrics"]

@@ -7,13 +7,32 @@ Both corruption directions are evaluated — tail corruption on (s, r, t) and,
 through the inverse relation, head corruption.
 
 Scoring runs through the Pallas ranking kernel
-(``repro.kernels.distmult_rank_scores``) in candidate blocks.
+(``repro.kernels.kge_score`` via its block-padding wrapper) in candidate
+blocks; with ``num_shards > 1`` ranking is candidate-axis-sharded over the
+row-sharded entity table (``repro.eval.sharded``).
+
+Filter index
+------------
+The filter is stored as a ``CSRFilterIndex``: known (s, r) pairs as a sorted
+int64 key array plus a CSR ``indptr`` into one flat ``tails`` array.  Both
+the build (one lexsort over all split triplets) and the per-batch bias
+construction (searchsorted + one fancy-index scatter) are vectorized numpy —
+no per-triplet Python loop.  ``build_filter_index`` keeps the dict-of-sets
+reference implementation the CSR index is tested against.
+
+Rank convention
+---------------
+Ties are scored with the standard mean ("realistic") rank:
+``rank = 1 + #{score > true} + 0.5 * #{score == true, candidate != true}``.
+A strict ``scores > true`` count alone would give candidates tying the true
+score rank 1 — optimistically biased for embeddings with exact ties
+(duplicate entities, saturated scores).
 """
 from __future__ import annotations
 
-from typing import Dict, Iterable, Optional, Sequence
+import dataclasses
+from typing import Dict, Iterable, Optional, Sequence, Union
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -21,9 +40,21 @@ from repro.core.graph import KnowledgeGraph
 from repro.kernels.ops import distmult_rank_scores
 from repro.models.decoders import score_against_candidates
 
+# Additive score mask for filtered-out candidates.  Large-negative rather
+# than -inf so a filtered candidate still loses cleanly without generating
+# inf-inf NaNs anywhere downstream; pad rows (never real candidates) do use
+# -inf (see kernels.ops.kge_score_padded / eval.sharded).
+FILTER_BIAS = -1e9
+
 
 def build_filter_index(graphs: Iterable[KnowledgeGraph]) -> Dict:
-    """(s, r) -> set of known-true tails, over all splits."""
+    """(s, r) -> set of known-true tails, over all splits.
+
+    Reference implementation (per-triplet Python loop).  Production code
+    uses ``CSRFilterIndex.build`` — bit-identical filtered metrics, built
+    and applied with vectorized numpy; this dict form remains the oracle
+    the CSR index is property-tested against and the benchmark baseline.
+    """
     idx: Dict = {}
     for g in graphs:
         for s, r, t in g.triplets():
@@ -31,15 +62,149 @@ def build_filter_index(graphs: Iterable[KnowledgeGraph]) -> Dict:
     return idx
 
 
+@dataclasses.dataclass(frozen=True)
+class CSRFilterIndex:
+    """Vectorized ``(s, r) → known tails`` filter index in CSR form.
+
+    ``keys`` holds every known (s, r) pair encoded as ``s * num_relations
+    + r`` (int64, sorted, unique); ``tails[indptr[k]:indptr[k+1]]`` are the
+    known-true tails of ``keys[k]`` (deduplicated).  Lookup for a whole test
+    batch is one ``searchsorted`` over ``keys``; the (B, N) filter bias is
+    one fancy-index scatter — no per-triplet Python loop (contrast
+    ``build_filter_index``).
+    """
+
+    keys: np.ndarray        # (K,) int64, sorted unique s * num_relations + r
+    indptr: np.ndarray      # (K + 1,) int64
+    tails: np.ndarray       # (nnz,) int32, grouped by key
+    num_relations: int      # key encoding stride (covers inverse relations)
+
+    @classmethod
+    def build(cls, graphs: Iterable[KnowledgeGraph],
+              num_relations: Optional[int] = None) -> "CSRFilterIndex":
+        """Build from all splits' triplets with one lexsort (duplicates —
+        across splits or within one — are dropped)."""
+        graphs = list(graphs)
+        if num_relations is None:
+            num_relations = max(
+                [int(g.num_relations) for g in graphs], default=1)
+        if graphs:
+            cat = np.concatenate([g.triplets() for g in graphs], axis=0)
+        else:
+            cat = np.zeros((0, 3), np.int32)
+        key = cat[:, 0].astype(np.int64) * num_relations + cat[:, 1]
+        tail = cat[:, 2].astype(np.int32)
+        order = np.lexsort((tail, key))
+        key, tail = key[order], tail[order]
+        if key.size:
+            keep = np.ones(key.size, bool)
+            keep[1:] = (key[1:] != key[:-1]) | (tail[1:] != tail[:-1])
+            key, tail = key[keep], tail[keep]
+        ukeys, starts = np.unique(key, return_index=True)
+        indptr = np.concatenate(
+            [starts, [key.size]]).astype(np.int64)
+        return cls(keys=ukeys, indptr=indptr, tails=tail,
+                   num_relations=int(num_relations))
+
+    @property
+    def num_pairs(self) -> int:
+        return int(self.keys.shape[0])
+
+    def _check_rel(self, r) -> None:
+        # the key encoding s * num_relations + r is only injective for
+        # r < num_relations: an out-of-range query (e.g. inverse relation
+        # ids against an index built WITHOUT inverse graphs) would silently
+        # hit a different (s, r) pair's tails where the dict reference
+        # would just find nothing
+        r = np.asarray(r)
+        if np.any(r >= self.num_relations) or np.any(r < 0):
+            raise ValueError(
+                f"query relation id outside [0, {self.num_relations}) — "
+                f"build the index over the same (inverse-augmented) "
+                f"relation vocabulary it is queried with")
+
+    def tails_of(self, s: int, r: int) -> np.ndarray:
+        """Known tails of one (s, r) pair (empty if absent) — test surface."""
+        self._check_rel(r)
+        q = np.int64(s) * self.num_relations + r
+        k = int(np.searchsorted(self.keys, q))
+        if k >= self.num_pairs or self.keys[k] != q:
+            return np.zeros(0, np.int32)
+        return self.tails[self.indptr[k]: self.indptr[k + 1]]
+
+    def bias(self, triplets: np.ndarray, num_cols: int) -> np.ndarray:
+        """(B, num_cols) float32 filter bias for a test batch: ``FILTER_BIAS``
+        on every known tail of each row's (s, r), 0 elsewhere — and always 0
+        on the row's own true tail (never self-filtered).  One searchsorted
+        + one scatter; equals the dict-of-sets double loop bit-for-bit."""
+        trip = np.asarray(triplets)
+        b = trip.shape[0]
+        out = np.zeros((b, num_cols), np.float32)
+        if b == 0 or self.num_pairs == 0:
+            return out
+        self._check_rel(trip[:, 1])
+        q = trip[:, 0].astype(np.int64) * self.num_relations + trip[:, 1]
+        pos = np.searchsorted(self.keys, q)
+        pos_c = np.minimum(pos, self.num_pairs - 1)
+        found = (pos < self.num_pairs) & (self.keys[pos_c] == q)
+        starts = np.where(found, self.indptr[pos_c], 0)
+        counts = np.where(found, self.indptr[pos_c + 1] - starts, 0)
+        total = int(counts.sum())
+        if total:
+            rows = np.repeat(np.arange(b), counts)
+            # flat tails positions: starts[i] + (0 .. counts[i]-1) per row
+            csum = np.concatenate([[0], np.cumsum(counts)[:-1]])
+            offs = np.arange(total) - np.repeat(csum, counts)
+            cols = self.tails[np.repeat(starts, counts) + offs]
+            out[rows, cols] = FILTER_BIAS
+        out[np.arange(b), trip[:, 2]] = 0.0
+        return out
+
+
+FilterIndex = Union[Dict, CSRFilterIndex]
+
+
+def _filter_bias(filter_index: FilterIndex, batch: np.ndarray,
+                 num_cols: int) -> np.ndarray:
+    """(B, num_cols) bias for one test batch from either index form (the
+    dict path is the loop reference the CSR path is tested against)."""
+    if isinstance(filter_index, CSRFilterIndex):
+        return filter_index.bias(batch, num_cols)
+    bias = np.zeros((batch.shape[0], num_cols), np.float32)
+    for i, (s, r, t) in enumerate(batch):
+        known = filter_index.get((int(s), int(r)), ())
+        for k in known:
+            if k != int(t):
+                bias[i, k] = FILTER_BIAS
+    return bias
+
+
+def mean_rank(greater, equal_incl_true):
+    """Tie-aware rank from candidate counts: ``equal_incl_true`` counts
+    score-ties INCLUDING the true candidate itself (which always ties)."""
+    return 1.0 + np.asarray(greater, np.float64) \
+        + 0.5 * (np.asarray(equal_incl_true, np.float64) - 1.0)
+
+
+def metrics_from_ranks(ranks: np.ndarray,
+                       hits_ks: Sequence[int]) -> Dict[str, float]:
+    ranks = np.asarray(ranks, np.float64)
+    out = {"mrr": float(np.mean(1.0 / ranks))}
+    for k in hits_ks:
+        out[f"hits@{k}"] = float(np.mean(ranks <= k))
+    return out
+
+
 def ranking_metrics(
     entity_emb: np.ndarray,          # (N, d) encoded entity embeddings
     rel_diag_table: np.ndarray,      # (R, d) decoder relation table
     test_triplets: np.ndarray,       # (T, 3) global ids
-    filter_index: Dict,
+    filter_index: FilterIndex,
     hits_ks: Sequence[int] = (1, 3, 10),
     candidates: Optional[np.ndarray] = None,   # (T, C) per-test candidates
     batch_size: int = 256,
     decoder: str = "distmult",
+    num_shards: int = 1,
 ) -> Dict[str, float]:
     """Filtered MRR / Hits@k, tail-corruption direction.
 
@@ -48,10 +213,22 @@ def ranking_metrics(
     goes through the Pallas ranking kernel; TransE/ComplEx go through
     ``score_against_candidates``.
 
+    ``num_shards > 1`` (DistMult, all-entities protocol only) routes to the
+    candidate-axis-sharded path (``repro.eval.sharded``): the entity table
+    is row-sharded, each shard scores only its own rows and contributes
+    partial greater/equal counts — exactly the same metrics as this dense
+    reference (enforced by ``tests/test_eval_ranking.py``).
+
     Run twice (once on the graph, once on the inverse-relation graph) and
     average to get the standard both-directions protocol —
     ``evaluate_both_directions`` does that.
     """
+    if num_shards > 1 and candidates is None and decoder == "distmult":
+        from repro.eval.sharded import sharded_ranking_metrics
+        return sharded_ranking_metrics(
+            entity_emb, rel_diag_table, test_triplets, filter_index,
+            num_shards, hits_ks=hits_ks, batch_size=batch_size)
+
     n = entity_emb.shape[0]
     emb = jnp.asarray(entity_emb)
     table = jnp.asarray(rel_diag_table)
@@ -65,12 +242,7 @@ def ranking_metrics(
 
         if candidates is None:
             # score against ALL entities, filtered setting
-            bias = np.zeros((b, n), np.float32)
-            for i, (s, r, t) in enumerate(batch):
-                known = filter_index.get((int(s), int(r)), ())
-                for k in known:
-                    if k != int(t):
-                        bias[i, k] = -1e9
+            bias = _filter_bias(filter_index, batch, n)
             if decoder == "distmult":
                 scores = distmult_rank_scores(
                     h_s, rel, table, emb, jnp.asarray(bias))
@@ -81,7 +253,11 @@ def ranking_metrics(
                     {key: table}, decoder, h_s, rel, emb)
                 scores = scores + jnp.asarray(bias)
             true_scores = scores[jnp.arange(b), jnp.asarray(batch[:, 2])]
-            rank = 1 + jnp.sum(scores > true_scores[:, None], axis=1)
+            greater = jnp.sum(scores > true_scores[:, None], axis=1)
+            # the true candidate's own column always ties (bias 0 there) —
+            # mean_rank discounts it
+            equal = jnp.sum(scores == true_scores[:, None], axis=1)
+            rank = mean_rank(np.asarray(greater), np.asarray(equal))
         else:
             # ogbl-style: true tail + provided negative candidates
             cand = candidates[lo: lo + batch_size]           # (b, C)
@@ -90,14 +266,13 @@ def ranking_metrics(
             q = h_s * table[rel]
             neg_scores = jnp.einsum("bd,bcd->bc", q, cand_emb)
             true_scores = jnp.sum(q * emb[jnp.asarray(batch[:, 2])], axis=1)
-            rank = 1 + jnp.sum(neg_scores > true_scores[:, None], axis=1)
+            greater = jnp.sum(neg_scores > true_scores[:, None], axis=1)
+            equal = jnp.sum(neg_scores == true_scores[:, None], axis=1)
+            # candidates exclude the true tail, so no self-tie to discount
+            rank = mean_rank(np.asarray(greater), np.asarray(equal) + 1)
         ranks.append(np.asarray(rank))
 
-    ranks_np = np.concatenate(ranks).astype(np.float64)
-    out = {"mrr": float(np.mean(1.0 / ranks_np))}
-    for k in hits_ks:
-        out[f"hits@{k}"] = float(np.mean(ranks_np <= k))
-    return out
+    return metrics_from_ranks(np.concatenate(ranks), hits_ks)
 
 
 def evaluate_both_directions(
@@ -108,17 +283,20 @@ def evaluate_both_directions(
     num_relations_base: int,
     hits_ks: Sequence[int] = (1, 3, 10),
     decoder: str = "distmult",
+    num_shards: int = 1,
 ) -> Dict[str, float]:
     """Average of tail-corruption on (s,r,t) and on the inverse triplets
     (t, r+R, s) — i.e. head corruption.  ``rel_diag_table`` must cover the
-    doubled relation vocabulary (we train with inverse relations)."""
-    fidx = build_filter_index(
+    doubled relation vocabulary (we train with inverse relations).  The CSR
+    filter index over all splits (inverse relations included) is built once
+    and shared by both directions."""
+    fidx = CSRFilterIndex.build(
         [g.with_inverse_relations() for g in filter_graphs])
     fwd = test_kg.triplets()
     inv = np.stack([test_kg.dst, test_kg.rel + num_relations_base,
                     test_kg.src], axis=1)
     m_fwd = ranking_metrics(entity_emb, rel_diag_table, fwd, fidx, hits_ks,
-                            decoder=decoder)
+                            decoder=decoder, num_shards=num_shards)
     m_inv = ranking_metrics(entity_emb, rel_diag_table, inv, fidx, hits_ks,
-                            decoder=decoder)
+                            decoder=decoder, num_shards=num_shards)
     return {k: 0.5 * (m_fwd[k] + m_inv[k]) for k in m_fwd}

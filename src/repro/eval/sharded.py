@@ -1,0 +1,198 @@
+"""Candidate-axis-sharded filtered ranking over the row-sharded entity table.
+
+Dense ``ranking_metrics`` scores every test query against the full ``(N, d)``
+entity matrix on one device — the last single-device assumption in the
+system once training stores the entity table row-sharded over the ``model``
+mesh axis (``repro.sharding.embedding``).  This module shards the *candidate*
+axis of evaluation along the same row blocks:
+
+    per model shard s (owning table rows [s·rows, (s+1)·rows)):
+        h_s, m_r  ──►  Pallas kge_score kernel against ONLY the shard's
+                       rows (+ per-shard filter-bias block, -inf on pads)
+                  ──►  partial counts   greater_s = #{score > true}
+                                        equal_s   = #{score == true}
+                       (true score: the owning shard's kernel row, masked)
+    global rank = 1 + psum(greater_s) + 0.5 · (psum(equal_s) − 1)
+
+The exchange is integer (candidate counts) plus one one-hot float (the true
+score, owned by exactly one shard), so the sharded rank is EXACTLY the dense
+rank — not approximately: each per-candidate score is the same ``d``-length
+MXU dot the dense kernel computes, only tiled per shard, and the count psum
+is order-free.  ``tests/test_eval_ranking.py`` enforces identical MRR/Hits@k
+(``==``, not allclose) at 1/2/4 shards, including ties and padded rows.
+
+Two execution paths, mirroring ``sharded_gather``:
+
+* ``axis_name=None`` — masked single-device simulation: the full
+  ``(S, rows, d)`` stack is looped shard-by-shard and partials summed.
+* ``axis_name="model"`` — inside ``shard_map``: each device holds its
+  ``(1, rows, d)`` row block and ``(1, B, rows)`` bias block; partials are
+  ``jax.lax.psum``'d over the model axis (``make_sharded_rank_step``).
+
+Head/query embeddings are fetched through the PR-2 ``sharded_gather``
+exchange — ranking never materializes the dense entity matrix.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.ops import kge_score_padded
+from repro.sharding.embedding import (
+    ShardedTableLayout, plan_local_gather, shard_bias_blocks, shard_table,
+    sharded_gather,
+)
+
+
+def sharded_rank_counts(
+    table: jax.Array,        # (S, rows, d) sim / (1, rows, d) per device
+    h_s: jax.Array,          # (B, d) query head embeddings (replicated)
+    rel_diag: jax.Array,     # (B, d) gathered relation diagonals (replicated)
+    bias: jax.Array,         # (S, B, rows) sim / (1, B, rows) per device
+    true_local: jax.Array,   # (S, B) true-tail local row per shard
+    true_owned: jax.Array,   # (S, B) which shard owns each true tail
+    *,
+    axis_name: Optional[str] = None,
+    interpret: Optional[bool] = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Per-query global rank counts from shard-local kernel scores.
+
+    Returns ``(greater, equal, true_score)``: ``greater``/``equal`` are the
+    global candidate counts vs the true score (``equal`` INCLUDES the true
+    candidate's own self-tie; callers discount it via ``mean_rank``), and
+    ``true_score`` the reconstructed true-tail score.  The true score is
+    extracted from the owning shard's kernel output row — not recomputed
+    with a separate dot — so it is bit-identical to the dense kernel's
+    ``scores[b, t]`` and the ``>``/``==`` comparisons agree with the dense
+    path even at exact ties.  ``bias`` must be ``-inf`` on layout-padded
+    rows (``shard_bias_blocks``), which zeroes their count contribution.
+    """
+    b = h_s.shape[0]
+    rows_idx = jnp.arange(b)
+
+    if axis_name is None:
+        # masked single-device simulation over the full shard stack
+        scores = [kge_score_padded(h_s, rel_diag, table[s], bias[s],
+                                   interpret=interpret)
+                  for s in range(table.shape[0])]
+        true_score = sum(
+            jnp.where(true_owned[s], scores[s][rows_idx, true_local[s]], 0.0)
+            for s in range(table.shape[0]))
+        greater = sum(
+            jnp.sum((sc > true_score[:, None]).astype(jnp.int32), axis=1)
+            for sc in scores)
+        equal = sum(
+            jnp.sum((sc == true_score[:, None]).astype(jnp.int32), axis=1)
+            for sc in scores)
+        return greater, equal, true_score
+
+    if table.shape[0] != 1:
+        # same trap as sharded_gather: a replicated (S, rows, d) stack
+        # inside shard_map would score shard 0's rows everywhere and psum
+        # S wrong partial counts — fail at trace time instead
+        raise ValueError(
+            f"sharded_rank_counts under shard_map expects this device's "
+            f"(1, rows, d) row block, got {table.shape} — shard the table "
+            f"and bias over {axis_name!r}")
+    s = jax.lax.axis_index(axis_name)
+    scores = kge_score_padded(h_s, rel_diag, table[0], bias[0],
+                              interpret=interpret)
+    true_score = jax.lax.psum(
+        jnp.where(true_owned[s], scores[rows_idx, true_local[s]], 0.0),
+        axis_name)
+    greater = jax.lax.psum(
+        jnp.sum((scores > true_score[:, None]).astype(jnp.int32), axis=1),
+        axis_name)
+    equal = jax.lax.psum(
+        jnp.sum((scores == true_score[:, None]).astype(jnp.int32), axis=1),
+        axis_name)
+    return greater, equal, true_score
+
+
+def make_sharded_rank_step(mesh, *, model_axis: str = "model",
+                           interpret: Optional[bool] = None):
+    """Build the jitted ``shard_map`` rank-count step for a real mesh.
+
+    The entity-table row blocks and per-shard bias blocks are sharded over
+    ``model_axis`` (one block per device — the layouts ``kge_param_specs``
+    prescribes); queries and gather plans are replicated.  Returns
+    ``step(table, h_s, rel_diag, bias, true_local, true_owned) ->
+    (greater, equal, true_score)`` with globally psum'd outputs, exactly
+    equal to the ``axis_name=None`` simulation.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    def body(table, h_s, rel_diag, bias, true_local, true_owned):
+        return sharded_rank_counts(
+            table, h_s, rel_diag, bias, true_local, true_owned,
+            axis_name=model_axis, interpret=interpret)
+
+    sharded = shard_map(
+        body, mesh=mesh,
+        in_specs=(P(model_axis), P(), P(), P(model_axis), P(), P()),
+        out_specs=(P(), P(), P()),
+        check_rep=False,
+    )
+    return jax.jit(sharded)
+
+
+def sharded_ranking_metrics(
+    entity_emb: np.ndarray,          # (N, d) encoded entity embeddings
+    rel_diag_table: np.ndarray,      # (R, d) DistMult relation diagonals
+    test_triplets: np.ndarray,       # (T, 3) global ids
+    filter_index,                    # CSRFilterIndex or dict reference
+    num_shards: int,
+    hits_ks: Sequence[int] = (1, 3, 10),
+    batch_size: int = 256,
+    rank_step=None,
+    interpret: Optional[bool] = None,
+) -> Dict[str, float]:
+    """Filtered MRR / Hits@k with candidate-axis-sharded ranking — the
+    ``num_shards > 1`` twin of the dense ``ranking_metrics`` (DistMult,
+    all-entities protocol), returning exactly the same metrics.
+
+    The entity table is row-sharded once (``shard_table``); per test batch
+    the host builds the (B, N) filter bias (CSR scatter), splits it into
+    per-shard blocks, plans the head gather and true-tail ownership with the
+    PR-2 ``plan_local_gather``, and the device computes per-shard partial
+    counts.  ``rank_step`` switches the compute path: ``None`` runs the
+    single-device shard-loop simulation; a ``make_sharded_rank_step``
+    product runs the real ``shard_map`` + psum exchange.
+    """
+    from repro.eval.ranking import _filter_bias, mean_rank, \
+        metrics_from_ranks
+
+    n, d = entity_emb.shape
+    layout = ShardedTableLayout(n, num_shards)
+    table = jnp.asarray(shard_table(
+        np.ascontiguousarray(np.asarray(entity_emb, np.float32)), layout))
+    diag_table = jnp.asarray(rel_diag_table)
+    ranks = []
+
+    for lo in range(0, test_triplets.shape[0], batch_size):
+        batch = np.asarray(test_triplets[lo: lo + batch_size])
+        # head embeddings through the PR-2 shard-local gather + exchange —
+        # bitwise equal to the dense emb[batch[:, 0]] gather
+        h_li, h_ow = plan_local_gather(layout, batch[:, 0])
+        h_s = sharded_gather(table, jnp.asarray(h_li), jnp.asarray(h_ow))
+        rel_diag = diag_table[jnp.asarray(batch[:, 1].astype(np.int32))]
+
+        bias = _filter_bias(filter_index, batch, n)
+        bias_blocks = jnp.asarray(shard_bias_blocks(bias, layout))
+        t_li, t_ow = plan_local_gather(layout, batch[:, 2])
+        t_li, t_ow = jnp.asarray(t_li), jnp.asarray(t_ow)
+
+        if rank_step is None:
+            greater, equal, _ = sharded_rank_counts(
+                table, h_s, rel_diag, bias_blocks, t_li, t_ow,
+                interpret=interpret)
+        else:
+            greater, equal, _ = rank_step(
+                table, h_s, rel_diag, bias_blocks, t_li, t_ow)
+        ranks.append(mean_rank(np.asarray(greater), np.asarray(equal)))
+
+    return metrics_from_ranks(np.concatenate(ranks), hits_ks)

@@ -11,8 +11,9 @@ On CPU the kernels run with ``interpret=True``; on TPU they compile.
 """
 from repro.kernels import ops, ref
 from repro.kernels.ops import (
-    distmult_rank_scores, rgcn_message_basis, wkv_chunked_op,
+    distmult_rank_scores, kge_score_padded, rgcn_message_basis,
+    wkv_chunked_op,
 )
 
-__all__ = ["ops", "ref", "distmult_rank_scores", "rgcn_message_basis",
-           "wkv_chunked_op"]
+__all__ = ["ops", "ref", "distmult_rank_scores", "kge_score_padded",
+           "rgcn_message_basis", "wkv_chunked_op"]

@@ -39,7 +39,8 @@ def kge_score(
 ) -> jax.Array:
     b, d = h_s.shape
     c = candidates.shape[0]
-    assert b % Q_BLOCK == 0 and c % C_BLOCK == 0, "wrapper pads to blocks"
+    assert b % Q_BLOCK == 0 and c % C_BLOCK == 0, \
+        "ragged B/C must go through ops.kge_score_padded"
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
     return pl.pallas_call(

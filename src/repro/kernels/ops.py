@@ -99,6 +99,40 @@ rgcn_message_basis.defvjp(_rgcn_fwd, _rgcn_bwd)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
+def kge_score_padded(
+    h_s: jax.Array,        # (B, d) head embeddings
+    rel_diag: jax.Array,   # (B, d) gathered DistMult diagonal per query
+    candidates: jax.Array,  # (C, d)
+    bias: Optional[jax.Array] = None,  # (B, C) additive mask (0 / -1e9 / -inf)
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Block-padding wrapper around the Pallas ``kge_score`` kernel.
+
+    ``kge_score`` asserts B and C are multiples of its 128-row tiles; this
+    wrapper pads ragged shapes (the last test batch, a shard's row block) up
+    to the tiles and slices the result back to ``(B, C)``.  Pad *candidate*
+    rows get bias ``-inf``, so any padded score is ``-inf`` and can never
+    outrank (or tie) a real candidate — rank counting over a padded score
+    matrix stays exact.  Matches ``kernels.ref.kge_score_ref`` on the real
+    rows.
+    """
+    b, d = h_s.shape
+    c = candidates.shape[0]
+    b_pad = _round_up(b, Q_BLOCK)
+    c_pad = _round_up(c, C_BLOCK)
+
+    h_p = _pad_to(h_s, b_pad)
+    diag_p = _pad_to(rel_diag, b_pad)
+    cand_p = _pad_to(candidates, c_pad)
+    if bias is None:
+        bias = jnp.zeros((b, c), h_s.dtype)
+    bias_p = _pad_to(_pad_to(bias, b_pad, axis=0), c_pad, axis=1,
+                     fill=-jnp.inf)
+    out = kge_score(h_p, diag_p, cand_p, bias_p, interpret=interpret)
+    return out[:b, :c]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
 def distmult_rank_scores(
     h_s: jax.Array,          # (B, d) head embeddings
     rel: jax.Array,          # (B,) relation ids
@@ -108,20 +142,9 @@ def distmult_rank_scores(
     interpret: Optional[bool] = None,
 ) -> jax.Array:
     """Blocked DistMult ranking: returns (B, C) float32 scores."""
-    b, d = h_s.shape
-    c = candidates.shape[0]
-    b_pad = _round_up(b, Q_BLOCK)
-    c_pad = _round_up(c, C_BLOCK)
-
-    h_p = _pad_to(h_s, b_pad)
-    diag = rel_diag_table[_pad_to(rel.astype(jnp.int32), b_pad)]
-    cand_p = _pad_to(candidates, c_pad)
-    if filter_bias is None:
-        bias = jnp.zeros((b_pad, c_pad), h_s.dtype)
-    else:
-        bias = _pad_to(_pad_to(filter_bias, b_pad, axis=0), c_pad, axis=1)
-    out = kge_score(h_p, diag, cand_p, bias, interpret=interpret)
-    return out[:b, :c]
+    diag = rel_diag_table[rel.astype(jnp.int32)]
+    return kge_score_padded(h_s, diag, candidates, filter_bias,
+                            interpret=interpret)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(5,))

@@ -179,6 +179,29 @@ def sharded_gather(table, local_ids, owned, *, axis_name=None):
     return jax.lax.psum(x, axis_name)
 
 
+def shard_bias_blocks(bias: np.ndarray,
+                      layout: ShardedTableLayout) -> np.ndarray:
+    """Split a per-batch ``(B, num_rows)`` candidate bias into per-shard
+    column blocks ``(S, B, rows_per_shard)`` following the row-block layout.
+
+    Columns beyond ``num_rows`` (the layout's zero-padded tail rows, which
+    hold no real entity) get ``-inf``: a padded row's score is then ``-inf``
+    and can neither outrank nor tie any real candidate, so rank counts over
+    the padded blocks equal counts over the dense ``(B, num_rows)`` matrix.
+    Used by the candidate-axis-sharded ranking path (``repro.eval.sharded``);
+    shard ``s``'s block covers global rows ``[s * rows, (s+1) * rows)``.
+    """
+    b, n = bias.shape
+    if n != layout.num_rows:
+        raise ValueError(f"bias has {n} columns, layout expects "
+                         f"{layout.num_rows}")
+    padded = np.full((b, layout.padded_rows), -np.inf, np.float32)
+    padded[:, :n] = bias
+    return np.ascontiguousarray(
+        padded.reshape(b, layout.num_shards, layout.rows_per_shard)
+        .transpose(1, 0, 2))
+
+
 def _layout_row_range(shape) -> Tuple[int, int]:
     """Logical row counts a table shape can represent: a dense ``(V, d)``
     is exactly ``V``; a sharded ``(S, rows, d)`` is any ``V`` with

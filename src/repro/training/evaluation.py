@@ -2,19 +2,32 @@
 
 Standalone functions so the CLI, examples and benchmarks can evaluate saved
 parameters without constructing a trainer.
+
+Scaling shape (PR 3): the encoder pass STREAMS over self-sufficient
+partitions — each partition is encoded with ``encode_partition`` (reusing
+the training partitions and, with a row-sharded table, the same
+host-precomputed ``ShardedGatherPlan`` path the training collator uses) and
+its CORE vertices are scattered into the global embedding matrix.  Core
+vertices carry their full ``num_hops`` receptive field inside the partition
+(the paper's self-sufficiency invariant), so the streamed embeddings are
+mathematically identical to a full-graph encode; a single partition
+reproduces the old mega-partition pass exactly.  Ranking then goes through
+``repro.eval`` — candidate-axis-sharded when the model's entity table is
+row-sharded (``num_table_shards > 1``).
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Dict, Optional
+from typing import Any, Dict, Optional, Sequence
 
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import KnowledgeGraph, expand_all, pad_partitions, \
     partition_graph
+from repro.core.expansion import PaddedPartitionBatch, SelfSufficientPartition
+from repro.data.pipeline import eval_partition_batches
 from repro.eval.ranking import evaluate_both_directions
 from repro.models import KGEConfig, encode_partition
+from repro.sharding.embedding import ShardedTableLayout
 
 # decoder -> relation-table key in params["decoder"]
 DECODER_TABLE_KEY = {"distmult": "rel_diag", "transe": "rel_vec",
@@ -26,21 +39,47 @@ def encode_all_entities(
     kge_cfg: KGEConfig,
     train_kg: KnowledgeGraph,
     num_hops: int,
-    features: Optional[jnp.ndarray] = None,
+    features: Optional[Any] = None,
+    partitions: Optional[Sequence[SelfSufficientPartition]] = None,
+    padded: Optional[PaddedPartitionBatch] = None,
 ) -> np.ndarray:
-    """Embed every entity with the full (unpartitioned) train graph — the
-    evaluation-time encoder pass."""
-    full = partition_graph(train_kg, 1, "random", seed=0)
-    full_part = expand_all(train_kg, full, num_hops)
-    pb = pad_partitions(full_part)
-    part0 = {f.name: jnp.asarray(getattr(pb, f.name)[0])
-             for f in dataclasses.fields(pb)}
-    h = encode_partition(params, kge_cfg, part0, features=features)
-    # scatter local -> global order
-    out = np.zeros((train_kg.num_entities, h.shape[1]), np.float32)
-    l2g = np.asarray(part0["local_to_global"])
-    mask = np.asarray(part0["vertex_mask"])
-    out[l2g[mask]] = np.asarray(h)[mask]
+    """Embed every entity for evaluation by streaming ``encode_partition``
+    over self-sufficient partitions and scattering core vertices into the
+    global ``(N, d)`` matrix.
+
+    ``partitions``/``padded`` reuse the trainer's preprocessing artifacts
+    (no re-partitioning on the eval path); with neither given, the graph is
+    wrapped in a single partition — the full-graph mega-partition pass.
+    Every non-isolated entity is a core vertex of at least one partition
+    (edge partitions cover all edges), so the scatter covers the same rows
+    the mega-partition pass does; isolated entities keep zero rows in both.
+    """
+    if padded is None:
+        if partitions is None:
+            partitions = expand_all(
+                train_kg, partition_graph(train_kg, 1, "random", seed=0),
+                num_hops)
+        padded = pad_partitions(partitions)
+
+    layout = None
+    if kge_cfg.rgcn.feature_dim is None and kge_cfg.num_table_shards > 1:
+        layout = ShardedTableLayout(train_kg.num_entities,
+                                    kge_cfg.num_table_shards)
+
+    out: Optional[np.ndarray] = None
+    v_idx = np.arange(padded.padded_vertices)
+    for i, part in enumerate(eval_partition_batches(padded, layout)):
+        h = np.asarray(encode_partition(params, kge_cfg, part,
+                                        features=features))
+        if out is None:
+            out = np.zeros((train_kg.num_entities, h.shape[1]), np.float32)
+        # scatter CORE rows only: support vertices at the receptive-field
+        # boundary are not self-sufficient in this partition and another
+        # partition owns them as core
+        core = np.asarray(padded.vertex_mask[i]) & \
+            (v_idx < int(padded.num_core_vertices[i]))
+        out[np.asarray(padded.local_to_global[i])[core]] = h[core]
+    assert out is not None, "no partitions to encode"
     return out
 
 
@@ -51,17 +90,26 @@ def evaluate_split(
     split: str,
     num_hops: int,
     decoder: str,
-    features: Optional[jnp.ndarray] = None,
+    features: Optional[Any] = None,
+    partitions: Optional[Sequence[SelfSufficientPartition]] = None,
+    padded: Optional[PaddedPartitionBatch] = None,
 ) -> Dict[str, float]:
-    """Filtered MRR / Hits@k on ``split`` (both directions, paper protocol)."""
+    """Filtered MRR / Hits@k on ``split`` (both directions, paper protocol).
+
+    ``partitions``/``padded`` stream the encoder over existing training
+    partitions; ranking is candidate-axis-sharded over the model's
+    ``num_table_shards`` row blocks (DistMult; other decoders fall back to
+    the dense path inside ``ranking_metrics``)."""
     emb = encode_all_entities(
         params, kge_cfg, splits["train"].with_inverse_relations(),
-        num_hops, features=features)
+        num_hops, features=features, partitions=partitions, padded=padded)
     table = np.asarray(params["decoder"][DECODER_TABLE_KEY[decoder]])
     metrics = evaluate_both_directions(
         emb, table, splits[split],
         [splits["train"], splits["valid"], splits["test"]],
         num_relations_base=splits["train"].num_relations,
         decoder=decoder,
+        num_shards=(kge_cfg.num_table_shards
+                    if kge_cfg.rgcn.feature_dim is None else 1),
     )
     return {f"{split}_{k}": v for k, v in metrics.items()}

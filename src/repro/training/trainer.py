@@ -226,13 +226,19 @@ class KGETrainer:
 
     # ------------------------------------------------------------------ #
     def encode_all_entities(self) -> np.ndarray:
-        """Embed every entity with the full (unpartitioned) train graph —
-        the evaluation-time encoder pass."""
+        """Evaluation-time encoder pass: stream ``encode_partition`` over
+        the TRAINING partitions (reusing ``self.pre`` — no re-partitioning)
+        and scatter each partition's core vertices into the global matrix."""
         return encode_all_entities(
             self.params, self.kge_cfg, self.train_kg, self.cfg.num_hops,
-            features=self.features)
+            features=self.features, partitions=self.pre.partitions,
+            padded=self.pre.padded)
 
     def evaluate(self, split: str = "test") -> Dict[str, float]:
+        """Filtered MRR / Hits@k through the scaled eval subsystem: streamed
+        partition encoding + (with ``num_table_shards > 1``) candidate-axis-
+        sharded ranking over the row-sharded entity table."""
         return evaluate_split(
             self.params, self.kge_cfg, self.splits, split,
-            self.cfg.num_hops, self.cfg.decoder, features=self.features)
+            self.cfg.num_hops, self.cfg.decoder, features=self.features,
+            partitions=self.pre.partitions, padded=self.pre.padded)

@@ -1,0 +1,436 @@
+"""Scaled evaluation subsystem (PR 3): CSR filter index, tie-aware ranks,
+kernel block padding, and candidate-axis-sharded ranking equivalence.
+
+Contracts under test:
+
+* ``CSRFilterIndex`` equals the dict-of-sets ``build_filter_index``
+  reference on random graphs — duplicate triplets, absent (s, r) pairs,
+  and the true tail never self-filtered;
+* ``ranking_metrics`` scores ties with the mean rank
+  ``1 + #greater + 0.5·#equal`` in both the all-entities and ogbl
+  candidate paths;
+* ``kge_score_padded`` handles non-multiple-of-128 B/C (bias ``-inf`` on
+  pad rows) and matches ``kge_score_ref``;
+* sharded ranking (shard-local Pallas scoring + integer count psum) returns
+  EXACTLY the dense metrics — ``==``, not allclose — at 1/2/4 shards,
+  including duplicate gather ids, tied scores and padded vocab rows, on the
+  simulated mesh, under shard_map, and through the trainer eval seam;
+* the streamed partition encoder reproduces the mega-partition encoder.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from _hypothesis_compat import given, settings, st
+from repro.core.graph import (
+    KnowledgeGraph, make_synthetic_kg, split_train_valid_test,
+)
+from repro.eval import (
+    CSRFilterIndex, FILTER_BIAS, build_filter_index,
+    evaluate_both_directions, make_sharded_rank_step, ranking_metrics,
+    sharded_ranking_metrics,
+)
+from repro.eval.ranking import _filter_bias
+
+SHARD_COUNTS = (1, 2, 4)
+
+
+def _random_kg(seed: int, n_ent: int, n_rel: int, n_edge: int,
+               dup_frac: float = 0.3) -> KnowledgeGraph:
+    """Random KG that KEEPS duplicate triplets (make_synthetic_kg dedupes;
+    the filter index must tolerate duplicates within and across splits)."""
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n_ent, n_edge).astype(np.int32)
+    rel = rng.integers(0, n_rel, n_edge).astype(np.int32)
+    dst = rng.integers(0, n_ent, n_edge).astype(np.int32)
+    n_dup = int(n_edge * dup_frac)
+    if n_edge and n_dup:
+        take = rng.integers(0, n_edge, n_dup)
+        src = np.concatenate([src, src[take]])
+        rel = np.concatenate([rel, rel[take]])
+        dst = np.concatenate([dst, dst[take]])
+    return KnowledgeGraph(src=src, rel=rel, dst=dst, num_entities=n_ent,
+                          num_relations=n_rel)
+
+
+def _assert_csr_equals_dict(graphs, n_ent: int, n_rel: int, seed: int):
+    ref = build_filter_index(graphs)
+    csr = CSRFilterIndex.build(graphs)
+    assert csr.num_pairs == len(ref)
+    # per-pair tails (dedup'd) match the dict-of-sets
+    for (s, r), tails in ref.items():
+        got = csr.tails_of(s, r)
+        assert sorted(got.tolist()) == sorted(tails), (s, r)
+        assert len(set(got.tolist())) == len(got)      # dedup'd
+    # absent pairs resolve to empty, not a neighbor's tails
+    rng = np.random.default_rng(seed)
+    for _ in range(20):
+        s, r = int(rng.integers(0, n_ent)), int(rng.integers(0, n_rel))
+        if (s, r) not in ref:
+            assert csr.tails_of(s, r).size == 0
+    # the (B, N) bias equals the double-loop reference bit for bit,
+    # including the never-self-filtered true tail
+    queries = np.stack([rng.integers(0, n_ent, 64),
+                        rng.integers(0, n_rel, 64),
+                        rng.integers(0, n_ent, 64)], axis=1).astype(np.int32)
+    b_ref = _filter_bias(ref, queries, n_ent)
+    b_csr = _filter_bias(csr, queries, n_ent)
+    np.testing.assert_array_equal(b_ref, b_csr)
+    assert (b_csr[np.arange(64), queries[:, 2]] == 0.0).all()
+
+
+class TestCSRFilterIndex:
+    @pytest.mark.parametrize("seed", range(4))
+    def test_equals_dict_reference(self, seed):
+        """Deterministic twin of the property test (runs without
+        hypothesis): random graphs with duplicates, across splits."""
+        rng = np.random.default_rng(seed)
+        n_ent = int(rng.integers(5, 80))
+        n_rel = int(rng.integers(1, 8))
+        graphs = [_random_kg(seed * 31 + i, n_ent, n_rel,
+                             int(rng.integers(0, 300))) for i in range(3)]
+        _assert_csr_equals_dict(graphs, n_ent, n_rel, seed)
+
+    @given(st.integers(0, 2 ** 31 - 1), st.integers(2, 60),
+           st.integers(1, 7), st.integers(0, 250))
+    @settings(max_examples=25, deadline=None)
+    def test_equals_dict_reference_property(self, seed, n_ent, n_rel,
+                                            n_edge):
+        graphs = [_random_kg(seed, n_ent, n_rel, n_edge),
+                  _random_kg(seed + 1, n_ent, n_rel, n_edge // 2)]
+        _assert_csr_equals_dict(graphs, n_ent, n_rel, seed)
+
+    def test_empty_and_absent(self):
+        csr = CSRFilterIndex.build([])
+        assert csr.num_pairs == 0
+        assert csr.tails_of(0, 0).size == 0
+        queries = np.array([[1, 0, 2]], np.int32)
+        np.testing.assert_array_equal(csr.bias(queries, 5),
+                                      np.zeros((1, 5), np.float32))
+
+    def test_true_tail_never_self_filtered(self):
+        g = KnowledgeGraph(src=np.array([0, 0, 0]), rel=np.array([0, 0, 0]),
+                           dst=np.array([1, 2, 3]), num_entities=5,
+                           num_relations=1)
+        csr = CSRFilterIndex.build([g])
+        # querying (0, 0, t=2): 1 and 3 filtered, 2 (the true tail) is not
+        bias = csr.bias(np.array([[0, 0, 2]]), 5)
+        np.testing.assert_array_equal(
+            bias[0], [0.0, FILTER_BIAS, 0.0, FILTER_BIAS, 0.0])
+
+
+# ====================================================================== #
+# Tie-aware mean rank (satellite: regression with exact ties)
+# ====================================================================== #
+class TestTieHandling:
+    """emb[0] is the head; with rel_diag == 1 the candidate scores are
+    emb[c][0]: c0=1.0 (head), c1=0.5 (TRUE), c2=0.5 (tie), c3=0.9,
+    c4=0.1, c5=0.5 (tie)."""
+
+    def _emb(self):
+        n, d = 6, 4
+        emb = np.zeros((n, d), np.float32)
+        emb[:, 0] = [1.0, 0.5, 0.5, 0.9, 0.1, 0.5]
+        emb[0] = 0.0
+        emb[0, 0] = 1.0
+        return emb, np.ones((1, d), np.float32)
+
+    def test_all_entities_path_mean_rank(self):
+        emb, table = self._emb()
+        tests = np.array([[0, 0, 1]])
+        # greater: c0, c3; ties (besides self): c2, c5 -> rank 1+2+0.5*2 = 4
+        m = ranking_metrics(emb, table, tests, {})
+        assert m["mrr"] == pytest.approx(1.0 / 4.0)
+        assert m["hits@3"] == 0.0 and m["hits@10"] == 1.0
+
+    def test_filtered_tie_discounted(self):
+        emb, table = self._emb()
+        tests = np.array([[0, 0, 1]])
+        # c5 is a known positive -> filtered; remaining tie c2 only:
+        # rank = 1 + 2 + 0.5*1 = 3.5
+        m = ranking_metrics(emb, table, tests, {(0, 0): {5, 1}})
+        assert m["mrr"] == pytest.approx(1.0 / 3.5)
+
+    def test_candidate_path_mean_rank(self):
+        emb, table = self._emb()
+        tests = np.array([[0, 0, 1]])
+        cands = np.array([[2, 3, 4, 5]])
+        # greater: c3; ties: c2, c5 -> rank = 1 + 1 + 0.5*2 = 3
+        m = ranking_metrics(emb, table, tests, {}, candidates=cands)
+        assert m["mrr"] == pytest.approx(1.0 / 3.0)
+        assert m["hits@3"] == 1.0
+
+    def test_no_ties_matches_strict_rank(self):
+        """Without ties the mean rank degenerates to the strict
+        1 + #greater — the pre-PR-3 convention."""
+        rng = np.random.default_rng(0)
+        emb = rng.normal(size=(40, 8)).astype(np.float32)
+        table = rng.normal(size=(2, 8)).astype(np.float32)
+        tests = np.stack([rng.integers(0, 40, 16), rng.integers(0, 2, 16),
+                          rng.integers(0, 40, 16)], 1).astype(np.int32)
+        m = ranking_metrics(emb, table, tests, {})
+        scores = (emb[tests[:, 0]] * table[tests[:, 1]]) @ emb.T
+        true = scores[np.arange(16), tests[:, 2]]
+        strict = 1 + (scores > true[:, None]).sum(1)
+        assert m["mrr"] == pytest.approx(float(np.mean(1.0 / strict)))
+
+
+# ====================================================================== #
+# kge_score block-padding wrapper (satellite)
+# ====================================================================== #
+class TestKgeScorePadding:
+    @pytest.mark.parametrize("b,c", [(5, 37), (130, 200), (128, 128),
+                                     (1, 129), (257, 1)])
+    def test_ragged_shapes_match_ref(self, b, c):
+        from repro.kernels import ref
+        from repro.kernels.ops import kge_score_padded
+        rng = np.random.default_rng(b * 1000 + c)
+        d = 16
+        h = jnp.asarray(rng.normal(size=(b, d)).astype(np.float32))
+        diag = jnp.asarray(rng.normal(size=(b, d)).astype(np.float32))
+        cand = jnp.asarray(rng.normal(size=(c, d)).astype(np.float32))
+        bias = jnp.asarray(
+            np.where(rng.random((b, c)) < 0.2, FILTER_BIAS, 0.0)
+            .astype(np.float32))
+        got = kge_score_padded(h, diag, cand, bias)
+        assert got.shape == (b, c)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(ref.kge_score_ref(h, diag, cand,
+                                                          bias)),
+            rtol=1e-5, atol=1e-5)
+        # bias-less call too
+        got_nb = kge_score_padded(h, diag, cand)
+        np.testing.assert_allclose(
+            np.asarray(got_nb),
+            np.asarray(ref.kge_score_ref(h, diag, cand)),
+            rtol=1e-5, atol=1e-5)
+
+    def test_raw_kernel_rejects_ragged(self):
+        from repro.kernels.kge_score import kge_score
+        h = jnp.zeros((5, 8))
+        with pytest.raises(AssertionError, match="kge_score_padded"):
+            kge_score(h, h, jnp.zeros((37, 8)), jnp.zeros((5, 37)))
+
+    def test_ranking_metrics_accepts_ragged_last_batch(self):
+        """T % batch_size != 0 and N % 128 != 0 go through the wrapper."""
+        rng = np.random.default_rng(3)
+        emb = rng.normal(size=(150, 8)).astype(np.float32)
+        table = rng.normal(size=(4, 8)).astype(np.float32)
+        tests = np.stack([rng.integers(0, 150, 70), rng.integers(0, 4, 70),
+                          rng.integers(0, 150, 70)], 1).astype(np.int32)
+        m = ranking_metrics(emb, table, tests, {}, batch_size=32)
+        assert 0.0 < m["mrr"] <= 1.0
+
+
+# ====================================================================== #
+# Candidate-axis-sharded ranking == dense (the tentpole contract)
+# ====================================================================== #
+def _tied_eval_setup(seed=0, n=301, d=24, n_rel=8, n_test=120):
+    """Embeddings with exact duplicate rows (ties), a non-multiple-of-128
+    (and of-shard-count) vocab, and duplicate test triplets (duplicate
+    gather ids)."""
+    rng = np.random.default_rng(seed)
+    emb = rng.normal(size=(n, d)).astype(np.float32)
+    emb[7] = emb[3]
+    emb[n - 1] = emb[11]            # tie across shard boundaries
+    table = rng.normal(size=(2 * n_rel, d)).astype(np.float32)
+    kg = make_synthetic_kg(n, n_rel, 2200, seed=seed)
+    splits = split_train_valid_test(kg)
+    fidx = CSRFilterIndex.build(
+        [g.with_inverse_relations() for g in splits.values()])
+    tests = splits["test"].with_inverse_relations().triplets()[:n_test]
+    tests = np.concatenate([tests, tests[:7]])   # duplicate gather ids
+    return emb, table, tests, fidx, splits
+
+
+class TestShardedRankingEquivalence:
+    @pytest.mark.parametrize("s", SHARD_COUNTS)
+    def test_exactly_equals_dense(self, s):
+        emb, table, tests, fidx, _ = _tied_eval_setup()
+        m_dense = ranking_metrics(emb, table, tests, fidx)
+        m_sh = sharded_ranking_metrics(emb, table, tests, fidx, s)
+        assert m_sh == m_dense                 # exact, not allclose
+
+    @pytest.mark.parametrize("s", SHARD_COUNTS)
+    def test_dispatch_through_ranking_metrics(self, s):
+        emb, table, tests, fidx, _ = _tied_eval_setup(seed=1)
+        m_dense = ranking_metrics(emb, table, tests, fidx)
+        m_sh = ranking_metrics(emb, table, tests, fidx, num_shards=s)
+        assert m_sh == m_dense
+
+    def test_both_directions_sharded(self):
+        emb, table, _, _, splits = _tied_eval_setup(seed=2)
+        args = (emb, table, splits["valid"],
+                [splits["train"], splits["valid"], splits["test"]])
+        m1 = evaluate_both_directions(*args, num_relations_base=8)
+        m2 = evaluate_both_directions(*args, num_relations_base=8,
+                                      num_shards=2)
+        assert m1 == m2
+
+    def test_shard_map_step_matches_simulation(self):
+        """1×1 host mesh smoke for the real shard_map + psum path (a
+        multi-device model axis changes only the axis size — the 2-device
+        subprocess test drives the real exchange)."""
+        from repro.launch.mesh import make_host_mesh
+        emb, table, tests, fidx, _ = _tied_eval_setup(seed=3, n_test=64)
+        step = make_sharded_rank_step(make_host_mesh(1, 1))
+        m_spmd = sharded_ranking_metrics(emb, table, tests, fidx, 1,
+                                         rank_step=step)
+        assert m_spmd == ranking_metrics(emb, table, tests, fidx)
+
+    def test_dict_filter_also_supported(self):
+        """The sharded path accepts the dict reference index too."""
+        emb, table, tests, _, splits = _tied_eval_setup(seed=4, n_test=40)
+        ref = build_filter_index(
+            [g.with_inverse_relations() for g in splits.values()])
+        assert sharded_ranking_metrics(emb, table, tests, ref, 2) == \
+            ranking_metrics(emb, table, tests, ref)
+
+
+# ====================================================================== #
+# Streamed partition encoder (tentpole part 2)
+# ====================================================================== #
+class TestStreamedEncoder:
+    def test_streamed_equals_mega_partition(self, small_kg, partitioned):
+        """Core vertices carry their full receptive field per partition, so
+        streaming over 4 training partitions reproduces the full-graph
+        mega-partition encode (same in-edge summation order — bitwise)."""
+        from repro.models import KGEConfig, RGCNConfig, init_kge_params
+        from repro.training.evaluation import encode_all_entities
+        parts, expanded = partitioned
+        cfg = KGEConfig(rgcn=RGCNConfig(
+            num_entities=small_kg.num_entities,
+            num_relations=small_kg.num_relations,
+            hidden_dim=16, num_layers=2, num_bases=2, dropout=0.0))
+        params = init_kge_params(jax.random.PRNGKey(0), cfg)
+        e_mega = encode_all_entities(params, cfg, small_kg, 2)
+        e_stream = encode_all_entities(params, cfg, small_kg, 2,
+                                       partitions=expanded)
+        np.testing.assert_array_equal(e_stream, e_mega)
+
+    def test_streamed_sharded_table_with_host_plans(self, small_kg,
+                                                    partitioned):
+        """Row-sharded table: the streamed encoder ships host-precomputed
+        ShardedGatherPlans per partition — same embeddings as dense."""
+        from repro.models import KGEConfig, RGCNConfig, init_kge_params
+        from repro.sharding import ShardedTableLayout, shard_table
+        from repro.training.evaluation import encode_all_entities
+        _, expanded = partitioned
+        base = dict(num_entities=small_kg.num_entities,
+                    num_relations=small_kg.num_relations,
+                    hidden_dim=16, num_layers=2, num_bases=2, dropout=0.0)
+        cfg_d = KGEConfig(rgcn=RGCNConfig(**base))
+        cfg_s = KGEConfig(rgcn=RGCNConfig(**base, num_table_shards=2))
+        params = init_kge_params(jax.random.PRNGKey(0), cfg_d)
+        p_shard = dict(params)
+        p_shard["entity_embedding"] = shard_table(
+            params["entity_embedding"],
+            ShardedTableLayout(small_kg.num_entities, 2))
+        e_d = encode_all_entities(params, cfg_d, small_kg, 2,
+                                  partitions=expanded)
+        e_s = encode_all_entities(p_shard, cfg_s, small_kg, 2,
+                                  partitions=expanded)
+        np.testing.assert_array_equal(e_d, e_s)
+
+
+# ====================================================================== #
+# Trainer eval seam + tier-1 smoke (satellite: never regress silently)
+# ====================================================================== #
+class TestTrainerEvalSeam:
+    def test_eval_smoke_and_shard_equivalence(self):
+        """Tier-1 guard on the whole filtered-metrics path: a short
+        full-graph run must produce sane filtered metrics, and the 2-shard
+        trainer (sharded table + sharded ranking + streamed encoder) must
+        return EXACTLY the dense trainer's metrics."""
+        from repro.data import synthetic_fb15k
+        from repro.training import KGETrainer, TrainConfig
+        splits = synthetic_fb15k(scale=0.01, seed=5)
+        metrics = {}
+        for s in (1, 2):
+            tr = KGETrainer(splits, TrainConfig(
+                num_trainers=2, epochs=2, hidden_dim=16, batch_size=None,
+                learning_rate=0.05, seed=0, num_table_shards=s))
+            tr.fit()
+            metrics[s] = tr.evaluate("valid")
+            tr.close()
+        m = metrics[1]
+        assert set(m) == {"valid_mrr", "valid_hits@1", "valid_hits@3",
+                          "valid_hits@10"}
+        assert 0.0 < m["valid_mrr"] <= 1.0
+        assert m["valid_hits@1"] <= m["valid_hits@3"] <= m["valid_hits@10"]
+        assert metrics[2] == metrics[1]
+
+    @pytest.mark.slow
+    def test_multi_shard_eval_sweep(self):
+        """The full 1/2/4-shard trainer sweep: training losses AND filtered
+        eval metrics identical across table shard counts."""
+        from repro.data import synthetic_fb15k
+        from repro.training import KGETrainer, TrainConfig
+        splits = synthetic_fb15k(scale=0.015, seed=6)
+        out = {}
+        for s in SHARD_COUNTS:
+            tr = KGETrainer(splits, TrainConfig(
+                num_trainers=2, epochs=3, hidden_dim=16, batch_size=None,
+                learning_rate=0.05, seed=0, num_table_shards=s))
+            losses = [h["loss"] for h in tr.fit()]
+            out[s] = (losses, tr.evaluate("test"))
+            tr.close()
+        assert out[1] == out[2] == out[4]
+
+
+# ====================================================================== #
+# Real 2-device model axis: integer count psum == dense metrics, exactly
+# ====================================================================== #
+_TWO_DEVICE_EVAL_SCRIPT = """
+import numpy as np, jax, jax.numpy as jnp
+assert jax.device_count() == 2, jax.devices()
+from repro.core.graph import make_synthetic_kg, split_train_valid_test
+from repro.eval import CSRFilterIndex, make_sharded_rank_step, \\
+    ranking_metrics, sharded_ranking_metrics
+from repro.launch.mesh import make_host_mesh
+
+n, d = 301, 16
+rng = np.random.default_rng(0)
+emb = rng.normal(size=(n, d)).astype(np.float32)
+emb[7] = emb[3]                      # exact ties survive the psum exchange
+table = rng.normal(size=(12, d)).astype(np.float32)
+kg = make_synthetic_kg(n, 6, 1800, seed=1)
+splits = split_train_valid_test(kg)
+fidx = CSRFilterIndex.build(
+    [g.with_inverse_relations() for g in splits.values()])
+tests = splits["test"].with_inverse_relations().triplets()[:96]
+
+mesh = make_host_mesh(1, 2)          # data=1 x model=2: one row block each
+step = make_sharded_rank_step(mesh)
+m_spmd = sharded_ranking_metrics(emb, table, tests, fidx, 2,
+                                 rank_step=step)
+m_dense = ranking_metrics(emb, table, tests, fidx)
+# greater/equal partials are integers and the true score is one real value
+# + zeros, so the psum is order-free: EXACT equality, unlike the training
+# gradient exchange
+assert m_spmd == m_dense, (m_spmd, m_dense)
+print("TWO_DEVICE_EVAL_OK")
+"""
+
+
+@pytest.mark.slow
+def test_two_device_sharded_ranking_exact():
+    """Drive the REAL candidate-count psum: 2 forced host devices, table
+    and bias blocks sharded P('model'); metrics must EXACTLY equal the
+    dense single-device reference (integer partials — no float
+    reduction-order slack)."""
+    import os
+    import subprocess
+    import sys
+    repo = os.path.join(os.path.dirname(__file__), "..")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(repo, "src")
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        " --xla_force_host_platform_device_count=2").strip()
+    proc = subprocess.run(
+        [sys.executable, "-c", _TWO_DEVICE_EVAL_SCRIPT], cwd=repo, env=env,
+        capture_output=True, text=True, timeout=540)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "TWO_DEVICE_EVAL_OK" in proc.stdout
