@@ -10,7 +10,11 @@ Three measurements:
   known tail) vs the CSR searchsorted + scatter;
 * end-to-end filtered ranking — dense ``ranking_metrics`` vs
   ``sharded_ranking_metrics`` at 2/4 shards (simulated mesh), recording that
-  the sharded metrics are EXACTLY the dense ones.
+  the sharded metrics are EXACTLY the dense ones;
+* per-decoder sharded-ranking throughput — EVERY registered decoder
+  (``repro.models.decoders``) through the 2-shard candidate-axis-sharded
+  path, wall clock + triplets/s + the sharded==dense equality bit, so a
+  decoder silently dropping off the sharded path shows up in the record.
 
 Writes ``BENCH_eval.json`` next to the repo root so the eval-path perf
 trajectory is recorded across PRs (acceptance gate: CSR filter build ≥5x
@@ -73,19 +77,41 @@ def run(quick: bool = True) -> List[Dict]:
     rng = np.random.default_rng(0)
     d = 32 if quick else 64
     emb = rng.normal(size=(n_ent, d)).astype(np.float32)
-    table = rng.normal(size=(2 * n_rel, d)).astype(np.float32)
+    dparams = {"rel_diag":
+               rng.normal(size=(2 * n_rel, d)).astype(np.float32)}
     rank_trips = test[:256]
     dense_s, m_dense = timed(
-        "dense", lambda: ranking_metrics(emb, table, rank_trips, csr_idx))
+        "dense", lambda: ranking_metrics(emb, dparams, rank_trips, csr_idx))
     sharded_rows = []
     for s in (2, 4):
         wall, m_sh = timed(
             f"sh{s}", lambda s=s: sharded_ranking_metrics(
-                emb, table, rank_trips, csr_idx, s))
+                emb, dparams, rank_trips, csr_idx, s))
         sharded_rows.append({
             "num_shards": s,
             "rank_wall_s": round(wall, 4),
             "metrics_equal_dense": m_sh == m_dense,
+        })
+
+    # ---- per-decoder 2-shard throughput (registry-driven) ----
+    import jax
+    from repro.models.decoders import init_decoder_params, \
+        registered_decoders
+    decoder_rows = []
+    for name in registered_decoders():
+        p = jax.tree_util.tree_map(np.asarray, init_decoder_params(
+            jax.random.PRNGKey(0), name, 2 * n_rel, d))
+        dd, m_d = timed(f"dec_dense_{name}", lambda: ranking_metrics(
+            emb, p, rank_trips, csr_idx, decoder=name))
+        ds, m_s = timed(f"dec_sh_{name}", lambda: sharded_ranking_metrics(
+            emb, p, rank_trips, csr_idx, 2, decoder=name))
+        decoder_rows.append({
+            "decoder": name,
+            "dense_wall_s": round(dd, 4),
+            "sharded2_wall_s": round(ds, 4),
+            "sharded_triplets_per_s":
+                round(rank_trips.shape[0] / max(ds, 1e-9), 1),
+            "metrics_equal_dense": m_s == m_d,
         })
 
     payload = {
@@ -110,6 +136,7 @@ def run(quick: bool = True) -> List[Dict]:
             "mrr": m_dense["mrr"],
             "sharded": sharded_rows,
         },
+        "per_decoder": decoder_rows,
     }
     with open(JSON_PATH, "w") as f:
         json.dump(payload, f, indent=2)
@@ -130,6 +157,11 @@ def run(quick: bool = True) -> List[Dict]:
     for r in sharded_rows:
         rows.append({"name": f"rank_sharded_{r['num_shards']}",
                      "us_per_call": r["rank_wall_s"] * 1e6,
+                     "equal_dense": r["metrics_equal_dense"]})
+    for r in decoder_rows:
+        rows.append({"name": f"rank_decoder_{r['decoder']}_sh2",
+                     "us_per_call": r["sharded2_wall_s"] * 1e6,
+                     "triplets_per_s": r["sharded_triplets_per_s"],
                      "equal_dense": r["metrics_equal_dense"]})
     return rows
 

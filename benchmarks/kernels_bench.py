@@ -2,8 +2,11 @@
 
 On this container the Pallas kernels execute in interpret mode, so absolute
 times are NOT TPU times — the bench exists to (a) pin the op set per paper
-table, (b) compare the XLA reference path's scaling, and (c) give the
-roofline's per-op byte/flop counts a measured sanity anchor."""
+table, (b) compare the XLA reference path's scaling, (c) give the
+roofline's per-op byte/flop counts a measured sanity anchor, and (d) gate
+kernel-vs-XLA PARITY for every registered decoder's query form: a decoder
+whose ``rank_scores`` drifts off the kernel path (or whose prepare/epilogue
+disagree with the XLA oracle) raises here and fails the bench."""
 from __future__ import annotations
 
 import jax
@@ -51,28 +54,43 @@ def run(quick: bool = True):
                  "gflops_per_s": round(flops / t_ref / 1e9, 2)})
 
     b, c = (256, 4096) if quick else (1024, 16384)
-    hs = jnp.asarray(rng.normal(size=(b, d)), jnp.float32)
+    d_kge = 76          # even: complex / rotate split re/im halves
+    hs = jnp.asarray(rng.normal(size=(b, d_kge)), jnp.float32)
     rl = jnp.asarray(rng.integers(0, r, b), jnp.int32)
-    table = jnp.asarray(rng.normal(size=(r, d)), jnp.float32)
-    cand = jnp.asarray(rng.normal(size=(c, d)), jnp.float32)
+    cand = jnp.asarray(rng.normal(size=(c, d_kge)), jnp.float32)
+    bytes_moved = (b * d_kge + c * d_kge + b * c) * 4.0
 
-    def k_score():
-        ops.distmult_rank_scores(hs, rl, table, cand).block_until_ready()
+    # per-decoder query-form parity gate + timing: kernel vs XLA oracle
+    from repro.models.decoders import (
+        get_decoder, init_decoder_params, registered_decoders,
+        score_against_candidates,
+    )
+    for name in registered_decoders():
+        dec = get_decoder(name)
+        p = init_decoder_params(jax.random.PRNGKey(0), name, r, d_kge)
 
-    jr_score = jax.jit(lambda hs, diag, cand: ref.kge_score_ref(
-        hs, diag, cand))
+        def k_score():
+            dec.rank_scores(p, hs, rl, cand).block_until_ready()
 
-    def r_score():
-        jr_score(hs, table[rl], cand).block_until_ready()
+        jr_score = jax.jit(lambda hs, rl, cand: score_against_candidates(
+            p, dec, hs, rl, cand))
 
-    t_p = time_call(k_score)
-    t_r = time_call(r_score)
-    bytes_moved = (b * d + c * d + b * c) * 4.0
-    rows.append({"name": "kge_score_pallas_interpret",
-                 "us_per_call": t_p * 1e6, "B": b, "C": c})
-    rows.append({"name": "kge_score_xla_ref",
-                 "us_per_call": t_r * 1e6,
-                 "gbytes_per_s": round(bytes_moved / t_r / 1e9, 2)})
+        def r_score():
+            jr_score(hs, rl, cand).block_until_ready()
+
+        got = np.asarray(dec.rank_scores(p, hs, rl, cand))
+        want = np.asarray(jr_score(hs, rl, cand))
+        err = float(np.max(np.abs(got - want)))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4,
+                                   err_msg=f"{name} kernel != XLA oracle")
+        t_p = time_call(k_score)
+        t_r = time_call(r_score)
+        rows.append({"name": f"kge_score_{name}_pallas_interpret",
+                     "us_per_call": t_p * 1e6, "B": b, "C": c,
+                     "max_abs_err_vs_xla": err})
+        rows.append({"name": f"kge_score_{name}_xla_ref",
+                     "us_per_call": t_r * 1e6,
+                     "gbytes_per_s": round(bytes_moved / t_r / 1e9, 2)})
     return rows
 
 

@@ -40,14 +40,18 @@ def serve_lm(arch: str) -> None:
     assert all(len(r.output) == 8 for r in done)
 
 
-def serve_kge() -> None:
-    print("[kge] training a small model, then serving (h, r, ?) queries")
+def serve_kge(decoder: str = "distmult") -> None:
+    print(f"[kge] training a small {decoder} model, then serving "
+          f"(h, r, ?) queries")
     splits = synthetic_fb15k(scale=0.015, seed=0)
     tr = KGETrainer(splits, TrainConfig(
-        num_trainers=2, epochs=10, hidden_dim=24, learning_rate=0.05))
+        num_trainers=2, epochs=10, hidden_dim=24, learning_rate=0.05,
+        decoder=decoder))
     tr.fit()
     emb = tr.encode_all_entities()
-    server = KGEServer(emb, np.asarray(tr.params["decoder"]["rel_diag"]))
+    # the server takes the decoder's whole parameter tree — any registered
+    # decoder serves through the same Pallas ranking kernel
+    server = KGEServer(emb, tr.params["decoder"], decoder=decoder)
     heads = np.array([0, 1, 2])
     rels = np.array([0, 1, 2])
     top = server.topk_tails(heads, rels, k=5)

@@ -31,14 +31,15 @@ score rank 1 — optimistically biased for embeddings with exact ties
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterable, Optional, Sequence, Union
+from typing import Any, Dict, Iterable, Optional, Sequence, Union
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.graph import KnowledgeGraph
-from repro.kernels.ops import distmult_rank_scores
-from repro.models.decoders import score_against_candidates
+from repro.kernels.kge_score import apply_epilogue
+from repro.models.decoders import Decoder, get_decoder
 
 # Additive score mask for filtered-out candidates.  Large-negative rather
 # than -inf so a filtered candidate still loses cleanly without generating
@@ -197,41 +198,49 @@ def metrics_from_ranks(ranks: np.ndarray,
 
 def ranking_metrics(
     entity_emb: np.ndarray,          # (N, d) encoded entity embeddings
-    rel_diag_table: np.ndarray,      # (R, d) decoder relation table
+    decoder_params: Dict[str, Any],  # decoder parameter tree
     test_triplets: np.ndarray,       # (T, 3) global ids
     filter_index: FilterIndex,
     hits_ks: Sequence[int] = (1, 3, 10),
     candidates: Optional[np.ndarray] = None,   # (T, C) per-test candidates
     batch_size: int = 256,
-    decoder: str = "distmult",
+    decoder: Union[str, Decoder] = "distmult",
     num_shards: int = 1,
 ) -> Dict[str, float]:
     """Filtered MRR / Hits@k, tail-corruption direction.
 
-    ``decoder`` selects the scoring function (the paper's approach is
-    "agnostic to the used knowledge graph embedding model" §6): DistMult
-    goes through the Pallas ranking kernel; TransE/ComplEx go through
-    ``score_against_candidates``.
+    ``decoder`` is a registered :class:`repro.models.decoders.Decoder` (or
+    its name — the paper's approach is "agnostic to the used knowledge graph
+    embedding model" §6).  EVERY decoder goes through the Pallas ranking
+    kernel in its canonical query form; ``decoder_params`` is the decoder's
+    own parameter tree (``params["decoder"]`` from the trained model).
 
-    ``num_shards > 1`` (DistMult, all-entities protocol only) routes to the
-    candidate-axis-sharded path (``repro.eval.sharded``): the entity table
-    is row-sharded, each shard scores only its own rows and contributes
-    partial greater/equal counts — exactly the same metrics as this dense
-    reference (enforced by ``tests/test_eval_ranking.py``).
+    ``num_shards > 1`` (all-entities protocol) routes to the candidate-axis-
+    sharded path (``repro.eval.sharded``) for every decoder: the entity
+    table is row-sharded, each shard scores only its own rows and
+    contributes partial greater/equal counts — exactly the same metrics as
+    this dense reference (enforced by ``tests/test_decoders.py``).
 
     Run twice (once on the graph, once on the inverse-relation graph) and
     average to get the standard both-directions protocol —
     ``evaluate_both_directions`` does that.
     """
-    if num_shards > 1 and candidates is None and decoder == "distmult":
+    dec = get_decoder(decoder)
+    if num_shards > 1 and candidates is None:
         from repro.eval.sharded import sharded_ranking_metrics
         return sharded_ranking_metrics(
-            entity_emb, rel_diag_table, test_triplets, filter_index,
-            num_shards, hits_ks=hits_ks, batch_size=batch_size)
+            entity_emb, decoder_params, test_triplets, filter_index,
+            num_shards, hits_ks=hits_ks, batch_size=batch_size,
+            decoder=dec)
 
     n = entity_emb.shape[0]
     emb = jnp.asarray(entity_emb)
-    table = jnp.asarray(rel_diag_table)
+    dparams = jax.tree_util.tree_map(jnp.asarray, decoder_params)
+    # candidate-side preparation is row-local and query-independent:
+    # prepare the full entity matrix once, reuse across batches (the ogbl
+    # per-row-candidates path prepares its own gathered rows instead)
+    prepared = (dec.prepare_candidates(dparams, emb)
+                if candidates is None else None)
     ranks: list = []
 
     for lo in range(0, test_triplets.shape[0], batch_size):
@@ -243,15 +252,8 @@ def ranking_metrics(
         if candidates is None:
             # score against ALL entities, filtered setting
             bias = _filter_bias(filter_index, batch, n)
-            if decoder == "distmult":
-                scores = distmult_rank_scores(
-                    h_s, rel, table, emb, jnp.asarray(bias))
-            else:
-                key = {"transe": "rel_vec",
-                       "complex": "rel_complex"}[decoder]
-                scores = score_against_candidates(
-                    {key: table}, decoder, h_s, rel, emb)
-                scores = scores + jnp.asarray(bias)
+            scores = dec.rank_scores(dparams, h_s, rel, emb,
+                                     jnp.asarray(bias), prepared=prepared)
             true_scores = scores[jnp.arange(b), jnp.asarray(batch[:, 2])]
             greater = jnp.sum(scores > true_scores[:, None], axis=1)
             # the true candidate's own column always ties (bias 0 there) —
@@ -259,13 +261,21 @@ def ranking_metrics(
             equal = jnp.sum(scores == true_scores[:, None], axis=1)
             rank = mean_rank(np.asarray(greater), np.asarray(equal))
         else:
-            # ogbl-style: true tail + provided negative candidates
+            # ogbl-style: true tail + provided negative candidates (per-row
+            # candidate sets — the query form with a batched candidate axis)
             cand = candidates[lo: lo + batch_size]           # (b, C)
             cand_emb = emb[jnp.asarray(cand.reshape(-1))].reshape(
                 b, cand.shape[1], -1)
-            q = h_s * table[rel]
-            neg_scores = jnp.einsum("bd,bcd->bc", q, cand_emb)
-            true_scores = jnp.sum(q * emb[jnp.asarray(batch[:, 2])], axis=1)
+            q, q_bias = dec.prepare_query(dparams, h_s, rel)
+            c_neg, cb_neg = dec.prepare_candidates(dparams, cand_emb)
+            neg_scores = apply_epilogue(
+                jnp.einsum("bd,bcd->bc", q, c_neg)
+                + q_bias[:, None] + cb_neg, dec.epilogue)
+            c_true, cb_true = dec.prepare_candidates(
+                dparams, emb[jnp.asarray(batch[:, 2])])
+            true_scores = apply_epilogue(
+                jnp.sum(q * c_true, axis=1) + q_bias + cb_true,
+                dec.epilogue)
             greater = jnp.sum(neg_scores > true_scores[:, None], axis=1)
             equal = jnp.sum(neg_scores == true_scores[:, None], axis=1)
             # candidates exclude the true tail, so no self-tie to discount
@@ -277,26 +287,26 @@ def ranking_metrics(
 
 def evaluate_both_directions(
     entity_emb: np.ndarray,
-    rel_diag_table: np.ndarray,
+    decoder_params: Dict[str, Any],
     test_kg: KnowledgeGraph,
     filter_graphs: Sequence[KnowledgeGraph],
     num_relations_base: int,
     hits_ks: Sequence[int] = (1, 3, 10),
-    decoder: str = "distmult",
+    decoder: Union[str, Decoder] = "distmult",
     num_shards: int = 1,
 ) -> Dict[str, float]:
     """Average of tail-corruption on (s,r,t) and on the inverse triplets
-    (t, r+R, s) — i.e. head corruption.  ``rel_diag_table`` must cover the
-    doubled relation vocabulary (we train with inverse relations).  The CSR
-    filter index over all splits (inverse relations included) is built once
-    and shared by both directions."""
+    (t, r+R, s) — i.e. head corruption.  ``decoder_params`` (the decoder's
+    relation tables) must cover the doubled relation vocabulary (we train
+    with inverse relations).  The CSR filter index over all splits (inverse
+    relations included) is built once and shared by both directions."""
     fidx = CSRFilterIndex.build(
         [g.with_inverse_relations() for g in filter_graphs])
     fwd = test_kg.triplets()
     inv = np.stack([test_kg.dst, test_kg.rel + num_relations_base,
                     test_kg.src], axis=1)
-    m_fwd = ranking_metrics(entity_emb, rel_diag_table, fwd, fidx, hits_ks,
+    m_fwd = ranking_metrics(entity_emb, decoder_params, fwd, fidx, hits_ks,
                             decoder=decoder, num_shards=num_shards)
-    m_inv = ranking_metrics(entity_emb, rel_diag_table, inv, fidx, hits_ks,
+    m_inv = ranking_metrics(entity_emb, decoder_params, inv, fidx, hits_ks,
                             decoder=decoder, num_shards=num_shards)
     return {k: 0.5 * (m_fwd[k] + m_inv[k]) for k in m_fwd}

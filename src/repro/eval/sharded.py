@@ -4,10 +4,14 @@ Dense ``ranking_metrics`` scores every test query against the full ``(N, d)``
 entity matrix on one device — the last single-device assumption in the
 system once training stores the entity table row-sharded over the ``model``
 mesh axis (``repro.sharding.embedding``).  This module shards the *candidate*
-axis of evaluation along the same row blocks:
+axis of evaluation along the same row blocks, for EVERY registered decoder
+(``repro.models.decoders``) via the canonical query form:
 
     per model shard s (owning table rows [s·rows, (s+1)·rows)):
-        h_s, m_r  ──►  Pallas kge_score kernel against ONLY the shard's
+        q, q_bias = decoder.prepare_query(...)        (replicated, computed
+                                                       once per batch)
+        C'_s, c_bias_s = decoder.prepare_candidates(table_s)   (row-local)
+                  ──►  Pallas kge_score kernel against ONLY the shard's
                        rows (+ per-shard filter-bias block, -inf on pads)
                   ──►  partial counts   greater_s = #{score > true}
                                         equal_s   = #{score == true}
@@ -16,10 +20,12 @@ axis of evaluation along the same row blocks:
 
 The exchange is integer (candidate counts) plus one one-hot float (the true
 score, owned by exactly one shard), so the sharded rank is EXACTLY the dense
-rank — not approximately: each per-candidate score is the same ``d``-length
-MXU dot the dense kernel computes, only tiled per shard, and the count psum
-is order-free.  ``tests/test_eval_ranking.py`` enforces identical MRR/Hits@k
-(``==``, not allclose) at 1/2/4 shards, including ties and padded rows.
+rank — not approximately: candidate preparation is row-local, each
+per-candidate score is the same ``d``-length MXU dot + elementwise epilogue
+the dense kernel computes, only tiled per shard, and the count psum is
+order-free.  ``tests/test_decoders.py`` enforces identical MRR/Hits@k
+(``==``, not allclose) at 1/2/4 shards for every registered decoder,
+including ties and padded rows.
 
 Two execution paths, mirroring ``sharded_gather``:
 
@@ -34,23 +40,35 @@ exchange — ranking never materializes the dense entity matrix.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Sequence, Tuple
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.ops import kge_score_padded
+from repro.models.decoders import Decoder, get_decoder
 from repro.sharding.embedding import (
     ShardedTableLayout, plan_local_gather, shard_bias_blocks, shard_table,
     sharded_gather,
 )
 
 
+def _shard_scores(decoder: Decoder, dec_params, table_block, q, q_bias,
+                  bias_block, interpret):
+    """One shard's (B, rows) kernel scores: row-local candidate preparation
+    of the shard's own table block + the shared query rows."""
+    cand, c_bias = decoder.prepare_candidates(dec_params, table_block)
+    return kge_score_padded(q, cand, bias_block, q_bias, c_bias,
+                            epilogue=decoder.epilogue, interpret=interpret)
+
+
 def sharded_rank_counts(
+    decoder: Union[str, Decoder],
+    dec_params: Dict[str, Any],  # decoder params (replicated)
     table: jax.Array,        # (S, rows, d) sim / (1, rows, d) per device
-    h_s: jax.Array,          # (B, d) query head embeddings (replicated)
-    rel_diag: jax.Array,     # (B, d) gathered relation diagonals (replicated)
+    q: jax.Array,            # (B, d) prepared query rows (replicated)
+    q_bias: jax.Array,       # (B,) pre-epilogue query bias (replicated)
     bias: jax.Array,         # (S, B, rows) sim / (1, B, rows) per device
     true_local: jax.Array,   # (S, B) true-tail local row per shard
     true_owned: jax.Array,   # (S, B) which shard owns each true tail
@@ -68,15 +86,17 @@ def sharded_rank_counts(
     with a separate dot — so it is bit-identical to the dense kernel's
     ``scores[b, t]`` and the ``>``/``==`` comparisons agree with the dense
     path even at exact ties.  ``bias`` must be ``-inf`` on layout-padded
-    rows (``shard_bias_blocks``), which zeroes their count contribution.
+    rows (``shard_bias_blocks``), which zeroes their count contribution for
+    both epilogue families.
     """
-    b = h_s.shape[0]
+    decoder = get_decoder(decoder)
+    b = q.shape[0]
     rows_idx = jnp.arange(b)
 
     if axis_name is None:
         # masked single-device simulation over the full shard stack
-        scores = [kge_score_padded(h_s, rel_diag, table[s], bias[s],
-                                   interpret=interpret)
+        scores = [_shard_scores(decoder, dec_params, table[s], q, q_bias,
+                                bias[s], interpret)
                   for s in range(table.shape[0])]
         true_score = sum(
             jnp.where(true_owned[s], scores[s][rows_idx, true_local[s]], 0.0)
@@ -98,8 +118,8 @@ def sharded_rank_counts(
             f"(1, rows, d) row block, got {table.shape} — shard the table "
             f"and bias over {axis_name!r}")
     s = jax.lax.axis_index(axis_name)
-    scores = kge_score_padded(h_s, rel_diag, table[0], bias[0],
-                              interpret=interpret)
+    scores = _shard_scores(decoder, dec_params, table[0], q, q_bias,
+                           bias[0], interpret)
     true_score = jax.lax.psum(
         jnp.where(true_owned[s], scores[rows_idx, true_local[s]], 0.0),
         axis_name)
@@ -112,65 +132,85 @@ def sharded_rank_counts(
     return greater, equal, true_score
 
 
-def make_sharded_rank_step(mesh, *, model_axis: str = "model",
+def make_sharded_rank_step(mesh, *, decoder: Union[str, Decoder] = "distmult",
+                           model_axis: str = "model",
                            interpret: Optional[bool] = None):
     """Build the jitted ``shard_map`` rank-count step for a real mesh.
 
     The entity-table row blocks and per-shard bias blocks are sharded over
     ``model_axis`` (one block per device — the layouts ``kge_param_specs``
-    prescribes); queries and gather plans are replicated.  Returns
-    ``step(table, h_s, rel_diag, bias, true_local, true_owned) ->
-    (greater, equal, true_score)`` with globally psum'd outputs, exactly
-    equal to the ``axis_name=None`` simulation.
+    prescribes); queries, query bias, gather plans and the decoder's own
+    params are replicated.  ``decoder`` is jit-static (a registry name or
+    frozen Decoder singleton).  Returns ``step(dec_params, table, q, q_bias,
+    bias, true_local, true_owned) -> (greater, equal, true_score)`` with
+    globally psum'd outputs, exactly equal to the ``axis_name=None``
+    simulation.
     """
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 
-    def body(table, h_s, rel_diag, bias, true_local, true_owned):
+    dec = get_decoder(decoder)
+
+    def body(dec_params, table, q, q_bias, bias, true_local, true_owned):
         return sharded_rank_counts(
-            table, h_s, rel_diag, bias, true_local, true_owned,
+            dec, dec_params, table, q, q_bias, bias, true_local, true_owned,
             axis_name=model_axis, interpret=interpret)
 
     sharded = shard_map(
         body, mesh=mesh,
-        in_specs=(P(model_axis), P(), P(), P(model_axis), P(), P()),
+        in_specs=(P(), P(model_axis), P(), P(), P(model_axis), P(), P()),
         out_specs=(P(), P(), P()),
         check_rep=False,
     )
-    return jax.jit(sharded)
+    step = jax.jit(sharded)
+    # tag so sharded_ranking_metrics can fail fast on a step built with a
+    # DIFFERENT decoder than the queries were prepared with (the scores
+    # would be silently wrong, not shape-mismatched)
+    step.decoder = dec
+    return step
 
 
 def sharded_ranking_metrics(
     entity_emb: np.ndarray,          # (N, d) encoded entity embeddings
-    rel_diag_table: np.ndarray,      # (R, d) DistMult relation diagonals
+    decoder_params: Dict[str, Any],  # decoder parameter tree
     test_triplets: np.ndarray,       # (T, 3) global ids
     filter_index,                    # CSRFilterIndex or dict reference
     num_shards: int,
     hits_ks: Sequence[int] = (1, 3, 10),
     batch_size: int = 256,
+    decoder: Union[str, Decoder] = "distmult",
     rank_step=None,
     interpret: Optional[bool] = None,
 ) -> Dict[str, float]:
     """Filtered MRR / Hits@k with candidate-axis-sharded ranking — the
-    ``num_shards > 1`` twin of the dense ``ranking_metrics`` (DistMult,
-    all-entities protocol), returning exactly the same metrics.
+    ``num_shards > 1`` twin of the dense ``ranking_metrics`` (any registered
+    decoder, all-entities protocol), returning exactly the same metrics.
 
     The entity table is row-sharded once (``shard_table``); per test batch
     the host builds the (B, N) filter bias (CSR scatter), splits it into
     per-shard blocks, plans the head gather and true-tail ownership with the
     PR-2 ``plan_local_gather``, and the device computes per-shard partial
-    counts.  ``rank_step`` switches the compute path: ``None`` runs the
-    single-device shard-loop simulation; a ``make_sharded_rank_step``
-    product runs the real ``shard_map`` + psum exchange.
+    counts from the decoder's query form.  ``rank_step`` switches the
+    compute path: ``None`` runs the single-device shard-loop simulation; a
+    ``make_sharded_rank_step`` product (built with the SAME decoder) runs
+    the real ``shard_map`` + psum exchange.
     """
     from repro.eval.ranking import _filter_bias, mean_rank, \
         metrics_from_ranks
 
+    dec = get_decoder(decoder)
+    step_dec = getattr(rank_step, "decoder", None)
+    if step_dec is not None and step_dec != dec:
+        raise ValueError(
+            f"rank_step was built for decoder {step_dec.name!r} but ranking "
+            f"runs {dec.name!r} — rebuild with make_sharded_rank_step"
+            f"(mesh, decoder={dec.name!r}) (a mismatched step would score "
+            f"silently wrong, not shape-mismatch)")
     n, d = entity_emb.shape
     layout = ShardedTableLayout(n, num_shards)
     table = jnp.asarray(shard_table(
         np.ascontiguousarray(np.asarray(entity_emb, np.float32)), layout))
-    diag_table = jnp.asarray(rel_diag_table)
+    dparams = jax.tree_util.tree_map(jnp.asarray, decoder_params)
     ranks = []
 
     for lo in range(0, test_triplets.shape[0], batch_size):
@@ -179,7 +219,8 @@ def sharded_ranking_metrics(
         # bitwise equal to the dense emb[batch[:, 0]] gather
         h_li, h_ow = plan_local_gather(layout, batch[:, 0])
         h_s = sharded_gather(table, jnp.asarray(h_li), jnp.asarray(h_ow))
-        rel_diag = diag_table[jnp.asarray(batch[:, 1].astype(np.int32))]
+        rel = jnp.asarray(batch[:, 1].astype(np.int32))
+        q, q_bias = dec.prepare_query(dparams, h_s, rel)
 
         bias = _filter_bias(filter_index, batch, n)
         bias_blocks = jnp.asarray(shard_bias_blocks(bias, layout))
@@ -188,11 +229,11 @@ def sharded_ranking_metrics(
 
         if rank_step is None:
             greater, equal, _ = sharded_rank_counts(
-                table, h_s, rel_diag, bias_blocks, t_li, t_ow,
+                dec, dparams, table, q, q_bias, bias_blocks, t_li, t_ow,
                 interpret=interpret)
         else:
             greater, equal, _ = rank_step(
-                table, h_s, rel_diag, bias_blocks, t_li, t_ow)
+                dparams, table, q, q_bias, bias_blocks, t_li, t_ow)
         ranks.append(mean_rank(np.asarray(greater), np.asarray(equal)))
 
     return metrics_from_ranks(np.concatenate(ranks), hits_ks)

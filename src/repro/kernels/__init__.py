@@ -2,7 +2,9 @@
 
 * ``rgcn_message`` — fused basis-decomposed relational message passing
   (gather → basis projection+mix → MXU one-hot segment sum).
-* ``kge_score`` — blocked DistMult candidate ranking for filtered MRR eval.
+* ``kge_score`` — blocked candidate ranking in the canonical decoder query
+  form ``epilogue(q @ C'^T + q_bias + c_bias) + mask`` — one kernel carries
+  every registered decoder (``repro.models.decoders``).
 * ``wkv_chunk`` — chunked RWKV-6 WKV with VMEM-resident recurrent state
   (the §Perf-winning formulation, TPU-native).
 
@@ -10,10 +12,10 @@
 On CPU the kernels run with ``interpret=True``; on TPU they compile.
 """
 from repro.kernels import ops, ref
+from repro.kernels.kge_score import EPILOGUES, NORM_EPS, apply_epilogue
 from repro.kernels.ops import (
-    distmult_rank_scores, kge_score_padded, rgcn_message_basis,
-    wkv_chunked_op,
+    kge_score_padded, rgcn_message_basis, wkv_chunked_op,
 )
 
-__all__ = ["ops", "ref", "distmult_rank_scores", "kge_score_padded",
-           "rgcn_message_basis", "wkv_chunked_op"]
+__all__ = ["ops", "ref", "EPILOGUES", "NORM_EPS", "apply_epilogue",
+           "kge_score_padded", "rgcn_message_basis", "wkv_chunked_op"]

@@ -98,53 +98,46 @@ def _rgcn_bwd(res, g):
 rgcn_message_basis.defvjp(_rgcn_fwd, _rgcn_bwd)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("epilogue", "interpret"))
 def kge_score_padded(
-    h_s: jax.Array,        # (B, d) head embeddings
-    rel_diag: jax.Array,   # (B, d) gathered DistMult diagonal per query
-    candidates: jax.Array,  # (C, d)
-    bias: Optional[jax.Array] = None,  # (B, C) additive mask (0 / -1e9 / -inf)
+    q: jax.Array,           # (B, d) prepared query rows
+    candidates: jax.Array,  # (C, d) prepared candidate rows
+    bias: Optional[jax.Array] = None,   # (B, C) POST-epilogue mask
+    q_bias: Optional[jax.Array] = None,  # (B,) pre-epilogue query bias
+    c_bias: Optional[jax.Array] = None,  # (C,) pre-epilogue candidate bias
+    *, epilogue: str = "bilinear",
     interpret: Optional[bool] = None,
 ) -> jax.Array:
     """Block-padding wrapper around the Pallas ``kge_score`` kernel.
 
-    ``kge_score`` asserts B and C are multiples of its 128-row tiles; this
-    wrapper pads ragged shapes (the last test batch, a shard's row block) up
-    to the tiles and slices the result back to ``(B, C)``.  Pad *candidate*
-    rows get bias ``-inf``, so any padded score is ``-inf`` and can never
-    outrank (or tie) a real candidate — rank counting over a padded score
-    matrix stays exact.  Matches ``kernels.ref.kge_score_ref`` on the real
-    rows.
+    Takes the canonical decoder query form (``repro.models.decoders``):
+    ``epilogue(q @ candidates^T + q_bias + c_bias) + bias``.  ``kge_score``
+    asserts B and C are multiples of its 128-row tiles; this wrapper pads
+    ragged shapes (the last test batch, a shard's row block) up to the tiles
+    and slices the result back to ``(B, C)``.  Pad *candidate* rows get
+    post-epilogue bias ``-inf``, so any padded score is ``-inf`` and can
+    never outrank (or tie) a real candidate — rank counting over a padded
+    score matrix stays exact.  Matches ``kernels.ref.kge_score_ref`` on the
+    real rows.
     """
-    b, d = h_s.shape
+    b, d = q.shape
     c = candidates.shape[0]
     b_pad = _round_up(b, Q_BLOCK)
     c_pad = _round_up(c, C_BLOCK)
 
-    h_p = _pad_to(h_s, b_pad)
-    diag_p = _pad_to(rel_diag, b_pad)
+    q_p = _pad_to(q, b_pad)
     cand_p = _pad_to(candidates, c_pad)
     if bias is None:
-        bias = jnp.zeros((b, c), h_s.dtype)
+        bias = jnp.zeros((b, c), q.dtype)
     bias_p = _pad_to(_pad_to(bias, b_pad, axis=0), c_pad, axis=1,
                      fill=-jnp.inf)
-    out = kge_score(h_p, diag_p, cand_p, bias_p, interpret=interpret)
+    qb = jnp.zeros((b,), jnp.float32) if q_bias is None else q_bias
+    cb = jnp.zeros((c,), jnp.float32) if c_bias is None else c_bias
+    qb_p = _pad_to(qb.astype(jnp.float32), b_pad).reshape(b_pad, 1)
+    cb_p = _pad_to(cb.astype(jnp.float32), c_pad).reshape(1, c_pad)
+    out = kge_score(q_p, cand_p, bias_p, qb_p, cb_p, epilogue=epilogue,
+                    interpret=interpret)
     return out[:b, :c]
-
-
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def distmult_rank_scores(
-    h_s: jax.Array,          # (B, d) head embeddings
-    rel: jax.Array,          # (B,) relation ids
-    rel_diag_table: jax.Array,  # (R, d)
-    candidates: jax.Array,   # (C, d)
-    filter_bias: Optional[jax.Array] = None,  # (B, C) 0 / -inf
-    interpret: Optional[bool] = None,
-) -> jax.Array:
-    """Blocked DistMult ranking: returns (B, C) float32 scores."""
-    diag = rel_diag_table[rel.astype(jnp.int32)]
-    return kge_score_padded(h_s, diag, candidates, filter_bias,
-                            interpret=interpret)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(5,))

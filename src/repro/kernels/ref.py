@@ -48,13 +48,22 @@ def rgcn_message_ref(
 
 
 def kge_score_ref(
-    h_s: jax.Array,        # (B, d) head embeddings
-    rel_diag: jax.Array,   # (B, d) gathered DistMult diagonals
-    candidates: jax.Array,  # (C, d) candidate tail embeddings
-    bias: Optional[jax.Array] = None,  # (B, C) additive mask (-inf filters)
+    q: jax.Array,           # (B, d) prepared query rows
+    candidates: jax.Array,  # (C, d) prepared candidate rows
+    bias: Optional[jax.Array] = None,    # (B, C) POST-epilogue mask
+    q_bias: Optional[jax.Array] = None,  # (B,) pre-epilogue query bias
+    c_bias: Optional[jax.Array] = None,  # (C,) pre-epilogue candidate bias
+    epilogue: str = "bilinear",
 ) -> jax.Array:
-    """DistMult ranking block: (h_s ∘ m_r) @ candidates^T (+ bias)."""
-    out = (h_s * rel_diag) @ candidates.T
+    """Canonical query-form ranking block (``repro.models.decoders``):
+    ``epilogue(q @ candidates^T + q_bias + c_bias) + bias``."""
+    from repro.kernels.kge_score import apply_epilogue
+    x = q @ candidates.T
+    if q_bias is not None:
+        x = x + q_bias[:, None]
+    if c_bias is not None:
+        x = x + c_bias[None, :]
+    out = apply_epilogue(x, epilogue)
     if bias is not None:
         out = out + bias
     return out

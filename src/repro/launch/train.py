@@ -42,12 +42,15 @@ def train_kge(args) -> None:
         (None if name == "fb15k-237" else 4096),
         strategy=args.strategy, use_kernel=args.use_kernel,
         pipeline=args.pipeline, prefetch=args.prefetch,
-        num_table_shards=args.table_shards)
+        num_table_shards=args.table_shards,
+        decoder=args.decoder, num_negatives=args.num_negatives,
+        **({"hidden_dim": args.hidden_dim} if args.hidden_dim > 0 else {}))
     pipe = ("full-graph (resident batch)" if cfg.batch_size is None
             else f"{cfg.pipeline} pipeline")   # --pipeline/--prefetch only
     #                                            drive the mini-batch path
     print(f"[train] {name}: {splits['train'].num_edges} train edges, "
           f"{splits['train'].num_entities} entities; "
+          f"{cfg.decoder} decoder, {cfg.num_negatives} negatives/edge; "
           f"{cfg.num_trainers} trainers ({cfg.strategy}, {pipe}, "
           f"{cfg.num_table_shards}-shard entity table)")
     trainer = KGETrainer(splits, cfg)
@@ -63,7 +66,8 @@ def train_kge(args) -> None:
     metrics = trainer.evaluate("test")
     rank_mode = (f"{cfg.num_table_shards}-shard ranking"
                  if cfg.num_table_shards > 1 else "dense ranking")
-    print(f"[eval] {rank_mode}, {len(trainer.partitions)}-partition "
+    print(f"[eval] {cfg.decoder} decoder, {rank_mode}, "
+          f"{len(trainer.partitions)}-partition "
           f"streamed encode, {time.perf_counter() - t0:.2f}s")
     print("[eval]", metrics)
 
@@ -127,6 +131,17 @@ def main() -> None:
     ap.add_argument("--table-shards", type=int, default=1,
                     help="row-shard the entity embedding table over this "
                          "many model-axis shards (1 = replicated)")
+    from repro.models.decoders import registered_decoders
+    ap.add_argument("--decoder", default="distmult",
+                    choices=registered_decoders(),
+                    help="KGE scoring function (registry-resolved; the "
+                         "paper trains distmult)")
+    ap.add_argument("--num-negatives", type=int, default=1,
+                    help="negative samples per positive edge (paper: 1)")
+    ap.add_argument("--hidden-dim", type=int, default=-1,
+                    help="override the arch config's hidden dim (complex/"
+                         "rotate need an even dim; fb15k-237's paper dim "
+                         "is 75)")
     ap.add_argument("--data-root", default=None)
     ap.add_argument("--use-kernel", action="store_true")
     ap.add_argument("--reduced", action="store_true", default=True)

@@ -4,8 +4,8 @@ from repro.models.rgcn import (
     message_passing_ref, relation_matrices, count_params,
 )
 from repro.models.decoders import (
-    SCORERS, init_decoder_params, score_triplets, score_against_candidates,
-    bce_loss, distmult_score, transe_score, complex_score,
+    Decoder, get_decoder, register_decoder, registered_decoders,
+    init_decoder_params, score_triplets, score_against_candidates, bce_loss,
 )
 from repro.models.rgat import (
     RGATConfig, init_rgat_params, rgat_encode, rgat_layer,

@@ -13,7 +13,7 @@ Both are jit/shard_map friendly (fixed shapes, no host callbacks).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -31,9 +31,15 @@ from repro.sharding.embedding import (
 @dataclasses.dataclass(frozen=True)
 class KGEConfig:
     rgcn: RGCNConfig
-    decoder: str = "distmult"   # paper Eq. 4
+    # registry name or Decoder instance (paper Eq. 4 default); resolved
+    # ONLY through repro.models.decoders.get_decoder
+    decoder: Union[str, decoders.Decoder] = "distmult"
     num_negatives: int = 1      # paper: 1 on ogbl-citation2
     negative_sampler: str = "constraint"   # "constraint" | "global"
+
+    @property
+    def decoder_impl(self) -> decoders.Decoder:
+        return decoders.get_decoder(self.decoder)
 
     @property
     def num_entities(self) -> int:

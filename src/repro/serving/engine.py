@@ -93,16 +93,27 @@ class ServeEngine:
 # ---------------------------------------------------------------------- #
 class KGEServer:
     """Answers (head, relation, ?) queries with top-k tails using the
-    Pallas ranking kernel."""
+    Pallas ranking kernel, for any registered decoder
+    (``repro.models.decoders``).
 
-    def __init__(self, entity_emb: np.ndarray, rel_diag: np.ndarray):
+    ``decoder_params`` is the decoder's own parameter tree (the trained
+    model's ``params["decoder"]``); the candidate side of the query form is
+    prepared ONCE at construction and cached, so each request only prepares
+    its (B, d) queries before the kernel call.
+    """
+
+    def __init__(self, entity_emb: np.ndarray, decoder_params,
+                 decoder="distmult"):
+        from repro.models.decoders import get_decoder
+        self.decoder = get_decoder(decoder)
         self.emb = jnp.asarray(entity_emb)
-        self.rel_diag = jnp.asarray(rel_diag)
+        self.params = jax.tree_util.tree_map(jnp.asarray, decoder_params)
+        self._prepared = self.decoder.prepare_candidates(self.params,
+                                                         self.emb)
 
     def topk_tails(self, heads: np.ndarray, rels: np.ndarray,
                    k: int = 10) -> np.ndarray:
-        from repro.kernels.ops import distmult_rank_scores
-        scores = distmult_rank_scores(
-            self.emb[jnp.asarray(heads)], jnp.asarray(rels),
-            self.rel_diag, self.emb)
+        scores = self.decoder.rank_scores(
+            self.params, self.emb[jnp.asarray(heads)], jnp.asarray(rels),
+            self.emb, prepared=self._prepared)
         return np.asarray(jax.lax.top_k(scores, k)[1])

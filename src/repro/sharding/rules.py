@@ -16,7 +16,8 @@ KGE embedding tables (``repro.sharding.embedding``): the entity table is
 row-sharded over ``model`` — as dense ``(V, d)`` the vocab dim goes on
 ``tensor``; in the prefetchable sharded layout ``(S, rows, d)`` the leading
 shard dim goes on ``tensor`` (one row block per model-axis device).
-Relation tables (``rel_diag`` / ``rel_vec`` / ``rel_complex``) follow the
+Relation tables (``rel_diag`` / ``rel_vec`` / ``rel_complex`` /
+``rel_phase`` — one per registered decoder) follow the
 same row-wise rule for *storage* analysis; ``kge_param_specs`` — the spec
 tree the shard_map train step consumes — keeps them replicated because the
 compute path gathers them densely, and only the entity table goes through
@@ -69,6 +70,7 @@ _RULES = {
     "rel_diag": ("tensor", None),
     "rel_vec": ("tensor", None),
     "rel_complex": ("tensor", None),
+    "rel_phase": ("tensor", None),
 }
 _EXPERT_RULES = {   # under a "moe" scope, 3-D expert tensors
     "w_in": ("tensor", "fsdp", None),

@@ -29,10 +29,6 @@ from repro.eval.ranking import evaluate_both_directions
 from repro.models import KGEConfig, encode_partition
 from repro.sharding.embedding import ShardedTableLayout
 
-# decoder -> relation-table key in params["decoder"]
-DECODER_TABLE_KEY = {"distmult": "rel_diag", "transe": "rel_vec",
-                     "complex": "rel_complex"}
-
 
 def encode_all_entities(
     params: Dict[str, Any],
@@ -97,15 +93,15 @@ def evaluate_split(
     """Filtered MRR / Hits@k on ``split`` (both directions, paper protocol).
 
     ``partitions``/``padded`` stream the encoder over existing training
-    partitions; ranking is candidate-axis-sharded over the model's
-    ``num_table_shards`` row blocks (DistMult; other decoders fall back to
-    the dense path inside ``ranking_metrics``)."""
+    partitions; ``decoder`` resolves through the registry
+    (``repro.models.decoders``) and its whole parameter tree rides along, so
+    with ``num_table_shards > 1`` ranking is candidate-axis-sharded over the
+    model's row blocks for EVERY registered decoder."""
     emb = encode_all_entities(
         params, kge_cfg, splits["train"].with_inverse_relations(),
         num_hops, features=features, partitions=partitions, padded=padded)
-    table = np.asarray(params["decoder"][DECODER_TABLE_KEY[decoder]])
     metrics = evaluate_both_directions(
-        emb, table, splits[split],
+        emb, params["decoder"], splits[split],
         [splits["train"], splits["valid"], splits["test"]],
         num_relations_base=splits["train"].num_relations,
         decoder=decoder,

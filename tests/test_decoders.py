@@ -1,0 +1,285 @@
+"""Decoder API (PR 4): the registered query-form protocol.
+
+Registry-driven — every test parametrizes over ``registered_decoders()``,
+so a newly registered decoder is swept automatically.  Contracts:
+
+* ``Decoder.score`` IS the query form: composing ``prepare_query`` /
+  ``prepare_candidates`` with the epilogue row-wise reproduces the direct
+  score BITWISE (one stabilization, no second formula to drift) — including
+  exact-duplicate (tied) entities and zero (pad-style) rows;
+* the Pallas kernel path (``Decoder.rank_scores``) matches the XLA oracle
+  (``score_against_candidates``) for every decoder, ragged shapes included;
+* candidate-axis-sharded ranking == dense ``ranking_metrics`` EXACTLY
+  (``==``, not allclose) at 1/2/4 shards for every decoder, with ties and
+  duplicate gather ids, through the direct entry point, the
+  ``ranking_metrics(num_shards=...)`` dispatch and the shard_map step;
+* the safe-norm epilogue: TransE's old ``+1e-9``-inside-the-difference
+  shift is gone (regression pinned);
+* registry hygiene: unknown names raise, instances pass through.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import make_synthetic_kg, split_train_valid_test
+from repro.eval import (
+    CSRFilterIndex, make_sharded_rank_step, ranking_metrics,
+    sharded_ranking_metrics,
+)
+from repro.kernels.kge_score import NORM_EPS, apply_epilogue
+from repro.models.decoders import (
+    Decoder, get_decoder, init_decoder_params, registered_decoders,
+    score_against_candidates, score_triplets,
+)
+
+DECODERS = registered_decoders()
+SHARD_COUNTS = (1, 2, 4)
+D = 16   # even: complex / rotate need re+im halves
+
+
+def _params(name, n_rel=12, d=D, seed=0):
+    return jax.tree_util.tree_map(
+        np.asarray,
+        init_decoder_params(jax.random.PRNGKey(seed), name, n_rel, d))
+
+
+def _states(seed=0, v=40, d=D):
+    """Vertex states with exact duplicates (ties) and an all-zero row (the
+    padded-row shape a masked batch produces)."""
+    rng = np.random.default_rng(seed)
+    h = rng.normal(size=(v, d)).astype(np.float32)
+    h[5] = h[2]          # duplicate → exact score ties
+    h[v - 1] = 0.0       # zero (pad-style) row
+    return h
+
+
+class TestRegistry:
+    def test_known_names(self):
+        assert set(DECODERS) >= {"distmult", "transe", "complex", "rotate"}
+
+    def test_unknown_raises(self):
+        with pytest.raises(ValueError, match="unknown decoder"):
+            get_decoder("holographic")
+
+    def test_instance_passthrough(self):
+        dec = get_decoder("transe")
+        assert get_decoder(dec) is dec
+
+    @pytest.mark.parametrize("name", DECODERS)
+    def test_static_hashable(self, name):
+        """Decoder singletons are frozen + hashable — safe jit statics."""
+        dec = get_decoder(name)
+        assert hash(dec) == hash(get_decoder(name))
+        assert dec == get_decoder(name)
+
+
+class TestQueryFormConsistency:
+    @pytest.mark.parametrize("name", DECODERS)
+    def test_score_is_the_query_form_bitwise(self, name):
+        """Direct score == epilogue(q·c + q_bias + c_bias) composed from the
+        prepare functions — EXACT equality, ties and zero rows included."""
+        dec = get_decoder(name)
+        p = _params(name)
+        h = _states()
+        rng = np.random.default_rng(1)
+        trip = np.stack([rng.integers(0, 40, 64), rng.integers(0, 12, 64),
+                         rng.integers(0, 40, 64)], 1).astype(np.int32)
+        # force tied + zero-row triplets into the batch
+        trip[0], trip[1] = (2, 0, 5), (5, 0, 2)
+        trip[2] = (39, 1, 39)
+        h_s, rel, h_t = jnp.asarray(h[trip[:, 0]]), \
+            jnp.asarray(trip[:, 1]), jnp.asarray(h[trip[:, 2]])
+        q, qb = dec.prepare_query(p, h_s, rel)
+        c, cb = dec.prepare_candidates(p, h_t)
+        composed = apply_epilogue(jnp.sum(q * c, axis=-1) + qb + cb,
+                                  dec.epilogue)
+        direct = dec.score(p, h_s, rel, h_t)
+        np.testing.assert_array_equal(np.asarray(direct),
+                                      np.asarray(composed))
+        # score_triplets (the training path) is the same function
+        np.testing.assert_array_equal(
+            np.asarray(score_triplets(p, name, jnp.asarray(h),
+                                      jnp.asarray(trip))),
+            np.asarray(direct))
+
+    @pytest.mark.parametrize("name", DECODERS)
+    def test_prepare_candidates_is_row_local(self, name):
+        """Any row subset prepares identically to its slice of the full
+        preparation — the property per-shard candidate blocks rely on."""
+        dec = get_decoder(name)
+        p = _params(name)
+        h = jnp.asarray(_states(seed=2))
+        full_c, full_cb = dec.prepare_candidates(p, h)
+        idx = jnp.asarray([3, 0, 39, 5, 2, 17])
+        sub_c, sub_cb = dec.prepare_candidates(p, h[idx])
+        np.testing.assert_array_equal(np.asarray(sub_c),
+                                      np.asarray(full_c[idx]))
+        np.testing.assert_array_equal(np.asarray(sub_cb),
+                                      np.asarray(full_cb[idx]))
+
+    @pytest.mark.parametrize("name", DECODERS)
+    @pytest.mark.parametrize("b,c", [(5, 37), (64, 301)])
+    def test_kernel_matches_xla_ragged(self, name, b, c):
+        """rank_scores (Pallas, block-padded) vs the XLA oracle on ragged
+        shapes with a filter mask."""
+        dec = get_decoder(name)
+        p = _params(name)
+        rng = np.random.default_rng(b * c)
+        h_s = jnp.asarray(rng.normal(size=(b, D)).astype(np.float32))
+        rel = jnp.asarray(rng.integers(0, 12, b).astype(np.int32))
+        cand = jnp.asarray(rng.normal(size=(c, D)).astype(np.float32))
+        bias = jnp.asarray(np.where(rng.random((b, c)) < 0.2, -1e9, 0.0)
+                           .astype(np.float32))
+        got = dec.rank_scores(p, h_s, rel, cand, bias)
+        want = score_against_candidates(p, name, h_s, rel, cand, bias)
+        assert got.shape == (b, c)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+
+class TestSafeNorm:
+    def test_transe_exact_translation_is_norm_eps_floor(self):
+        """h + r == t scores exactly -sqrt(NORM_EPS) — the old
+        ``+1e-9``-inside-the-difference shifted every score instead."""
+        dec = get_decoder("transe")
+        p = {"rel_vec": jnp.asarray([[0.5, -1.0, 0.0, 2.0]])}
+        s = jnp.asarray([[1.0, 1.0, 1.0, 1.0]])
+        t = s + p["rel_vec"]
+        got = float(dec.score(p, s, jnp.zeros(1, jnp.int32), t)[0])
+        assert got == pytest.approx(-np.sqrt(NORM_EPS), rel=1e-6)
+
+    def test_neg_l2_direct_vs_candidate_identical_stabilization(self):
+        """The same triplet scored directly and as a candidate row uses ONE
+        stabilization: kernel/XLA column equals the direct score to float
+        tolerance, with no constant offset."""
+        for name in ("transe", "rotate"):
+            dec = get_decoder(name)
+            p = _params(name, n_rel=4)
+            h = _states(seed=3, v=20)
+            h_s = jnp.asarray(h[:8])
+            rel = jnp.asarray(np.arange(8) % 4)
+            direct = dec.score(p, h_s, rel, jnp.asarray(h[8:16]))
+            col = score_against_candidates(
+                p, name, h_s, rel, jnp.asarray(h))[np.arange(8),
+                                                   np.arange(8, 16)]
+            np.testing.assert_allclose(np.asarray(direct), np.asarray(col),
+                                       rtol=1e-5, atol=1e-5)
+
+    def test_neg_l2_epilogue_matches_norm(self):
+        """Away from the eps floor the expansion equals the plain norm."""
+        rng = np.random.default_rng(4)
+        u = rng.normal(size=(32, D)).astype(np.float32)
+        c = rng.normal(size=(32, D)).astype(np.float32)
+        x = np.sum(u * u, 1) + np.sum(c * c, 1) - 2 * np.sum(u * c, 1)
+        got = np.asarray(apply_epilogue(jnp.asarray(x), "neg_l2"))
+        want = -np.linalg.norm(u - c, axis=1)
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+def _ranking_setup(name, seed=0, n=203, n_rel=6, n_test=60):
+    rng = np.random.default_rng(seed)
+    emb = rng.normal(size=(n, D)).astype(np.float32)
+    emb[7] = emb[3]                    # ties across shard boundaries
+    emb[n - 1] = emb[11]
+    p = _params(name, n_rel=2 * n_rel, seed=seed)
+    kg = make_synthetic_kg(n, n_rel, 1400, seed=seed)
+    splits = split_train_valid_test(kg)
+    fidx = CSRFilterIndex.build(
+        [g.with_inverse_relations() for g in splits.values()])
+    tests = splits["test"].with_inverse_relations().triplets()[:n_test]
+    tests = np.concatenate([tests, tests[:5]])   # duplicate gather ids
+    return emb, p, tests, fidx
+
+
+class TestShardedEqualsDenseEveryDecoder:
+    """The tentpole acceptance: with ``num_shards > 1`` EVERY registered
+    decoder ranks candidate-axis-sharded and lands EXACTLY on its dense
+    reference."""
+
+    @pytest.mark.parametrize("name", DECODERS)
+    @pytest.mark.parametrize("s", SHARD_COUNTS)
+    def test_exactly_equals_dense(self, name, s):
+        emb, p, tests, fidx = _ranking_setup(name)
+        m_dense = ranking_metrics(emb, p, tests, fidx, decoder=name)
+        m_sh = sharded_ranking_metrics(emb, p, tests, fidx, s, decoder=name)
+        assert m_sh == m_dense                 # exact, not allclose
+
+    @pytest.mark.parametrize("name", DECODERS)
+    def test_dispatch_through_ranking_metrics(self, name):
+        emb, p, tests, fidx = _ranking_setup(name, seed=1)
+        m_dense = ranking_metrics(emb, p, tests, fidx, decoder=name)
+        m_sh = ranking_metrics(emb, p, tests, fidx, decoder=name,
+                               num_shards=2)
+        assert m_sh == m_dense
+
+    @pytest.mark.parametrize("name", DECODERS)
+    def test_shard_map_step_matches_dense(self, name):
+        """1×1 host mesh smoke of the shard_map + psum path per decoder
+        (the 2-device subprocess sweep is slow-marked)."""
+        from repro.launch.mesh import make_host_mesh
+        emb, p, tests, fidx = _ranking_setup(name, seed=2, n_test=40)
+        step = make_sharded_rank_step(make_host_mesh(1, 1), decoder=name)
+        m_spmd = sharded_ranking_metrics(emb, p, tests, fidx, 1,
+                                         decoder=name, rank_step=step)
+        assert m_spmd == ranking_metrics(emb, p, tests, fidx, decoder=name)
+
+    def test_mismatched_rank_step_fails_fast(self):
+        """A shard_map step built for one decoder must be rejected when
+        ranking runs another — mismatched scores would be silently wrong."""
+        from repro.launch.mesh import make_host_mesh
+        emb, p, tests, fidx = _ranking_setup("transe", seed=4, n_test=10)
+        step = make_sharded_rank_step(make_host_mesh(1, 1),
+                                      decoder="distmult")
+        with pytest.raises(ValueError, match="rank_step was built"):
+            sharded_ranking_metrics(emb, p, tests, fidx, 1,
+                                    decoder="transe", rank_step=step)
+
+    @pytest.mark.parametrize("name", DECODERS)
+    def test_ogbl_candidate_path(self, name):
+        """The per-test candidate-list protocol rides the query form for
+        every decoder; metrics stay sane and the true tail never competes
+        against itself."""
+        emb, p, tests, _ = _ranking_setup(name, seed=3, n_test=40)
+        rng = np.random.default_rng(7)
+        cands = rng.integers(0, emb.shape[0],
+                             (tests.shape[0], 20)).astype(np.int32)
+        m = ranking_metrics(emb, p, tests, {}, candidates=cands,
+                            decoder=name)
+        assert 0.0 < m["mrr"] <= 1.0
+        assert m["hits@1"] <= m["hits@3"] <= m["hits@10"]
+
+
+class TestDecoderInstanceThreading:
+    def test_config_accepts_instance(self):
+        """KGEConfig carries a Decoder instance end to end (strings resolve
+        only inside the registry)."""
+        from repro.models import KGEConfig, RGCNConfig
+        dec = get_decoder("rotate")
+        cfg = KGEConfig(rgcn=RGCNConfig(num_entities=10, num_relations=2,
+                                        hidden_dim=D), decoder=dec)
+        assert cfg.decoder_impl is dec
+        assert isinstance(cfg.decoder_impl, Decoder)
+
+    @pytest.mark.slow
+    @pytest.mark.parametrize("name", [d for d in DECODERS
+                                      if d != "distmult"])
+    def test_trainer_sharded_eval_every_decoder(self, name):
+        """Short full-graph training per non-default decoder: 2-shard
+        trainer metrics EXACTLY equal the dense trainer's (the distmult
+        twin runs in tier-1 via test_eval_ranking)."""
+        from repro.data import synthetic_fb15k
+        from repro.training import KGETrainer, TrainConfig
+        splits = synthetic_fb15k(scale=0.01, seed=5)
+        metrics = {}
+        for s in (1, 2):
+            tr = KGETrainer(splits, TrainConfig(
+                num_trainers=2, epochs=2, hidden_dim=D, batch_size=None,
+                learning_rate=0.05, seed=0, decoder=name,
+                num_table_shards=s))
+            tr.fit()
+            metrics[s] = tr.evaluate("valid")
+            tr.close()
+        assert metrics[2] == metrics[1]
+        assert 0.0 < metrics[1]["valid_mrr"] <= 1.0

@@ -125,9 +125,9 @@ class TestCSRFilterIndex:
 # Tie-aware mean rank (satellite: regression with exact ties)
 # ====================================================================== #
 class TestTieHandling:
-    """emb[0] is the head; with rel_diag == 1 the candidate scores are
-    emb[c][0]: c0=1.0 (head), c1=0.5 (TRUE), c2=0.5 (tie), c3=0.9,
-    c4=0.1, c5=0.5 (tie)."""
+    """emb[0] is the head; with the DistMult diagonal == 1 the candidate
+    scores are emb[c][0]: c0=1.0 (head), c1=0.5 (TRUE), c2=0.5 (tie),
+    c3=0.9, c4=0.1, c5=0.5 (tie)."""
 
     def _emb(self):
         n, d = 6, 4
@@ -135,7 +135,7 @@ class TestTieHandling:
         emb[:, 0] = [1.0, 0.5, 0.5, 0.9, 0.1, 0.5]
         emb[0] = 0.0
         emb[0, 0] = 1.0
-        return emb, np.ones((1, d), np.float32)
+        return emb, {"rel_diag": np.ones((1, d), np.float32)}
 
     def test_all_entities_path_mean_rank(self):
         emb, table = self._emb()
@@ -170,7 +170,7 @@ class TestTieHandling:
         table = rng.normal(size=(2, 8)).astype(np.float32)
         tests = np.stack([rng.integers(0, 40, 16), rng.integers(0, 2, 16),
                           rng.integers(0, 40, 16)], 1).astype(np.int32)
-        m = ranking_metrics(emb, table, tests, {})
+        m = ranking_metrics(emb, {"rel_diag": table}, tests, {})
         scores = (emb[tests[:, 0]] * table[tests[:, 1]]) @ emb.T
         true = scores[np.arange(16), tests[:, 2]]
         strict = 1 + (scores > true[:, None]).sum(1)
@@ -183,35 +183,39 @@ class TestTieHandling:
 class TestKgeScorePadding:
     @pytest.mark.parametrize("b,c", [(5, 37), (130, 200), (128, 128),
                                      (1, 129), (257, 1)])
-    def test_ragged_shapes_match_ref(self, b, c):
+    @pytest.mark.parametrize("epilogue", ("bilinear", "neg_l2"))
+    def test_ragged_shapes_match_ref(self, b, c, epilogue):
         from repro.kernels import ref
         from repro.kernels.ops import kge_score_padded
         rng = np.random.default_rng(b * 1000 + c)
         d = 16
-        h = jnp.asarray(rng.normal(size=(b, d)).astype(np.float32))
-        diag = jnp.asarray(rng.normal(size=(b, d)).astype(np.float32))
+        q = jnp.asarray(rng.normal(size=(b, d)).astype(np.float32))
         cand = jnp.asarray(rng.normal(size=(c, d)).astype(np.float32))
+        qb = jnp.asarray(rng.normal(size=(b,)).astype(np.float32) ** 2)
+        cb = jnp.asarray(rng.normal(size=(c,)).astype(np.float32) ** 2)
         bias = jnp.asarray(
             np.where(rng.random((b, c)) < 0.2, FILTER_BIAS, 0.0)
             .astype(np.float32))
-        got = kge_score_padded(h, diag, cand, bias)
+        got = kge_score_padded(q, cand, bias, qb, cb, epilogue=epilogue)
         assert got.shape == (b, c)
         np.testing.assert_allclose(
-            np.asarray(got), np.asarray(ref.kge_score_ref(h, diag, cand,
-                                                          bias)),
+            np.asarray(got),
+            np.asarray(ref.kge_score_ref(q, cand, bias, qb, cb,
+                                         epilogue=epilogue)),
             rtol=1e-5, atol=1e-5)
-        # bias-less call too
-        got_nb = kge_score_padded(h, diag, cand)
+        # bias-less call too (zero pre-epilogue biases)
+        got_nb = kge_score_padded(q, cand, epilogue=epilogue)
         np.testing.assert_allclose(
             np.asarray(got_nb),
-            np.asarray(ref.kge_score_ref(h, diag, cand)),
+            np.asarray(ref.kge_score_ref(q, cand, epilogue=epilogue)),
             rtol=1e-5, atol=1e-5)
 
     def test_raw_kernel_rejects_ragged(self):
         from repro.kernels.kge_score import kge_score
-        h = jnp.zeros((5, 8))
+        q = jnp.zeros((5, 8))
         with pytest.raises(AssertionError, match="kge_score_padded"):
-            kge_score(h, h, jnp.zeros((37, 8)), jnp.zeros((5, 37)))
+            kge_score(q, jnp.zeros((37, 8)), jnp.zeros((5, 37)),
+                      jnp.zeros((5, 1)), jnp.zeros((1, 37)))
 
     def test_ranking_metrics_accepts_ragged_last_batch(self):
         """T % batch_size != 0 and N % 128 != 0 go through the wrapper."""
@@ -220,7 +224,8 @@ class TestKgeScorePadding:
         table = rng.normal(size=(4, 8)).astype(np.float32)
         tests = np.stack([rng.integers(0, 150, 70), rng.integers(0, 4, 70),
                           rng.integers(0, 150, 70)], 1).astype(np.int32)
-        m = ranking_metrics(emb, table, tests, {}, batch_size=32)
+        m = ranking_metrics(emb, {"rel_diag": table}, tests, {},
+                            batch_size=32)
         assert 0.0 < m["mrr"] <= 1.0
 
 
@@ -235,34 +240,35 @@ def _tied_eval_setup(seed=0, n=301, d=24, n_rel=8, n_test=120):
     emb = rng.normal(size=(n, d)).astype(np.float32)
     emb[7] = emb[3]
     emb[n - 1] = emb[11]            # tie across shard boundaries
-    table = rng.normal(size=(2 * n_rel, d)).astype(np.float32)
+    dparams = {"rel_diag":
+               rng.normal(size=(2 * n_rel, d)).astype(np.float32)}
     kg = make_synthetic_kg(n, n_rel, 2200, seed=seed)
     splits = split_train_valid_test(kg)
     fidx = CSRFilterIndex.build(
         [g.with_inverse_relations() for g in splits.values()])
     tests = splits["test"].with_inverse_relations().triplets()[:n_test]
     tests = np.concatenate([tests, tests[:7]])   # duplicate gather ids
-    return emb, table, tests, fidx, splits
+    return emb, dparams, tests, fidx, splits
 
 
 class TestShardedRankingEquivalence:
     @pytest.mark.parametrize("s", SHARD_COUNTS)
     def test_exactly_equals_dense(self, s):
-        emb, table, tests, fidx, _ = _tied_eval_setup()
-        m_dense = ranking_metrics(emb, table, tests, fidx)
-        m_sh = sharded_ranking_metrics(emb, table, tests, fidx, s)
+        emb, dparams, tests, fidx, _ = _tied_eval_setup()
+        m_dense = ranking_metrics(emb, dparams, tests, fidx)
+        m_sh = sharded_ranking_metrics(emb, dparams, tests, fidx, s)
         assert m_sh == m_dense                 # exact, not allclose
 
     @pytest.mark.parametrize("s", SHARD_COUNTS)
     def test_dispatch_through_ranking_metrics(self, s):
-        emb, table, tests, fidx, _ = _tied_eval_setup(seed=1)
-        m_dense = ranking_metrics(emb, table, tests, fidx)
-        m_sh = ranking_metrics(emb, table, tests, fidx, num_shards=s)
+        emb, dparams, tests, fidx, _ = _tied_eval_setup(seed=1)
+        m_dense = ranking_metrics(emb, dparams, tests, fidx)
+        m_sh = ranking_metrics(emb, dparams, tests, fidx, num_shards=s)
         assert m_sh == m_dense
 
     def test_both_directions_sharded(self):
-        emb, table, _, _, splits = _tied_eval_setup(seed=2)
-        args = (emb, table, splits["valid"],
+        emb, dparams, _, _, splits = _tied_eval_setup(seed=2)
+        args = (emb, dparams, splits["valid"],
                 [splits["train"], splits["valid"], splits["test"]])
         m1 = evaluate_both_directions(*args, num_relations_base=8)
         m2 = evaluate_both_directions(*args, num_relations_base=8,
@@ -274,19 +280,19 @@ class TestShardedRankingEquivalence:
         multi-device model axis changes only the axis size — the 2-device
         subprocess test drives the real exchange)."""
         from repro.launch.mesh import make_host_mesh
-        emb, table, tests, fidx, _ = _tied_eval_setup(seed=3, n_test=64)
+        emb, dparams, tests, fidx, _ = _tied_eval_setup(seed=3, n_test=64)
         step = make_sharded_rank_step(make_host_mesh(1, 1))
-        m_spmd = sharded_ranking_metrics(emb, table, tests, fidx, 1,
+        m_spmd = sharded_ranking_metrics(emb, dparams, tests, fidx, 1,
                                          rank_step=step)
-        assert m_spmd == ranking_metrics(emb, table, tests, fidx)
+        assert m_spmd == ranking_metrics(emb, dparams, tests, fidx)
 
     def test_dict_filter_also_supported(self):
         """The sharded path accepts the dict reference index too."""
-        emb, table, tests, _, splits = _tied_eval_setup(seed=4, n_test=40)
+        emb, dparams, tests, _, splits = _tied_eval_setup(seed=4, n_test=40)
         ref = build_filter_index(
             [g.with_inverse_relations() for g in splits.values()])
-        assert sharded_ranking_metrics(emb, table, tests, ref, 2) == \
-            ranking_metrics(emb, table, tests, ref)
+        assert sharded_ranking_metrics(emb, dparams, tests, ref, 2) == \
+            ranking_metrics(emb, dparams, tests, ref)
 
 
 # ====================================================================== #
@@ -395,7 +401,7 @@ n, d = 301, 16
 rng = np.random.default_rng(0)
 emb = rng.normal(size=(n, d)).astype(np.float32)
 emb[7] = emb[3]                      # exact ties survive the psum exchange
-table = rng.normal(size=(12, d)).astype(np.float32)
+dparams = {"rel_diag": rng.normal(size=(12, d)).astype(np.float32)}
 kg = make_synthetic_kg(n, 6, 1800, seed=1)
 splits = split_train_valid_test(kg)
 fidx = CSRFilterIndex.build(
@@ -404,9 +410,9 @@ tests = splits["test"].with_inverse_relations().triplets()[:96]
 
 mesh = make_host_mesh(1, 2)          # data=1 x model=2: one row block each
 step = make_sharded_rank_step(mesh)
-m_spmd = sharded_ranking_metrics(emb, table, tests, fidx, 2,
+m_spmd = sharded_ranking_metrics(emb, dparams, tests, fidx, 2,
                                  rank_step=step)
-m_dense = ranking_metrics(emb, table, tests, fidx)
+m_dense = ranking_metrics(emb, dparams, tests, fidx)
 # greater/equal partials are integers and the true score is one real value
 # + zeros, so the psum is order-free: EXACT equality, unlike the training
 # gradient exchange

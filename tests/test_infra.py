@@ -98,7 +98,7 @@ class TestRankingEval:
         emb = np.eye(n, d, dtype=np.float32)
         table = np.ones((1, d), np.float32)
         tests = np.array([[0, 0, 0]])          # (s=0, r=0, t=0): rank 1
-        m = ranking_metrics(emb, table, tests, {})
+        m = ranking_metrics(emb, {"rel_diag": table}, tests, {})
         assert m["mrr"] == pytest.approx(1.0)
         assert m["hits@1"] == 1.0
 
@@ -110,8 +110,8 @@ class TestRankingEval:
         # without filtering, entity 1 ties/beats others for head 0
         tests = np.array([[0, 0, 2]])
         fidx = {(0, 0): {1, 2}}     # 1 is a known positive -> filtered
-        m = ranking_metrics(emb, table, tests, fidx)
-        m_nof = ranking_metrics(emb, table, tests, {})
+        m = ranking_metrics(emb, {"rel_diag": table}, tests, fidx)
+        m_nof = ranking_metrics(emb, {"rel_diag": table}, tests, {})
         assert m["mrr"] >= m_nof["mrr"]
 
     def test_candidate_mode(self):
@@ -122,7 +122,7 @@ class TestRankingEval:
         table = np.ones((2, d), np.float32)
         tests = np.array([[0, 0, 1], [2, 1, 3]])
         cands = rng.integers(0, n, (2, 10))
-        m = ranking_metrics(emb, table, tests, {}, candidates=cands)
+        m = ranking_metrics(emb, {"rel_diag": table}, tests, {}, candidates=cands)
         assert 0 < m["mrr"] <= 1.0
 
 
@@ -247,12 +247,33 @@ class TestServing:
         from repro.serving import KGEServer
         rng = np.random.default_rng(0)
         emb = rng.normal(size=(40, 8)).astype(np.float32)
-        srv = KGEServer(emb, np.ones((2, 8), np.float32))
+        srv = KGEServer(emb, {"rel_diag": np.ones((2, 8), np.float32)})
         top = srv.topk_tails(np.array([0, 1]), np.array([0, 1]), k=5)
         assert top.shape == (2, 5)
         # top-1 must be the argmax of the exact scores
         want = np.argmax(emb @ emb[:2].T, axis=0)
         assert (top[:, 0] == want).all()
+
+    def test_kge_server_every_decoder(self):
+        """The serving path carries every registered decoder: top-1 must be
+        the argmax of that decoder's exact XLA scores."""
+        from repro.models.decoders import (
+            init_decoder_params, registered_decoders,
+            score_against_candidates,
+        )
+        from repro.serving import KGEServer
+        rng = np.random.default_rng(1)
+        emb = rng.normal(size=(50, 8)).astype(np.float32)
+        heads, rels = np.array([0, 3, 7]), np.array([0, 1, 2])
+        for name in registered_decoders():
+            p = init_decoder_params(jax.random.PRNGKey(0), name, 3, 8)
+            srv = KGEServer(emb, p, decoder=name)
+            top = srv.topk_tails(heads, rels, k=4)
+            want = score_against_candidates(
+                p, name, jnp.asarray(emb[heads]), jnp.asarray(rels),
+                jnp.asarray(emb))
+            assert (top[:, 0] == np.argmax(np.asarray(want), axis=1)).all(), \
+                name
 
 
 class TestHLONesting:

@@ -108,34 +108,59 @@ def test_segment_sum_sorted_and_unsorted():
                                    np.asarray(wdeg), rtol=1e-6, atol=0)
 
 
-KGE_SHAPES = [(32, 100, 16), (128, 1000, 75), (200, 333, 32), (1, 128, 64)]
+KGE_SHAPES = [(32, 100, 16), (128, 1000, 76), (200, 333, 32), (1, 128, 64)]
 
 
 @pytest.mark.parametrize("b,c,d", KGE_SHAPES)
-def test_kge_score_allclose(b, c, d):
+def test_kge_score_query_form_allclose(b, c, d):
+    """Raw query-form kernel vs oracle, both epilogue families."""
+    from repro.kernels.kge_score import EPILOGUES
     rng = np.random.default_rng(b * c)
-    h = jnp.asarray(rng.normal(size=(b, d)), jnp.float32)
-    rel = jnp.asarray(rng.integers(0, 7, b), jnp.int32)
-    table = jnp.asarray(rng.normal(size=(7, d)), jnp.float32)
+    q = jnp.asarray(rng.normal(size=(b, d)), jnp.float32)
     cand = jnp.asarray(rng.normal(size=(c, d)), jnp.float32)
+    qb = jnp.asarray(rng.random(b), jnp.float32)
+    cb = jnp.asarray(rng.random(c), jnp.float32)
     bias = jnp.asarray(
         np.where(rng.random((b, c)) < 0.1, -1e9, 0.0), jnp.float32)
-    got = ops.distmult_rank_scores(h, rel, table, cand, bias)
-    want = ref.kge_score_ref(h, table[rel], cand, bias)
-    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
-                               rtol=1e-4, atol=1e-4)
+    for epi in EPILOGUES:
+        got = ops.kge_score_padded(q, cand, bias, qb, cb, epilogue=epi)
+        want = ref.kge_score_ref(q, cand, bias, qb, cb, epilogue=epi)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
 
 
 def test_kge_score_no_bias():
     rng = np.random.default_rng(9)
-    h = jnp.asarray(rng.normal(size=(10, 8)), jnp.float32)
-    rel = jnp.zeros(10, jnp.int32)
-    table = jnp.asarray(rng.normal(size=(3, 8)), jnp.float32)
+    q = jnp.asarray(rng.normal(size=(10, 8)), jnp.float32)
     cand = jnp.asarray(rng.normal(size=(50, 8)), jnp.float32)
-    got = ops.distmult_rank_scores(h, rel, table, cand)
-    want = ref.kge_score_ref(h, table[rel], cand)
+    got = ops.kge_score_padded(q, cand)
+    want = ref.kge_score_ref(q, cand)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("b,c,d", [(32, 100, 16), (130, 280, 24)])
+def test_kge_rank_scores_every_decoder(b, c, d):
+    """Decoder.rank_scores (Pallas) vs score_against_candidates (XLA) for
+    every registered decoder — a decoder silently dropping off the kernel
+    path fails here before it fails the bench gate."""
+    from repro.models.decoders import (
+        init_decoder_params, registered_decoders, get_decoder,
+        score_against_candidates,
+    )
+    rng = np.random.default_rng(b + c)
+    h = jnp.asarray(rng.normal(size=(b, d)), jnp.float32)
+    rel = jnp.asarray(rng.integers(0, 7, b), jnp.int32)
+    cand = jnp.asarray(rng.normal(size=(c, d)), jnp.float32)
+    bias = jnp.asarray(
+        np.where(rng.random((b, c)) < 0.1, -1e9, 0.0), jnp.float32)
+    for name in registered_decoders():
+        dec = get_decoder(name)
+        p = init_decoder_params(jax.random.PRNGKey(3), name, 7, d)
+        got = dec.rank_scores(p, h, rel, cand, bias)
+        want = score_against_candidates(p, name, h, rel, cand, bias)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4, err_msg=name)
 
 
 # ---------------------------------------------------------------------- #

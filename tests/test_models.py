@@ -5,10 +5,9 @@ import numpy as np
 import pytest
 
 from repro.models import (
-    RGCNConfig, bce_loss, complex_score, distmult_score,
-    init_decoder_params, init_rgcn_params, message_passing_ref,
+    RGCNConfig, bce_loss, get_decoder, init_decoder_params,
+    init_rgcn_params, message_passing_ref, registered_decoders,
     relation_matrices, score_against_candidates, score_triplets,
-    transe_score,
 )
 
 
@@ -66,52 +65,71 @@ class TestRGCNMessagePassing:
 
 class TestDecoders:
     def test_distmult_symmetry(self):
+        dec = get_decoder("distmult")
         p = init_decoder_params(jax.random.PRNGKey(0), "distmult", 3, 8)
         a = jnp.ones((1, 8))
         b = jnp.full((1, 8), 2.0)
         r = jnp.zeros(1, jnp.int32)
         # DistMult is symmetric in (s, t)
-        assert float(distmult_score(p, a, r, b)[0]) == pytest.approx(
-            float(distmult_score(p, b, r, a)[0]), rel=1e-6)
+        assert float(dec.score(p, a, r, b)[0]) == pytest.approx(
+            float(dec.score(p, b, r, a)[0]), rel=1e-6)
 
     def test_transe_translation(self):
+        dec = get_decoder("transe")
         p = {"rel_vec": jnp.asarray([[1.0, 0.0]])}
         s = jnp.asarray([[0.0, 0.0]])
         t = jnp.asarray([[1.0, 0.0]])
         r = jnp.zeros(1, jnp.int32)
-        # perfect translation scores ~0 (max)
-        assert float(transe_score(p, s, r, t)[0]) == pytest.approx(
+        # perfect translation scores ~0 (max); the safe-norm floor is
+        # -sqrt(NORM_EPS), NOT the old 1e-9 shift inside the difference
+        assert float(dec.score(p, s, r, t)[0]) == pytest.approx(
             0, abs=1e-4)
         t2 = jnp.asarray([[5.0, 0.0]])
-        assert float(transe_score(p, s, r, t2)[0]) < -3.9
+        assert float(dec.score(p, s, r, t2)[0]) < -3.9
+
+    def test_rotate_phase_rotation(self):
+        """A relation phase of zero is the identity: RotatE degenerates to
+        -‖h - t‖, and a perfect match scores ~0."""
+        dec = get_decoder("rotate")
+        p = {"rel_phase": jnp.zeros((1, 2))}
+        s = jnp.asarray([[0.3, -0.2, 0.5, 0.1]])
+        r = jnp.zeros(1, jnp.int32)
+        assert float(dec.score(p, s, r, s)[0]) == pytest.approx(0, abs=1e-4)
+        # a pi rotation negates the head: score vs -s is ~0, vs s is -2‖s‖
+        p_pi = {"rel_phase": jnp.full((1, 2), jnp.pi)}
+        assert float(dec.score(p_pi, s, r, -s)[0]) == pytest.approx(
+            0, abs=1e-3)
+        assert float(dec.score(p_pi, s, r, s)[0]) == pytest.approx(
+            -2 * float(jnp.linalg.norm(s)), abs=1e-3)
 
     def test_complex_antisymmetry_possible(self):
         """ComplEx can score (s,r,t) != (t,r,s) — unlike DistMult."""
+        dec = get_decoder("complex")
         rng = np.random.default_rng(0)
         p = {"rel_complex": jnp.asarray(rng.normal(size=(1, 8)),
                                         jnp.float32)}
         s = jnp.asarray(rng.normal(size=(1, 8)), jnp.float32)
         t = jnp.asarray(rng.normal(size=(1, 8)), jnp.float32)
         r = jnp.zeros(1, jnp.int32)
-        assert abs(float(complex_score(p, s, r, t)[0]) -
-                   float(complex_score(p, t, r, s)[0])) > 1e-6
+        assert abs(float(dec.score(p, s, r, t)[0]) -
+                   float(dec.score(p, t, r, s)[0])) > 1e-6
 
-    def test_candidate_scoring_matches_pointwise(self):
+    @pytest.mark.parametrize("name", registered_decoders())
+    def test_candidate_scoring_matches_pointwise(self, name):
         rng = np.random.default_rng(0)
-        for name in ("distmult", "transe", "complex"):
-            p = init_decoder_params(jax.random.PRNGKey(0), name, 5, 8)
-            h = jnp.asarray(rng.normal(size=(30, 8)), jnp.float32)
-            trip = jnp.asarray(
-                np.stack([rng.integers(0, 30, 12),
-                          rng.integers(0, 5, 12),
-                          rng.integers(0, 30, 12)], 1), jnp.int32)
-            point = score_triplets(p, name, h, trip)
-            cand = score_against_candidates(
-                p, name, h[trip[:, 0]], trip[:, 1], h)
-            picked = cand[jnp.arange(12), trip[:, 2]]
-            np.testing.assert_allclose(np.asarray(point),
-                                       np.asarray(picked),
-                                       rtol=1e-4, atol=1e-4)
+        p = init_decoder_params(jax.random.PRNGKey(0), name, 5, 8)
+        h = jnp.asarray(rng.normal(size=(30, 8)), jnp.float32)
+        trip = jnp.asarray(
+            np.stack([rng.integers(0, 30, 12),
+                      rng.integers(0, 5, 12),
+                      rng.integers(0, 30, 12)], 1), jnp.int32)
+        point = score_triplets(p, name, h, trip)
+        cand = score_against_candidates(
+            p, name, h[trip[:, 0]], trip[:, 1], h)
+        picked = cand[jnp.arange(12), trip[:, 2]]
+        np.testing.assert_allclose(np.asarray(point),
+                                   np.asarray(picked),
+                                   rtol=1e-4, atol=1e-4)
 
     def test_bce_loss_masking(self):
         scores = jnp.asarray([10.0, -10.0, 99.0])
