@@ -7,10 +7,13 @@ Three measurements:
   (``build_filter_index``, kept as reference) vs the one-lexsort vectorized
   ``CSRFilterIndex.build``;
 * per-batch BIAS construction — the Python double loop over (test row,
-  known tail) vs the CSR searchsorted + scatter;
+  known tail) vs the CSR searchsorted + scatter, plus the COLUMN-RANGE
+  form: building all per-shard bias blocks straight from CSR vs slicing
+  a dense bias (the sharded eval path's host cost, no (B, N) intermediate);
 * end-to-end filtered ranking — dense ``ranking_metrics`` vs
   ``sharded_ranking_metrics`` at 2/4 shards (simulated mesh), recording that
-  the sharded metrics are EXACTLY the dense ones;
+  the sharded metrics are EXACTLY the dense ones — for BOTH candidate
+  protocols (all-entities and the routed ogbl candidate lists);
 * per-decoder sharded-ranking throughput — EVERY registered decoder
   (``repro.models.decoders``) through the 2-shard candidate-axis-sharded
   path, wall clock + triplets/s + the sharded==dense equality bit, so a
@@ -73,6 +76,20 @@ def run(quick: bool = True) -> List[Dict]:
     np.testing.assert_array_equal(bias_loop, bias_csr)
     bias_speedup = bias_loop_s / max(bias_csr_s, 1e-9)
 
+    # ---- per-shard bias blocks straight from CSR (column-range form) ----
+    from repro.eval import shard_filter_bias_block
+    from repro.sharding.embedding import ShardedTableLayout, \
+        shard_bias_blocks
+    blocks_layout = ShardedTableLayout(n_ent, 4)
+    blk_dense_s, blk_dense = timed(
+        "blk_dense", lambda: shard_bias_blocks(
+            _filter_bias(csr_idx, test, n_ent), blocks_layout))
+    blk_range_s, blk_range = timed(
+        "blk_range", lambda: np.stack([
+            shard_filter_bias_block(csr_idx, test, blocks_layout, s)
+            for s in range(4)]))
+    np.testing.assert_array_equal(blk_dense, blk_range)
+
     # ---- ranking wall clock: dense vs candidate-axis-sharded ----
     rng = np.random.default_rng(0)
     d = 32 if quick else 64
@@ -91,6 +108,24 @@ def run(quick: bool = True) -> List[Dict]:
             "num_shards": s,
             "rank_wall_s": round(wall, 4),
             "metrics_equal_dense": m_sh == m_dense,
+        })
+
+    # ---- ogbl candidate-list protocol: dense vs routed-sharded ----
+    cand_rng = np.random.default_rng(7)
+    cand = cand_rng.integers(
+        0, n_ent, size=(rank_trips.shape[0], 64)).astype(np.int32)
+    cand_dense_s, m_cand = timed(
+        "cand_dense", lambda: ranking_metrics(
+            emb, dparams, rank_trips, csr_idx, candidates=cand))
+    candidate_rows = []
+    for s in (2, 4):
+        wall, m_cs = timed(
+            f"cand_sh{s}", lambda s=s: sharded_ranking_metrics(
+                emb, dparams, rank_trips, csr_idx, s, candidates=cand))
+        candidate_rows.append({
+            "num_shards": s,
+            "rank_wall_s": round(wall, 4),
+            "metrics_equal_dense": m_cs == m_cand,
         })
 
     # ---- per-decoder 2-shard throughput (registry-driven) ----
@@ -129,12 +164,24 @@ def run(quick: bool = True) -> List[Dict]:
             "csr_s": round(bias_csr_s, 4),
             "speedup": round(bias_speedup, 2),
         },
+        "bias_blocks_4shard": {
+            "batch": int(test.shape[0]),
+            "dense_split_s": round(blk_dense_s, 4),
+            "csr_range_s": round(blk_range_s, 4),
+        },
         "ranking": {
             "test_triplets": int(rank_trips.shape[0]),
             "hidden_dim": d,
             "dense_wall_s": round(dense_s, 4),
             "mrr": m_dense["mrr"],
             "sharded": sharded_rows,
+        },
+        "candidate_ranking": {
+            "test_triplets": int(rank_trips.shape[0]),
+            "candidates_per_row": int(cand.shape[1]),
+            "dense_wall_s": round(cand_dense_s, 4),
+            "mrr": m_cand["mrr"],
+            "sharded": candidate_rows,
         },
         "per_decoder": decoder_rows,
     }
@@ -156,6 +203,16 @@ def run(quick: bool = True) -> List[Dict]:
     ]
     for r in sharded_rows:
         rows.append({"name": f"rank_sharded_{r['num_shards']}",
+                     "us_per_call": r["rank_wall_s"] * 1e6,
+                     "equal_dense": r["metrics_equal_dense"]})
+    rows.append({"name": "bias_blocks_csr_range",
+                 "us_per_call": blk_range_s * 1e6,
+                 "dense_split_us": round(blk_dense_s * 1e6, 1)})
+    rows.append({"name": "rank_candidates_dense",
+                 "us_per_call": cand_dense_s * 1e6,
+                 "mrr": round(m_cand["mrr"], 5)})
+    for r in candidate_rows:
+        rows.append({"name": f"rank_candidates_sharded_{r['num_shards']}",
                      "us_per_call": r["rank_wall_s"] * 1e6,
                      "equal_dense": r["metrics_equal_dense"]})
     for r in decoder_rows:

@@ -26,13 +26,14 @@ EMBED_JSON_PATH = os.path.join(os.path.dirname(__file__), "..",
                                "BENCH_embedding.json")
 
 
-def _measure(splits, kind: str, quick: bool) -> Dict[str, float]:
+def _measure(splits, kind: str, quick: bool,
+             sharded_transfer: bool = False) -> Dict[str, float]:
     from repro.training import KGETrainer, TrainConfig
 
     tr = KGETrainer(splits, TrainConfig(
         num_trainers=4, strategy="vertex_cut", num_hops=2, hidden_dim=32,
         num_negatives=1, batch_size=256, learning_rate=0.01, seed=0,
-        pipeline=kind))
+        pipeline=kind, sharded_transfer=sharded_transfer))
     tr.train_epoch()                      # warmup + compile epoch
     epochs = 2 if quick else 5
     walls, recs = [], []
@@ -62,6 +63,11 @@ def run(quick: bool = True) -> List[Dict]:
     kg = splits["train"]
     results = {kind: _measure(splits, kind, quick)
                for kind in ("serial", "async")}
+    # per-axis NamedSharding device_put instead of jnp.asarray (on a
+    # 1-device box this measures the pure placement-API overhead; on a
+    # real mesh it buys the per-device slice placement)
+    results["async_sharded"] = _measure(splits, "async", quick,
+                                        sharded_transfer=True)
     speedup = results["serial"]["epoch_wall_s"] / \
         max(results["async"]["epoch_wall_s"], 1e-9)
 
@@ -73,6 +79,7 @@ def run(quick: bool = True) -> List[Dict]:
                    "hidden_dim": 32, "quick": quick},
         "serial": results["serial"],
         "async": results["async"],
+        "async_sharded_transfer": results["async_sharded"],
         "async_speedup": round(speedup, 3),
     }
     with open(JSON_PATH, "w") as f:
@@ -80,7 +87,7 @@ def run(quick: bool = True) -> List[Dict]:
         f.write("\n")
 
     rows = []
-    for kind in ("serial", "async"):
+    for kind in ("serial", "async", "async_sharded"):
         r = results[kind]
         rows.append({
             "name": kind,

@@ -6,12 +6,13 @@ from repro.data.datasets import (
     load_or_synthesize, TokenStream,
 )
 from repro.data.pipeline import (
-    AsyncMinibatchPipeline, FullGraphPipeline, InputPipeline, PipelineStats,
-    SerialMinibatchPipeline, eval_partition_batches, make_input_pipeline,
-    to_device_batch,
+    AsyncMinibatchPipeline, BatchShardings, FullGraphPipeline, InputPipeline,
+    PipelineStats, SerialMinibatchPipeline, eval_partition_batches,
+    make_input_pipeline, to_device_batch,
 )
 __all__ = ["load_fb15k_format", "synthetic_fb15k", "synthetic_citation2",
            "load_or_synthesize", "TokenStream",
-           "AsyncMinibatchPipeline", "FullGraphPipeline", "InputPipeline",
-           "PipelineStats", "SerialMinibatchPipeline", "make_input_pipeline",
-           "eval_partition_batches", "to_device_batch"]
+           "AsyncMinibatchPipeline", "BatchShardings", "FullGraphPipeline",
+           "InputPipeline", "PipelineStats", "SerialMinibatchPipeline",
+           "make_input_pipeline", "eval_partition_batches",
+           "to_device_batch"]

@@ -33,6 +33,18 @@ the same double-buffered transfer path (device keys ``shard_local_ids`` /
 ``shard_owned``).  The device step then never does index arithmetic for the
 embedding exchange.
 
+Real-mesh transfer (``BatchShardings``): with a mesh-aware sharding set, the
+transfer thread ``jax.device_put``s each batch with per-axis
+``NamedSharding``s instead of a single-device ``jnp.asarray`` — every
+partition's slice of the stacked trainer axis lands directly on its own
+``data``-axis device, and each table shard's gather-plan block on its own
+``model``-axis device, so the double buffer overlaps host→ICI transfer with
+the device step and no device ever holds another trainer's batch.  The
+values are bitwise identical to the single-device path (``device_put`` moves
+bits, it never rewrites them); on a 1-device mesh the two paths are
+indistinguishable, which ``tests/test_pipeline.py`` enforces against the
+serial reference.
+
 Timing contract (``PipelineStats``): the steady-state clock starts at the
 FIRST CONSUMED BATCH — the wait for it (queue warm-up / pipeline fill) is
 reported separately as ``warmup_s``.  ``host_build_s`` is the construction
@@ -60,6 +72,52 @@ from repro.core.minibatch import (
 from repro.sharding.embedding import (
     ShardedGatherPlan, ShardedTableLayout, plan_local_gather,
 )
+
+
+class BatchShardings:
+    """Per-axis device placements for the host→device batch transfer.
+
+    Built from a mesh with a ``data`` axis (trainer/partition parallel) and
+    a ``model`` axis (table shards): stacked batch fields — leading trainer
+    axis — are ``device_put`` with ``P(data_axis)`` so each partition's
+    slice lands on its own data-axis device, and the ``(P, S, V_b)`` gather
+    plans with ``P(data_axis, model_axis)`` so each table shard's index
+    block lands on its own model-axis device.  ``device_put`` of a host
+    numpy array only places bits, so the transferred values are bitwise
+    identical to the single-device ``jnp.asarray`` path — the sharded
+    transfer changes WHERE batches live, never what they hold.
+    """
+
+    def __init__(self, mesh, data_axis: str = "data",
+                 model_axis: str = "model"):
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        self.mesh = mesh
+        self.data_axis = data_axis
+        self.model_axis = model_axis
+        self.batch = NamedSharding(mesh, P(data_axis))
+        self.plan = NamedSharding(mesh, P(data_axis, model_axis))
+
+    @property
+    def data_size(self) -> int:
+        return int(self.mesh.shape[self.data_axis])
+
+    @property
+    def model_size(self) -> int:
+        return int(self.mesh.shape[self.model_axis])
+
+    def check(self, num_partitions: int,
+              table_layout: Optional["ShardedTableLayout"]) -> None:
+        """Fail fast on layouts the mesh cannot split evenly (device_put
+        would raise later, from inside a transfer thread)."""
+        if num_partitions % self.data_size:
+            raise ValueError(
+                f"{num_partitions} partitions cannot be sharded over a "
+                f"{self.data_size}-device {self.data_axis!r} axis")
+        if table_layout is not None and \
+                table_layout.num_shards % self.model_size:
+            raise ValueError(
+                f"{table_layout.num_shards} table shards cannot be sharded "
+                f"over a {self.model_size}-device {self.model_axis!r} axis")
 
 
 @dataclasses.dataclass
@@ -94,18 +152,32 @@ class PipelineStats:
 def to_device_batch(
     mb: EdgeMiniBatch,
     table_layout: Optional[ShardedTableLayout] = None,
+    shardings: Optional[BatchShardings] = None,
 ) -> Dict[str, "jax.Array"]:
     """Host→device transfer of one stacked mini-batch (field-name dict, the
     layout the SPMD step consumes).  With a ``table_layout`` the batch also
     carries its host-precomputed per-shard gather plan
-    (``shard_local_ids`` / ``shard_owned``, trainer axis leading)."""
+    (``shard_local_ids`` / ``shard_owned``, trainer axis leading).  With
+    ``shardings`` the transfer is a per-axis ``jax.device_put`` — each
+    partition slice to its own ``data``-axis device, each gather-plan shard
+    block to its own ``model``-axis device — instead of a single-device
+    ``jnp.asarray``; the values are bitwise identical either way."""
+    import jax
     import jax.numpy as jnp
-    out = {f.name: jnp.asarray(getattr(mb, f.name))
+    if shardings is None:
+        put_batch = put_plan = jnp.asarray
+    else:
+        def put_batch(x):
+            return jax.device_put(x, shardings.batch)
+
+        def put_plan(x):
+            return jax.device_put(x, shardings.plan)
+    out = {f.name: put_batch(getattr(mb, f.name))
            for f in dataclasses.fields(mb)}
     if table_layout is not None:
         plan = ShardedGatherPlan.for_stacked(table_layout, mb.gather_global)
-        out["shard_local_ids"] = jnp.asarray(plan.local_ids)
-        out["shard_owned"] = jnp.asarray(plan.owned)
+        out["shard_local_ids"] = put_plan(plan.local_ids)
+        out["shard_owned"] = put_plan(plan.owned)
     return out
 
 
@@ -122,9 +194,11 @@ class InputPipeline:
 
     def __init__(
         self, table_layout: Optional[ShardedTableLayout] = None,
+        shardings: Optional[BatchShardings] = None,
     ) -> None:
         self._stats = PipelineStats()
         self.table_layout = table_layout
+        self.shardings = shardings
 
     @property
     def last_stats(self) -> PipelineStats:
@@ -135,7 +209,7 @@ class InputPipeline:
 
     def device_batches(self, epoch: int) -> Iterator[Dict]:
         for mb in self.epoch_batches(epoch):
-            yield to_device_batch(mb, self.table_layout)
+            yield to_device_batch(mb, self.table_layout, self.shardings)
 
     def close(self) -> None:
         """Release background resources (workers are per-epoch, so the base
@@ -157,8 +231,11 @@ class _MinibatchPipelineBase(InputPipeline):
         sampler: str = "constraint",
         csrs: Optional[Sequence[_PartitionCSR]] = None,
         table_layout: Optional[ShardedTableLayout] = None,
+        shardings: Optional[BatchShardings] = None,
     ):
-        super().__init__(table_layout)
+        super().__init__(table_layout, shardings)
+        if shardings is not None:
+            shardings.check(len(partitions), table_layout)
         self.partitions = list(partitions)
         self.batch_size = batch_size
         self.num_negatives = num_negatives
@@ -353,9 +430,11 @@ class AsyncMinibatchPipeline(_MinibatchPipelineBase):
     def device_batches(self, epoch: int) -> Iterator[Dict]:
         """Double-buffered host→device path: a collator thread stacks the
         partition batches, attaches the sharded-table gather plan (when a
-        ``table_layout`` is set) and issues the device transfer one step
-        ahead, so the consumer's ``next()`` returns an already-resident
-        batch."""
+        ``table_layout`` is set) and issues the device transfer — a
+        per-axis sharded ``device_put`` when the pipeline carries
+        ``BatchShardings`` — one step ahead, so the consumer's ``next()``
+        returns an already-resident (and already-placed) batch while the
+        device executes the previous one."""
         stats = self._stats = PipelineStats()
         stop = threading.Event()
         queues, threads = self._start_workers(epoch, stop)
@@ -366,7 +445,8 @@ class AsyncMinibatchPipeline(_MinibatchPipelineBase):
                 for mb, build in self._collate(queues, stats, stop,
                                                timed=False):
                     if not _put(xfer_q,
-                                (to_device_batch(mb, self.table_layout),
+                                (to_device_batch(mb, self.table_layout,
+                                                 self.shardings),
                                  build),
                                 stop):
                         return
@@ -423,8 +503,11 @@ class FullGraphPipeline(InputPipeline):
     ``local_to_global`` (also epoch-invariant, so precomputed once)."""
 
     def __init__(self, padded: PaddedPartitionBatch,
-                 table_layout: Optional[ShardedTableLayout] = None):
-        super().__init__(table_layout)
+                 table_layout: Optional[ShardedTableLayout] = None,
+                 shardings: Optional[BatchShardings] = None):
+        super().__init__(table_layout, shardings)
+        if shardings is not None:
+            shardings.check(padded.num_partitions, table_layout)
         self._host = {f.name: getattr(padded, f.name)
                       for f in dataclasses.fields(padded)}
         if table_layout is not None:
@@ -439,9 +522,19 @@ class FullGraphPipeline(InputPipeline):
         yield self._host
 
     def device_batches(self, epoch: int) -> Iterator[Dict]:
+        import jax
         import jax.numpy as jnp
         if self._device is None:
-            self._device = {k: jnp.asarray(v) for k, v in self._host.items()}
+            if self.shardings is None:
+                self._device = {k: jnp.asarray(v)
+                                for k, v in self._host.items()}
+            else:
+                plan_keys = ("shard_local_ids", "shard_owned")
+                self._device = {
+                    k: jax.device_put(
+                        v, self.shardings.plan if k in plan_keys
+                        else self.shardings.batch)
+                    for k, v in self._host.items()}
         self._stats = PipelineStats(num_batches=1)
         yield self._device
 
@@ -494,16 +587,18 @@ def make_input_pipeline(
     csrs: Optional[Sequence[_PartitionCSR]] = None,
     prefetch: int = 2,
     table_layout: Optional[ShardedTableLayout] = None,
+    shardings: Optional[BatchShardings] = None,
 ) -> InputPipeline:
     """Build a mini-batch input pipeline (``serial`` reference or ``async``
     prefetching); ``table_layout`` makes every device batch carry its
-    sharded-table gather plan."""
+    sharded-table gather plan, ``shardings`` makes the transfer a per-axis
+    sharded ``device_put`` onto a real mesh."""
     if kind not in PIPELINES:
         raise ValueError(
             f"unknown pipeline {kind!r}; choose from {sorted(PIPELINES)}")
     kw = dict(batch_size=batch_size, num_negatives=num_negatives,
               num_hops=num_hops, budget=budget, seed=seed, sampler=sampler,
-              csrs=csrs, table_layout=table_layout)
+              csrs=csrs, table_layout=table_layout, shardings=shardings)
     if kind == "async":
         kw["prefetch"] = prefetch
     return PIPELINES[kind](partitions, **kw)

@@ -6,9 +6,12 @@ from repro.eval.ranking import (
     mean_rank, metrics_from_ranks, ranking_metrics,
 )
 from repro.eval.sharded import (
-    make_sharded_rank_step, sharded_rank_counts, sharded_ranking_metrics,
+    make_sharded_rank_step, shard_filter_bias_block,
+    sharded_candidate_rank_counts, sharded_rank_counts,
+    sharded_ranking_metrics,
 )
 __all__ = ["CSRFilterIndex", "FILTER_BIAS", "build_filter_index",
            "ranking_metrics", "evaluate_both_directions", "mean_rank",
            "metrics_from_ranks", "make_sharded_rank_step",
+           "shard_filter_bias_block", "sharded_candidate_rank_counts",
            "sharded_rank_counts", "sharded_ranking_metrics"]

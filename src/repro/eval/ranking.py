@@ -17,8 +17,12 @@ The filter is stored as a ``CSRFilterIndex``: known (s, r) pairs as a sorted
 int64 key array plus a CSR ``indptr`` into one flat ``tails`` array.  Both
 the build (one lexsort over all split triplets) and the per-batch bias
 construction (searchsorted + one fancy-index scatter) are vectorized numpy —
-no per-triplet Python loop.  ``build_filter_index`` keeps the dict-of-sets
-reference implementation the CSR index is tested against.
+no per-triplet Python loop.  ``bias`` also has a COLUMN-RANGE form
+(``col_start``/``num_cols``) that builds one block of the bias straight
+from CSR, which is how the sharded ranking path gets per-shard bias blocks
+without ever materializing the dense ``(B, N)`` matrix.
+``build_filter_index`` keeps the dict-of-sets reference implementation the
+CSR index is property-tested against (it is NOT a production path).
 
 Rank convention
 ---------------
@@ -31,7 +35,7 @@ score rank 1 — optimistically biased for embeddings with exact ties
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Iterable, Optional, Sequence, Union
+from typing import Any, Dict, Iterable, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -124,6 +128,52 @@ class CSRFilterIndex:
                 f"build the index over the same (inverse-augmented) "
                 f"relation vocabulary it is queried with")
 
+    def _stride(self) -> int:
+        """Exclusive upper bound on stored tail ids (cached O(nnz) scan):
+        a column range reaching it covers every tail, so full-range
+        ``bias`` calls can skip the range index entirely."""
+        cached = getattr(self, "_stride_cache", None)
+        if cached is None:
+            cached = int(self.tails.max()) + 1 if self.tails.size else 1
+            object.__setattr__(self, "_stride_cache", cached)
+        return cached
+
+    def _range_index(self) -> np.ndarray:
+        """``aug[i] = segment(i) * stride + tails[i]`` for column-range
+        lookups: globally non-decreasing (the build lexsorts by
+        (key, tail), and every tail < stride), so the in-range tail span
+        of each query's key segment is two vectorized ``searchsorted``s —
+        per-batch work and memory then scale with the tails INSIDE the
+        range, not the whole batch's tails.  Built lazily on the first
+        SUB-range query and cached (one int64 per stored tail; full-range
+        queries never build it)."""
+        cached = getattr(self, "_range_cache", None)
+        if cached is not None:
+            return cached
+        seg = np.repeat(np.arange(self.num_pairs, dtype=np.int64),
+                        np.diff(self.indptr))
+        aug = seg * self._stride() + self.tails
+        object.__setattr__(self, "_range_cache", aug)
+        return aug
+
+    def resolve_queries(
+            self, triplets: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """Per-row key positions for a test batch: ``(pos, found)`` with
+        ``keys[pos[i]]`` the row's (s, r) key where ``found[i]`` (clamped
+        otherwise).  Shard-independent — the sharded eval path resolves a
+        batch ONCE and reuses it across every column-range ``bias`` block
+        instead of re-searching the key array per shard."""
+        trip = np.asarray(triplets)
+        b = trip.shape[0]
+        if b == 0 or self.num_pairs == 0:
+            return (np.zeros(b, np.int64), np.zeros(b, bool))
+        self._check_rel(trip[:, 1])
+        q = trip[:, 0].astype(np.int64) * self.num_relations + trip[:, 1]
+        pos = np.searchsorted(self.keys, q)
+        pos_c = np.minimum(pos, self.num_pairs - 1)
+        found = (pos < self.num_pairs) & (self.keys[pos_c] == q)
+        return pos_c, found
+
     def tails_of(self, s: int, r: int) -> np.ndarray:
         """Known tails of one (s, r) pair (empty if absent) — test surface."""
         self._check_rel(r)
@@ -133,32 +183,71 @@ class CSRFilterIndex:
             return np.zeros(0, np.int32)
         return self.tails[self.indptr[k]: self.indptr[k + 1]]
 
-    def bias(self, triplets: np.ndarray, num_cols: int) -> np.ndarray:
+    def bias(self, triplets: np.ndarray, num_cols: int,
+             col_start: int = 0,
+             resolved: Optional[Tuple[np.ndarray, np.ndarray]] = None
+             ) -> np.ndarray:
         """(B, num_cols) float32 filter bias for a test batch: ``FILTER_BIAS``
         on every known tail of each row's (s, r), 0 elsewhere — and always 0
         on the row's own true tail (never self-filtered).  One searchsorted
-        + one scatter; equals the dict-of-sets double loop bit-for-bit."""
+        + one scatter; equals the reference dict-of-sets double loop
+        bit-for-bit.
+
+        The COLUMN-RANGE form (``col_start > 0`` or ``num_cols`` smaller
+        than the vocabulary) covers global candidate columns
+        ``[col_start, col_start + num_cols)`` and, for ranges WITHIN the
+        vocabulary (``col_start + num_cols <= N``), equals
+        ``bias(triplets, N)[:, col_start:col_start + num_cols]`` without
+        ever materializing the dense ``(B, N)`` matrix — this is what the
+        candidate-axis-sharded ranking path builds per model shard, so peak
+        host bias memory is ∝ 1/num_shards (a multi-host mesh builds only
+        its own shards' blocks).  Columns at or beyond the vocabulary stay
+        0.0 — the index stores tails, not the entity count, so it cannot
+        mark nonexistent-entity columns; a caller whose score matrix has
+        padded rows there must mask them itself (the sharded path's
+        ``shard_filter_bias_block`` fills layout padding with ``-inf``).
+        Host cost stays one searchsorted plus one scatter, and only tails
+        inside the range are scattered; full-range calls (the dense
+        ranking path) read spans directly off ``indptr`` and never build
+        the range index.  ``resolved`` short-circuits the key lookup with
+        a cached ``resolve_queries`` result — callers building many column
+        blocks of one batch (the sharded eval path) resolve once.
+        """
         trip = np.asarray(triplets)
         b = trip.shape[0]
         out = np.zeros((b, num_cols), np.float32)
-        if b == 0 or self.num_pairs == 0:
+        if b == 0 or num_cols == 0 or self.num_pairs == 0:
             return out
-        self._check_rel(trip[:, 1])
-        q = trip[:, 0].astype(np.int64) * self.num_relations + trip[:, 1]
-        pos = np.searchsorted(self.keys, q)
-        pos_c = np.minimum(pos, self.num_pairs - 1)
-        found = (pos < self.num_pairs) & (self.keys[pos_c] == q)
-        starts = np.where(found, self.indptr[pos_c], 0)
-        counts = np.where(found, self.indptr[pos_c + 1] - starts, 0)
+        pos_c, found = (self.resolve_queries(trip) if resolved is None
+                        else resolved)
+        if col_start <= 0 and col_start + num_cols >= self._stride():
+            # full range: every stored tail is inside — spans come
+            # straight off indptr, no range index needed
+            starts = np.where(found, self.indptr[pos_c], 0)
+            counts = np.where(found, self.indptr[pos_c + 1] - starts, 0)
+        else:
+            # each query's IN-RANGE tail span, via the augmented range
+            # index — the scatter temporaries below scale with the tails
+            # inside [col_start, col_start + num_cols), so a 1/S column
+            # block costs ~1/S of the dense bias in host memory, not just
+            # output size
+            stride, aug = self._stride(), self._range_index()
+            lo_q = min(max(col_start, 0), stride)
+            hi_q = min(max(col_start + num_cols, 0), stride)
+            starts = np.searchsorted(aug, pos_c * stride + lo_q)
+            ends = np.searchsorted(aug, pos_c * stride + hi_q)
+            counts = np.where(found, ends - starts, 0)
+            starts = np.where(found, starts, 0)
         total = int(counts.sum())
         if total:
             rows = np.repeat(np.arange(b), counts)
             # flat tails positions: starts[i] + (0 .. counts[i]-1) per row
             csum = np.concatenate([[0], np.cumsum(counts)[:-1]])
-            offs = np.arange(total) - np.repeat(csum, counts)
-            cols = self.tails[np.repeat(starts, counts) + offs]
-            out[rows, cols] = FILTER_BIAS
-        out[np.arange(b), trip[:, 2]] = 0.0
+            flat = np.repeat(starts - csum, counts) + np.arange(total)
+            out[rows, self.tails[flat] - col_start] = FILTER_BIAS
+        t = trip[:, 2]
+        in_range = (t >= col_start) & (t < col_start + num_cols)
+        out[np.nonzero(in_range)[0], t[in_range] - col_start] = 0.0
         return out
 
 
@@ -166,17 +255,20 @@ FilterIndex = Union[Dict, CSRFilterIndex]
 
 
 def _filter_bias(filter_index: FilterIndex, batch: np.ndarray,
-                 num_cols: int) -> np.ndarray:
-    """(B, num_cols) bias for one test batch from either index form (the
-    dict path is the loop reference the CSR path is tested against)."""
+                 num_cols: int, col_start: int = 0,
+                 resolved=None) -> np.ndarray:
+    """(B, num_cols) bias covering global candidate columns
+    ``[col_start, col_start + num_cols)`` from either index form (the dict
+    path is the loop reference the CSR column-range path is tested
+    against); ``resolved`` is a cached CSR ``resolve_queries`` result."""
     if isinstance(filter_index, CSRFilterIndex):
-        return filter_index.bias(batch, num_cols)
+        return filter_index.bias(batch, num_cols, col_start, resolved)
     bias = np.zeros((batch.shape[0], num_cols), np.float32)
     for i, (s, r, t) in enumerate(batch):
         known = filter_index.get((int(s), int(r)), ())
         for k in known:
-            if k != int(t):
-                bias[i, k] = FILTER_BIAS
+            if k != int(t) and col_start <= k < col_start + num_cols:
+                bias[i, k - col_start] = FILTER_BIAS
     return bias
 
 
@@ -215,23 +307,28 @@ def ranking_metrics(
     kernel in its canonical query form; ``decoder_params`` is the decoder's
     own parameter tree (``params["decoder"]`` from the trained model).
 
-    ``num_shards > 1`` (all-entities protocol) routes to the candidate-axis-
-    sharded path (``repro.eval.sharded``) for every decoder: the entity
-    table is row-sharded, each shard scores only its own rows and
-    contributes partial greater/equal counts — exactly the same metrics as
-    this dense reference (enforced by ``tests/test_decoders.py``).
+    ``num_shards > 1`` routes to the candidate-axis-sharded path
+    (``repro.eval.sharded``) for every decoder and BOTH candidate
+    protocols: in the all-entities protocol each shard scores only its own
+    table rows (per-shard filter-bias column blocks built straight from the
+    CSR index — the dense (B, N) bias is never materialized); in the ogbl
+    candidate-list protocol the per-row candidate ids are scattered by
+    owning row block and each shard scores only the candidates it stores.
+    Both emit partial greater/equal counts whose exchange reconstructs
+    exactly the same metrics as this dense reference (enforced by
+    ``tests/test_decoders.py`` / ``tests/test_eval_ranking.py``).
 
     Run twice (once on the graph, once on the inverse-relation graph) and
     average to get the standard both-directions protocol —
     ``evaluate_both_directions`` does that.
     """
     dec = get_decoder(decoder)
-    if num_shards > 1 and candidates is None:
+    if num_shards > 1:
         from repro.eval.sharded import sharded_ranking_metrics
         return sharded_ranking_metrics(
             entity_emb, decoder_params, test_triplets, filter_index,
             num_shards, hits_ks=hits_ks, batch_size=batch_size,
-            decoder=dec)
+            decoder=dec, candidates=candidates)
 
     n = entity_emb.shape[0]
     emb = jnp.asarray(entity_emb)

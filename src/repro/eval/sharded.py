@@ -27,13 +27,33 @@ order-free.  ``tests/test_decoders.py`` enforces identical MRR/Hits@k
 (``==``, not allclose) at 1/2/4 shards for every registered decoder,
 including ties and padded rows.
 
+Host data path: the per-shard filter-bias blocks are built DIRECTLY from
+the CSR index's column-range form (``CSRFilterIndex.bias(triplets, rows,
+col_start)`` via :func:`shard_filter_bias_block`) — the dense ``(B, N)``
+bias matrix is never materialized, so peak host bias memory is
+∝ 1/num_shards and a multi-host mesh builds only its own shards' column
+blocks (``tests/test_eval_ranking.py`` asserts the peak-allocation bound).
+
+The ogbl candidate-list protocol rides the same sharded path: per-row
+candidate ids are scattered by owning row block (``plan_local_gather`` on
+the ``(B, C)`` id matrix), each shard reads only its own table rows and
+COUNTS only the candidates it stores (all lanes are scored, non-owned
+ones masked — table memory shrinks ∝ 1/S, scoring FLOPs do not; see
+:func:`sharded_candidate_rank_counts`), and masked greater/equal partial
+counts are summed — again EXACTLY the dense candidate-path metrics.
+
 Two execution paths, mirroring ``sharded_gather``:
 
 * ``axis_name=None`` — masked single-device simulation: the full
   ``(S, rows, d)`` stack is looped shard-by-shard and partials summed.
 * ``axis_name="model"`` — inside ``shard_map``: each device holds its
-  ``(1, rows, d)`` row block and ``(1, B, rows)`` bias block; partials are
-  ``jax.lax.psum``'d over the model axis (``make_sharded_rank_step``).
+  ``(1, rows, d)`` row block and ``(1, B, rows)`` bias block (or
+  ``(1, B, C)`` candidate-plan block); partials are ``jax.lax.psum``'d over
+  the model axis (``make_sharded_rank_step``).  A step built by
+  ``make_sharded_rank_step`` carries its mesh, so table, bias blocks and
+  candidate plans are ``jax.device_put`` per model-axis device
+  (``jax.make_array_from_callback`` — each host realizes only its own
+  devices' blocks).
 
 Head/query embeddings are fetched through the PR-2 ``sharded_gather``
 exchange — ranking never materializes the dense entity matrix.
@@ -46,12 +66,106 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.eval.ranking import (
+    CSRFilterIndex, _filter_bias, mean_rank, metrics_from_ranks,
+)
+from repro.kernels.kge_score import apply_epilogue
 from repro.kernels.ops import kge_score_padded
 from repro.models.decoders import Decoder, get_decoder
 from repro.sharding.embedding import (
-    ShardedTableLayout, plan_local_gather, shard_bias_blocks, shard_table,
-    sharded_gather,
+    ShardedTableLayout, plan_local_gather, plan_local_gather_block,
+    shard_table, shard_table_block, sharded_gather,
 )
+
+
+def shard_filter_bias_block(filter_index, batch: np.ndarray,
+                            layout: ShardedTableLayout,
+                            shard: int, resolved=None) -> np.ndarray:
+    """One shard's ``(B, rows_per_shard)`` filter-bias column block, built
+    straight from the index's column-range form.
+
+    Covers global candidate columns ``[shard·rows, (shard+1)·rows)``;
+    layout-padded tail columns (``>= num_rows`` — no real entity) get
+    ``-inf`` so a padded row's score can neither outrank nor tie any real
+    candidate.  Equals ``shard_bias_blocks(dense_bias, layout)[shard]``
+    bit-for-bit WITHOUT the dense ``(B, N)`` bias ever existing: peak host
+    bias memory per call is one column block, ∝ 1/num_shards.
+    ``resolved`` is a cached ``CSRFilterIndex.resolve_queries(batch)``
+    result so many blocks of one batch share a single key lookup.
+    """
+    rows = layout.rows_per_shard
+    lo = shard * rows
+    width = max(0, min(layout.num_rows, lo + rows) - lo)
+    if width == rows:                  # interior shard: no layout padding
+        return _filter_bias(filter_index, batch, rows, col_start=lo,
+                            resolved=resolved)
+    block = np.full((np.asarray(batch).shape[0], rows), -np.inf, np.float32)
+    if width:
+        block[:, :width] = _filter_bias(filter_index, batch, width,
+                                        col_start=lo, resolved=resolved)
+    return block
+
+
+def _model_axis_put(shape, fn, mesh, model_axis: str):
+    """Assemble a shard-leading ``(S, ...)`` global array sharded over the
+    mesh's model axis from a per-shard block factory ``fn(s) -> block``,
+    via ``jax.make_array_from_callback``: the callback runs once per
+    addressable device slice, so each HOST realizes only its own devices'
+    blocks — never the full stack (a plain ``device_put`` of the full
+    array would both materialize it everywhere and fail multi-host on
+    non-addressable devices)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    sharding = NamedSharding(mesh, P(model_axis))
+    cache = {}   # make_array_from_callback invokes the callback once per
+    #              addressable DEVICE (no index dedup for partially
+    #              replicated shardings), so every data-axis replica of a
+    #              model block would rebuild fn(s) without this memo
+
+    def block(s):
+        if s not in cache:
+            cache[s] = fn(s)
+        return cache[s]
+
+    def callback(index):
+        lo, hi, _ = index[0].indices(shape[0])
+        return np.stack([block(s) for s in range(lo, hi)])
+
+    return jax.make_array_from_callback(shape, sharding, callback)
+
+
+def _stack_bias_blocks(filter_index, batch: np.ndarray,
+                       layout: ShardedTableLayout, mesh=None,
+                       model_axis: str = "model") -> jax.Array:
+    """The batch's ``(S, B, rows)`` per-shard bias stack with no dense
+    ``(B, N)`` intermediate.  Without a mesh each block is transferred as
+    soon as it is built (host holds one block at a time); with a mesh the
+    stack is assembled per model-axis device via
+    ``jax.make_array_from_callback``."""
+    b = np.asarray(batch).shape[0]
+    # the key lookup is shard-independent: resolve the batch ONCE and let
+    # every column block reuse it (the dict reference index has no
+    # precomputable form — it is not a production path)
+    resolved = (filter_index.resolve_queries(batch)
+                if isinstance(filter_index, CSRFilterIndex) else None)
+    if mesh is not None:
+        return _model_axis_put(
+            (layout.num_shards, b, layout.rows_per_shard),
+            lambda s: shard_filter_bias_block(filter_index, batch, layout,
+                                              s, resolved),
+            mesh, model_axis)
+    # jnp.copy (not asarray): the CPU backend zero-copy-aliases numpy
+    # buffers, which would keep every block's host memory alive inside the
+    # device stack — a synchronized copy releases each block before the
+    # next is built (async dispatch would otherwise queue all S copies
+    # with their host sources pinned)
+    def put(block):
+        return jnp.copy(block).block_until_ready()
+
+    return jnp.stack([
+        put(shard_filter_bias_block(filter_index, batch, layout, s,
+                                    resolved))
+        for s in range(layout.num_shards)])
 
 
 def _shard_scores(decoder: Decoder, dec_params, table_block, q, q_bias,
@@ -86,8 +200,8 @@ def sharded_rank_counts(
     with a separate dot — so it is bit-identical to the dense kernel's
     ``scores[b, t]`` and the ``>``/``==`` comparisons agree with the dense
     path even at exact ties.  ``bias`` must be ``-inf`` on layout-padded
-    rows (``shard_bias_blocks``), which zeroes their count contribution for
-    both epilogue families.
+    rows (``shard_filter_bias_block``), which zeroes their count
+    contribution for both epilogue families.
     """
     decoder = get_decoder(decoder)
     b = q.shape[0]
@@ -132,41 +246,132 @@ def sharded_rank_counts(
     return greater, equal, true_score
 
 
+def sharded_candidate_rank_counts(
+    decoder: Union[str, Decoder],
+    dec_params: Dict[str, Any],  # decoder params (replicated)
+    table: jax.Array,        # (S, rows, d) sim / (1, rows, d) per device
+    q: jax.Array,            # (B, d) prepared query rows (replicated)
+    q_bias: jax.Array,       # (B,) pre-epilogue query bias (replicated)
+    cand_local: jax.Array,   # (S, B, C) / (1, B, C): local candidate rows
+    cand_owned: jax.Array,   # (S, B, C) / (1, B, C): ownership masks
+    true_score: jax.Array,   # (B,) true-tail scores (replicated)
+    *,
+    axis_name: Optional[str] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """ogbl candidate-list protocol over the row-sharded table: per-query
+    global ``(greater, equal)`` counts vs the provided candidate sets.
+
+    Candidate ids arrive pre-scattered by owning row block
+    (``plan_local_gather`` on the ``(B, C)`` id matrix): each shard reads
+    ONLY its own table rows — non-owned lanes gather a clipped junk row,
+    every ``(B, C)`` lane is scored with the same einsum + rank-1 biases +
+    elementwise epilogue the dense candidate path computes, and non-owned
+    lanes are masked out of the counts — so each owned per-element score
+    is bitwise the dense score and the integer-count exchange reconstructs
+    exactly the dense rank.  The tradeoff is explicit: sharding here buys
+    TABLE-MEMORY distribution (rows/S per device, no replicated table),
+    not scoring FLOPs — each shard still runs the full ``(B, C, d)``
+    einsum (total work S× dense; C is the small ogbl candidate count, so
+    scoring is cheap next to the table bytes).  Compacting each shard to
+    its ~C/S owned candidates would make per-shard shapes data-dependent —
+    incompatible with the fixed-shape ``shard_map`` step.  ``equal``
+    EXCLUDES the true tail (ogbl candidate lists do not contain it);
+    callers add the self-tie back via ``mean_rank(greater, equal + 1)``,
+    matching the dense path.
+    """
+    decoder = get_decoder(decoder)
+
+    def one(table_block, local, owned):
+        gathered = table_block[local]                     # (B, C, d)
+        cand, c_bias = decoder.prepare_candidates(dec_params, gathered)
+        scores = apply_epilogue(
+            jnp.einsum("bd,bcd->bc", q, cand) + q_bias[:, None] + c_bias,
+            decoder.epilogue)
+        greater = jnp.sum(
+            (owned & (scores > true_score[:, None])).astype(jnp.int32),
+            axis=1)
+        equal = jnp.sum(
+            (owned & (scores == true_score[:, None])).astype(jnp.int32),
+            axis=1)
+        return greater, equal
+
+    if axis_name is None:
+        parts = [one(table[s], cand_local[s], cand_owned[s])
+                 for s in range(table.shape[0])]
+        return sum(p[0] for p in parts), sum(p[1] for p in parts)
+
+    if table.shape[0] != 1:
+        raise ValueError(
+            f"sharded_candidate_rank_counts under shard_map expects this "
+            f"device's (1, rows, d) row block, got {table.shape} — shard "
+            f"the table and candidate plans over {axis_name!r}")
+    greater, equal = one(table[0], cand_local[0], cand_owned[0])
+    return (jax.lax.psum(greater, axis_name),
+            jax.lax.psum(equal, axis_name))
+
+
 def make_sharded_rank_step(mesh, *, decoder: Union[str, Decoder] = "distmult",
                            model_axis: str = "model",
+                           protocol: str = "all-entities",
                            interpret: Optional[bool] = None):
     """Build the jitted ``shard_map`` rank-count step for a real mesh.
 
-    The entity-table row blocks and per-shard bias blocks are sharded over
+    The entity-table row blocks — and, per ``protocol``, either the
+    per-shard bias blocks (``"all-entities"``) or the scattered candidate
+    plans (``"candidates"``, the ogbl list protocol) — are sharded over
     ``model_axis`` (one block per device — the layouts ``kge_param_specs``
-    prescribes); queries, query bias, gather plans and the decoder's own
-    params are replicated.  ``decoder`` is jit-static (a registry name or
-    frozen Decoder singleton).  Returns ``step(dec_params, table, q, q_bias,
-    bias, true_local, true_owned) -> (greater, equal, true_score)`` with
-    globally psum'd outputs, exactly equal to the ``axis_name=None``
-    simulation.
+    prescribes); queries, query bias and the decoder's own params are
+    replicated.  ``decoder`` is jit-static (a registry name or frozen
+    Decoder singleton).  Returns ``step(dec_params, table, q, q_bias, bias,
+    true_local, true_owned) -> (greater, equal, true_score)`` for the
+    all-entities protocol, or ``step(dec_params, table, q, q_bias,
+    cand_local, cand_owned, true_score) -> (greater, equal)`` for the
+    candidate protocol, with globally psum'd outputs exactly equal to the
+    ``axis_name=None`` simulation.
     """
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 
     dec = get_decoder(decoder)
 
-    def body(dec_params, table, q, q_bias, bias, true_local, true_owned):
-        return sharded_rank_counts(
-            dec, dec_params, table, q, q_bias, bias, true_local, true_owned,
-            axis_name=model_axis, interpret=interpret)
+    if protocol == "all-entities":
+        def body(dec_params, table, q, q_bias, bias, true_local, true_owned):
+            return sharded_rank_counts(
+                dec, dec_params, table, q, q_bias, bias, true_local,
+                true_owned, axis_name=model_axis, interpret=interpret)
+
+        in_specs = (P(), P(model_axis), P(), P(), P(model_axis), P(), P())
+        out_specs = (P(), P(), P())
+    elif protocol == "candidates":
+        def body(dec_params, table, q, q_bias, cand_local, cand_owned,
+                 true_score):
+            return sharded_candidate_rank_counts(
+                dec, dec_params, table, q, q_bias, cand_local, cand_owned,
+                true_score, axis_name=model_axis)
+
+        in_specs = (P(), P(model_axis), P(), P(), P(model_axis),
+                    P(model_axis), P())
+        out_specs = (P(), P())
+    else:
+        raise ValueError(
+            f"unknown protocol {protocol!r}; choose 'all-entities' "
+            f"(score every table row) or 'candidates' (ogbl per-row "
+            f"candidate lists)")
 
     sharded = shard_map(
         body, mesh=mesh,
-        in_specs=(P(), P(model_axis), P(), P(), P(model_axis), P(), P()),
-        out_specs=(P(), P(), P()),
+        in_specs=in_specs, out_specs=out_specs,
         check_rep=False,
     )
     step = jax.jit(sharded)
     # tag so sharded_ranking_metrics can fail fast on a step built with a
-    # DIFFERENT decoder than the queries were prepared with (the scores
-    # would be silently wrong, not shape-mismatched)
+    # DIFFERENT decoder or protocol than the queries were prepared with
+    # (the scores would be silently wrong, not shape-mismatched), and so it
+    # can device_put the per-shard blocks onto the step's own mesh axis
     step.decoder = dec
+    step.protocol = protocol
+    step.mesh = mesh
+    step.model_axis = model_axis
     return step
 
 
@@ -181,23 +386,30 @@ def sharded_ranking_metrics(
     decoder: Union[str, Decoder] = "distmult",
     rank_step=None,
     interpret: Optional[bool] = None,
+    candidates: Optional[np.ndarray] = None,   # (T, C) per-test candidates
 ) -> Dict[str, float]:
     """Filtered MRR / Hits@k with candidate-axis-sharded ranking — the
     ``num_shards > 1`` twin of the dense ``ranking_metrics`` (any registered
-    decoder, all-entities protocol), returning exactly the same metrics.
+    decoder, both candidate protocols), returning exactly the same metrics.
 
-    The entity table is row-sharded once (``shard_table``); per test batch
-    the host builds the (B, N) filter bias (CSR scatter), splits it into
-    per-shard blocks, plans the head gather and true-tail ownership with the
-    PR-2 ``plan_local_gather``, and the device computes per-shard partial
-    counts from the decoder's query form.  ``rank_step`` switches the
-    compute path: ``None`` runs the single-device shard-loop simulation; a
-    ``make_sharded_rank_step`` product (built with the SAME decoder) runs
-    the real ``shard_map`` + psum exchange.
+    The entity table is row-sharded once (``shard_table``).  All-entities
+    protocol (``candidates=None``): per test batch the host builds each
+    shard's ``(B, rows)`` filter-bias column block straight from the CSR
+    index's column-range form (the dense ``(B, N)`` bias is never
+    materialized — peak host bias memory ∝ 1/num_shards), plans the head
+    gather and true-tail ownership with the PR-2 ``plan_local_gather``, and
+    the device computes per-shard partial counts from the decoder's query
+    form.  ogbl candidate protocol (``candidates`` given): the per-row
+    candidate ids are scattered by owning row block and each shard scores
+    only the candidates it stores (``sharded_candidate_rank_counts``).
+
+    ``rank_step`` switches the compute path: ``None`` runs the
+    single-device shard-loop simulation; a ``make_sharded_rank_step``
+    product (built with the SAME decoder, and ``protocol="candidates"``
+    when ``candidates`` is given) runs the real ``shard_map`` + psum
+    exchange, with table/bias/plan blocks ``device_put`` per model-axis
+    device of the step's mesh.
     """
-    from repro.eval.ranking import _filter_bias, mean_rank, \
-        metrics_from_ranks
-
     dec = get_decoder(decoder)
     step_dec = getattr(rank_step, "decoder", None)
     if step_dec is not None and step_dec != dec:
@@ -206,10 +418,26 @@ def sharded_ranking_metrics(
             f"runs {dec.name!r} — rebuild with make_sharded_rank_step"
             f"(mesh, decoder={dec.name!r}) (a mismatched step would score "
             f"silently wrong, not shape-mismatch)")
+    protocol = "all-entities" if candidates is None else "candidates"
+    step_proto = getattr(rank_step, "protocol", None)
+    if step_proto is not None and step_proto != protocol:
+        raise ValueError(
+            f"rank_step was built for the {step_proto!r} protocol but this "
+            f"call runs {protocol!r} — rebuild with make_sharded_rank_step"
+            f"(mesh, protocol={protocol!r})")
+    mesh = getattr(rank_step, "mesh", None)
+    model_axis = getattr(rank_step, "model_axis", "model")
+
     n, d = entity_emb.shape
     layout = ShardedTableLayout(n, num_shards)
-    table = jnp.asarray(shard_table(
-        np.ascontiguousarray(np.asarray(entity_emb, np.float32)), layout))
+    emb_f32 = np.ascontiguousarray(np.asarray(entity_emb, np.float32))
+    if mesh is None:
+        table = jnp.asarray(shard_table(emb_f32, layout))
+    else:
+        table = _model_axis_put(
+            (layout.num_shards, layout.rows_per_shard, d),
+            lambda s: shard_table_block(emb_f32, layout, s),
+            mesh, model_axis)
     dparams = jax.tree_util.tree_map(jnp.asarray, decoder_params)
     ranks = []
 
@@ -221,19 +449,55 @@ def sharded_ranking_metrics(
         h_s = sharded_gather(table, jnp.asarray(h_li), jnp.asarray(h_ow))
         rel = jnp.asarray(batch[:, 1].astype(np.int32))
         q, q_bias = dec.prepare_query(dparams, h_s, rel)
-
-        bias = _filter_bias(filter_index, batch, n)
-        bias_blocks = jnp.asarray(shard_bias_blocks(bias, layout))
         t_li, t_ow = plan_local_gather(layout, batch[:, 2])
-        t_li, t_ow = jnp.asarray(t_li), jnp.asarray(t_ow)
 
-        if rank_step is None:
-            greater, equal, _ = sharded_rank_counts(
-                dec, dparams, table, q, q_bias, bias_blocks, t_li, t_ow,
-                interpret=interpret)
+        if candidates is None:
+            bias_blocks = _stack_bias_blocks(filter_index, batch, layout,
+                                             mesh, model_axis)
+            t_li, t_ow = jnp.asarray(t_li), jnp.asarray(t_ow)
+            if rank_step is None:
+                greater, equal, _ = sharded_rank_counts(
+                    dec, dparams, table, q, q_bias, bias_blocks, t_li, t_ow,
+                    interpret=interpret)
+            else:
+                greater, equal, _ = rank_step(
+                    dparams, table, q, q_bias, bias_blocks, t_li, t_ow)
+            ranks.append(mean_rank(np.asarray(greater), np.asarray(equal)))
         else:
-            greater, equal, _ = rank_step(
-                dparams, table, q, q_bias, bias_blocks, t_li, t_ow)
-        ranks.append(mean_rank(np.asarray(greater), np.asarray(equal)))
+            # ogbl list protocol: true-tail rows through the same sharded
+            # gather (bitwise the dense emb[t] rows), candidate ids
+            # scattered by owning row block
+            t_emb = sharded_gather(table, jnp.asarray(t_li),
+                                   jnp.asarray(t_ow))
+            c_true, cb_true = dec.prepare_candidates(dparams, t_emb)
+            true_score = apply_epilogue(
+                jnp.sum(q * c_true, axis=1) + q_bias + cb_true,
+                dec.epilogue)
+            cand = np.asarray(candidates[lo: lo + batch_size])
+            if mesh is None:
+                c_li, c_ow = plan_local_gather(layout, cand)   # (S, B, C)
+                c_li, c_ow = jnp.asarray(c_li), jnp.asarray(c_ow)
+            else:
+                shape = (num_shards,) + cand.shape
+                plans = {}      # memo: both callbacks share one plan build
+
+                def plan(s):
+                    if s not in plans:
+                        plans[s] = plan_local_gather_block(layout, cand, s)
+                    return plans[s]
+
+                c_li = _model_axis_put(shape, lambda s: plan(s)[0],
+                                       mesh, model_axis)
+                c_ow = _model_axis_put(shape, lambda s: plan(s)[1],
+                                       mesh, model_axis)
+            if rank_step is None:
+                greater, equal = sharded_candidate_rank_counts(
+                    dec, dparams, table, q, q_bias, c_li, c_ow, true_score)
+            else:
+                greater, equal = rank_step(
+                    dparams, table, q, q_bias, c_li, c_ow, true_score)
+            # candidates exclude the true tail, so no self-tie to discount
+            ranks.append(mean_rank(np.asarray(greater),
+                                   np.asarray(equal) + 1))
 
     return metrics_from_ranks(np.concatenate(ranks), hits_ks)

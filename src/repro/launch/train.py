@@ -43,15 +43,17 @@ def train_kge(args) -> None:
         strategy=args.strategy, use_kernel=args.use_kernel,
         pipeline=args.pipeline, prefetch=args.prefetch,
         num_table_shards=args.table_shards,
+        sharded_transfer=args.sharded_transfer,
         decoder=args.decoder, num_negatives=args.num_negatives,
         **({"hidden_dim": args.hidden_dim} if args.hidden_dim > 0 else {}))
     pipe = ("full-graph (resident batch)" if cfg.batch_size is None
             else f"{cfg.pipeline} pipeline")   # --pipeline/--prefetch only
     #                                            drive the mini-batch path
+    xfer = ", sharded transfer" if cfg.sharded_transfer else ""
     print(f"[train] {name}: {splits['train'].num_edges} train edges, "
           f"{splits['train'].num_entities} entities; "
           f"{cfg.decoder} decoder, {cfg.num_negatives} negatives/edge; "
-          f"{cfg.num_trainers} trainers ({cfg.strategy}, {pipe}, "
+          f"{cfg.num_trainers} trainers ({cfg.strategy}, {pipe}{xfer}, "
           f"{cfg.num_table_shards}-shard entity table)")
     trainer = KGETrainer(splits, cfg)
     print(f"[train] RF={trainer.replication_factor:.2f}")
@@ -131,6 +133,12 @@ def main() -> None:
     ap.add_argument("--table-shards", type=int, default=1,
                     help="row-shard the entity embedding table over this "
                          "many model-axis shards (1 = replicated)")
+    ap.add_argument("--sharded-transfer", action="store_true",
+                    help="transfer batches with per-axis NamedShardings "
+                         "over a data x model host mesh (each partition "
+                         "slice to its own data-axis device, gather-plan "
+                         "blocks to model-axis devices); bitwise identical "
+                         "to the single-device transfer")
     from repro.models.decoders import registered_decoders
     ap.add_argument("--decoder", default="distmult",
                     choices=registered_decoders(),

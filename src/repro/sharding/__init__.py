@@ -2,8 +2,9 @@
 and the model-axis row-sharded embedding table (``repro.sharding.embedding``)."""
 from repro.sharding.embedding import (
     ShardedGatherPlan, ShardedTableLayout, convert_table_layout,
-    plan_local_gather, plan_local_gather_device, shard_bias_blocks,
-    shard_table, sharded_gather, unshard_table,
+    plan_local_gather, plan_local_gather_block, plan_local_gather_device,
+    shard_bias_blocks, shard_table, shard_table_block, sharded_gather,
+    unshard_table,
 )
 from repro.sharding.rules import (
     param_shardings, opt_state_shardings, batch_shardings, cache_shardings,

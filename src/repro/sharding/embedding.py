@@ -78,6 +78,27 @@ def shard_table(table, layout: ShardedTableLayout):
     return table.reshape(layout.num_shards, layout.rows_per_shard, d)
 
 
+def shard_table_block(table, layout: ShardedTableLayout, shard: int):
+    """One shard's ``(rows_per_shard, d)`` row block of the dense
+    ``(num_rows, d)`` table — the per-shard twin of ``shard_table``
+    (zero-padded on the ragged last shard; same numpy-or-jax dispatch), so
+    a multi-host loader can realize ONLY its own devices' blocks instead
+    of the full stack.
+    ``shard_table(t, layout)[s] == shard_table_block(t, layout, s)``."""
+    import jax.numpy as jnp
+    xp = jnp if not isinstance(table, np.ndarray) else np
+    v, d = table.shape
+    if v != layout.num_rows:
+        raise ValueError(f"table has {v} rows, layout expects "
+                         f"{layout.num_rows}")
+    rows = layout.rows_per_shard
+    block = table[shard * rows: (shard + 1) * rows]
+    if block.shape[0] < rows:
+        block = xp.concatenate(
+            [block, xp.zeros((rows - block.shape[0], d), table.dtype)])
+    return block
+
+
 def unshard_table(shards, num_rows: int):
     """Sharded ``(S, rows, d)`` → dense ``(num_rows, d)`` (padding rows are
     at the flattened tail, by construction of ``shard_table``)."""
@@ -104,6 +125,19 @@ def plan_local_gather(layout: ShardedTableLayout,
     offsets = (np.arange(layout.num_shards, dtype=np.int64) * rows
                ).reshape((layout.num_shards,) + (1,) * g.ndim)
     local = g[None, ...] - offsets
+    owned = (local >= 0) & (local < rows)
+    return np.clip(local, 0, rows - 1).astype(np.int32), owned
+
+
+def plan_local_gather_block(layout: ShardedTableLayout,
+                            global_ids: np.ndarray,
+                            shard: int) -> Tuple[np.ndarray, np.ndarray]:
+    """One shard's ``(local_ids, owned)`` slice of :func:`plan_local_gather`
+    — the same integer arithmetic, so stacking the blocks over shards
+    reproduces the full plan bit-for-bit.  A multi-host mesh builds only
+    its own shards' plan blocks with this."""
+    rows = layout.rows_per_shard
+    local = np.asarray(global_ids, dtype=np.int64) - shard * rows
     owned = (local >= 0) & (local < rows)
     return np.clip(local, 0, rows - 1).astype(np.int32), owned
 
@@ -188,8 +222,13 @@ def shard_bias_blocks(bias: np.ndarray,
     hold no real entity) get ``-inf``: a padded row's score is then ``-inf``
     and can neither outrank nor tie any real candidate, so rank counts over
     the padded blocks equal counts over the dense ``(B, num_rows)`` matrix.
-    Used by the candidate-axis-sharded ranking path (``repro.eval.sharded``);
-    shard ``s``'s block covers global rows ``[s * rows, (s+1) * rows)``.
+    Shard ``s``'s block covers global rows ``[s * rows, (s+1) * rows)``.
+
+    This is the DENSE-INPUT reference: the sharded ranking path
+    (``repro.eval.sharded.shard_filter_bias_block``) builds each block
+    straight from the CSR filter index's column-range form instead, so the
+    ``(B, num_rows)`` input never has to exist; the two are tested
+    bit-equal (``tests/test_eval_ranking.py``).
     """
     b, n = bias.shape
     if n != layout.num_rows:

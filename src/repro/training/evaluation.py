@@ -13,7 +13,10 @@ vertices carry their full ``num_hops`` receptive field inside the partition
 mathematically identical to a full-graph encode; a single partition
 reproduces the old mega-partition pass exactly.  Ranking then goes through
 ``repro.eval`` — candidate-axis-sharded when the model's entity table is
-row-sharded (``num_table_shards > 1``).
+row-sharded (``num_table_shards > 1``), in which case the host builds each
+shard's filter-bias column block straight from the CSR index (the dense
+``(B, N)`` bias never exists on this path) and both candidate protocols
+(all-entities and ogbl candidate lists) ride the sharded count exchange.
 """
 from __future__ import annotations
 
@@ -96,7 +99,9 @@ def evaluate_split(
     partitions; ``decoder`` resolves through the registry
     (``repro.models.decoders``) and its whole parameter tree rides along, so
     with ``num_table_shards > 1`` ranking is candidate-axis-sharded over the
-    model's row blocks for EVERY registered decoder."""
+    model's row blocks for EVERY registered decoder — per-shard filter-bias
+    blocks built straight from CSR (peak host bias memory ∝ 1/shards), no
+    dense ``(B, N)`` bias anywhere on the sharded path."""
     emb = encode_all_entities(
         params, kge_cfg, splits["train"].with_inverse_relations(),
         num_hops, features=features, partitions=partitions, padded=padded)

@@ -63,6 +63,11 @@ class TrainConfig:
     num_table_shards: int = 1           # >1: row-shard the entity embedding
     #   table over the model axis (repro.sharding.embedding); the pipeline
     #   then emits per-shard gather plans with every batch
+    sharded_transfer: bool = False      # transfer batches with per-axis
+    #   NamedShardings over a host mesh (data×model): each partition slice
+    #   lands on its own data-axis device, each gather-plan block on its
+    #   model-axis device.  Values are bitwise identical to the
+    #   single-device transfer; on a 1-device mesh the paths coincide.
 
 
 class KGETrainer:
@@ -121,11 +126,14 @@ class KGETrainer:
 
         # ---- input pipeline + SPMD step ----
         self._fullgraph = cfg.batch_size is None
+        shardings = (self._make_batch_shardings()
+                     if cfg.sharded_transfer else None)
         if self._fullgraph:
             self._step = make_simulated_train_step(
                 self._fullgraph_loss, optimizer)
             self.pipeline: InputPipeline = FullGraphPipeline(
-                self.pre.padded, table_layout=self.pre.table_layout)
+                self.pre.padded, table_layout=self.pre.table_layout,
+                shardings=shardings)
         else:
             self._step = make_simulated_train_step(
                 self._minibatch_loss, optimizer)
@@ -140,7 +148,27 @@ class KGETrainer:
                 csrs=self.pre.csrs,
                 prefetch=cfg.prefetch,
                 table_layout=self.pre.table_layout,
+                shardings=shardings,
             )
+
+    def _make_batch_shardings(self):
+        """Mesh-aware transfer placements for ``cfg.sharded_transfer``: the
+        data×model host mesh using the MOST local devices such that the
+        ``data`` axis divides the trainer count and the ``model`` axis the
+        table shard count (ties prefer the data axis — trainer slices
+        dominate transfer bytes; 1×1, the bitwise-identical degenerate
+        case, when only one device exists)."""
+        from repro.data.pipeline import BatchShardings
+        from repro.launch.mesh import make_host_mesh
+        cfg = self.cfg
+        ndev = jax.device_count()
+        data, model = max(
+            ((d, m) for d in range(1, ndev + 1)
+             if cfg.num_trainers % d == 0
+             for m in range(1, ndev // d + 1)
+             if cfg.num_table_shards % m == 0),
+            key=lambda dm: (dm[0] * dm[1], dm[0]))
+        return BatchShardings(make_host_mesh(data, model))
 
     # ------------------------------------------------------------------ #
     # preprocessing artifacts (stable public surface)

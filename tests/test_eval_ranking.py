@@ -30,7 +30,7 @@ from repro.core.graph import (
 from repro.eval import (
     CSRFilterIndex, FILTER_BIAS, build_filter_index,
     evaluate_both_directions, make_sharded_rank_step, ranking_metrics,
-    sharded_ranking_metrics,
+    shard_filter_bias_block, sharded_ranking_metrics,
 )
 from repro.eval.ranking import _filter_bias
 
@@ -119,6 +119,193 @@ class TestCSRFilterIndex:
         bias = csr.bias(np.array([[0, 0, 2]]), 5)
         np.testing.assert_array_equal(
             bias[0], [0.0, FILTER_BIAS, 0.0, FILTER_BIAS, 0.0])
+
+
+# ====================================================================== #
+# Column-range filter bias (tentpole: per-shard blocks straight from CSR)
+# ====================================================================== #
+class TestColumnRangeBias:
+    """``CSRFilterIndex.bias(triplets, w, col_start)`` must equal slicing
+    the dense bias — including empty ranges, ranges past the vocabulary,
+    queries with no known tails, and the ragged last shard block."""
+
+    def _setup(self, seed, n_ent=97, n_rel=5):
+        rng = np.random.default_rng(seed)
+        graphs = [_random_kg(seed * 7 + i, n_ent, n_rel,
+                             int(rng.integers(0, 400))) for i in range(2)]
+        csr = CSRFilterIndex.build(graphs)
+        ref = build_filter_index(graphs)
+        queries = np.stack([rng.integers(0, n_ent, 48),
+                            rng.integers(0, n_rel, 48),
+                            rng.integers(0, n_ent, 48)],
+                           axis=1).astype(np.int32)
+        return csr, ref, queries, n_ent
+
+    @pytest.mark.parametrize("seed", range(3))
+    def test_equals_dense_slice(self, seed):
+        csr, ref, queries, n = self._setup(seed)
+        dense = csr.bias(queries, n)
+        rng = np.random.default_rng(seed + 100)
+        ranges = [(0, n), (0, 0), (n, 0), (0, 1), (n - 1, 1),
+                  (n // 3, n // 2)]
+        for _ in range(10):
+            lo, hi = sorted(rng.integers(0, n + 1, 2))
+            ranges.append((int(lo), int(hi - lo)))
+        for lo, w in ranges:
+            got = csr.bias(queries, w, col_start=lo)
+            assert got.shape == (48, w)
+            np.testing.assert_array_equal(got, dense[:, lo: lo + w])
+            # the dict-of-sets loop reference agrees on the same range
+            np.testing.assert_array_equal(
+                got, _filter_bias(ref, queries, w, col_start=lo))
+
+    @given(st.integers(0, 2 ** 31 - 1), st.integers(2, 50),
+           st.integers(1, 6), st.integers(0, 200))
+    @settings(max_examples=20, deadline=None)
+    def test_equals_dense_slice_property(self, seed, n_ent, n_rel, n_edge):
+        graphs = [_random_kg(seed, n_ent, n_rel, n_edge)]
+        csr = CSRFilterIndex.build(graphs)
+        rng = np.random.default_rng(seed)
+        queries = np.stack([rng.integers(0, n_ent, 16),
+                            rng.integers(0, n_rel, 16),
+                            rng.integers(0, n_ent, 16)],
+                           axis=1).astype(np.int32)
+        dense = csr.bias(queries, n_ent)
+        lo = int(rng.integers(0, n_ent + 1))
+        w = int(rng.integers(0, n_ent + 1 - lo))
+        np.testing.assert_array_equal(
+            csr.bias(queries, w, col_start=lo), dense[:, lo: lo + w])
+
+    def test_queries_with_no_known_tails(self):
+        """Absent (s, r) pairs produce an all-zero block in every range
+        (except the true-tail column, which is zero anyway)."""
+        g = KnowledgeGraph(src=np.array([0]), rel=np.array([0]),
+                           dst=np.array([1]), num_entities=50,
+                           num_relations=3)
+        csr = CSRFilterIndex.build([g])
+        # (s=5, r=2) was never seen: no tails anywhere
+        q = np.array([[5, 2, 7]], np.int32)
+        for lo, w in [(0, 50), (0, 10), (20, 17), (49, 1), (10, 0)]:
+            np.testing.assert_array_equal(
+                csr.bias(q, w, col_start=lo), np.zeros((1, w), np.float32))
+
+    def test_true_tail_zero_only_in_owning_range(self):
+        g = KnowledgeGraph(src=np.array([0, 0, 0]), rel=np.array([0, 0, 0]),
+                           dst=np.array([1, 2, 3]), num_entities=6,
+                           num_relations=1)
+        csr = CSRFilterIndex.build([g])
+        q = np.array([[0, 0, 2]], np.int32)
+        # range [0, 3): tails 1, 2 fall inside; 2 is the true tail -> zero
+        np.testing.assert_array_equal(
+            csr.bias(q, 3)[0], [0.0, FILTER_BIAS, 0.0])
+        # range [3, 6): known tail 3 filtered, true tail not in range
+        np.testing.assert_array_equal(
+            csr.bias(q, 3, col_start=3)[0], [FILTER_BIAS, 0.0, 0.0])
+
+    @pytest.mark.parametrize("num_shards", [1, 2, 4, 7])
+    def test_shard_block_equals_dense_reference(self, num_shards):
+        """shard_filter_bias_block == shard_bias_blocks(dense)[s] for every
+        shard, including the ragged last shard (layout padding -inf)."""
+        from repro.sharding.embedding import (
+            ShardedTableLayout, shard_bias_blocks,
+        )
+        csr, ref, queries, n = self._setup(seed=11)
+        layout = ShardedTableLayout(n, num_shards)
+        dense_blocks = shard_bias_blocks(csr.bias(queries, n), layout)
+        for s in range(num_shards):
+            got = shard_filter_bias_block(csr, queries, layout, s)
+            np.testing.assert_array_equal(got, dense_blocks[s])
+            # the dict reference index builds the identical block
+            np.testing.assert_array_equal(
+                got, shard_filter_bias_block(ref, queries, layout, s))
+
+    def test_empty_batch(self):
+        csr = CSRFilterIndex.build([])
+        assert csr.bias(np.zeros((0, 3), np.int32), 5,
+                        col_start=2).shape == (0, 5)
+
+
+class TestPerShardTwins:
+    """The per-shard block builders the multi-host mesh path uses must
+    reproduce their full-stack twins bit-for-bit (stacking blocks over
+    shards == the full build)."""
+
+    @pytest.mark.parametrize("n,s", [(100, 4), (101, 4), (7, 3), (16, 1)])
+    def test_shard_table_block(self, n, s):
+        from repro.sharding.embedding import (
+            ShardedTableLayout, shard_table, shard_table_block,
+        )
+        rng = np.random.default_rng(n * 10 + s)
+        table = rng.normal(size=(n, 6)).astype(np.float32)
+        layout = ShardedTableLayout(n, s)
+        full = shard_table(table, layout)
+        for i in range(s):
+            np.testing.assert_array_equal(
+                full[i], shard_table_block(table, layout, i))
+        with pytest.raises(ValueError, match="rows"):
+            shard_table_block(table[:-1], layout, 0)
+
+    @pytest.mark.parametrize("s", [1, 2, 4])
+    def test_plan_local_gather_block(self, s):
+        from repro.sharding.embedding import (
+            ShardedTableLayout, plan_local_gather, plan_local_gather_block,
+        )
+        rng = np.random.default_rng(s)
+        layout = ShardedTableLayout(101, s)
+        ids = rng.integers(0, 101, size=(12, 7))
+        full_local, full_owned = plan_local_gather(layout, ids)
+        for i in range(s):
+            li, ow = plan_local_gather_block(layout, ids, i)
+            assert li.dtype == full_local.dtype
+            assert ow.dtype == full_owned.dtype
+            np.testing.assert_array_equal(li, full_local[i])
+            np.testing.assert_array_equal(ow, full_owned[i])
+
+
+class TestNoDenseBiasOnShardedPath:
+    def test_peak_host_alloc_below_dense_bias(self):
+        """The acceptance bound: the sharded path builds per-shard bias
+        blocks straight from CSR, so peak host allocation during ranking
+        stays well under the dense (B, N) bias it used to materialize
+        (the dense path is measured too, proving the tracker would catch
+        a regression)."""
+        import tracemalloc
+        n, d, b, s = 6000, 8, 256, 8
+        rng = np.random.default_rng(0)
+        emb = rng.normal(size=(n, d)).astype(np.float32)
+        dparams = {"rel_diag": rng.normal(size=(48, d)).astype(np.float32)}
+        kg = make_synthetic_kg(n, 48, 30_000, seed=0)
+        fidx = CSRFilterIndex.build([kg])
+        tests = kg.triplets()[:b]
+        dense_bias_bytes = b * n * 4
+
+        # warm both jit caches OUTSIDE the traced window (compilation
+        # allocates host memory that has nothing to do with the bias path)
+        sharded_ranking_metrics(emb, dparams, tests, fidx, s, batch_size=b)
+        ranking_metrics(emb, dparams, tests, fidx, batch_size=b)
+
+        import gc
+        gc.collect()
+        tracemalloc.start()
+        m_sh = sharded_ranking_metrics(emb, dparams, tests, fidx, s,
+                                       batch_size=b)
+        _, peak_sharded = tracemalloc.get_traced_memory()
+        tracemalloc.stop()
+
+        gc.collect()
+        tracemalloc.start()
+        m_dense = ranking_metrics(emb, dparams, tests, fidx, batch_size=b)
+        _, peak_dense = tracemalloc.get_traced_memory()
+        tracemalloc.stop()
+
+        assert m_sh == m_dense
+        # dense really does materialize (B, N) on host ...
+        assert peak_dense >= dense_bias_bytes
+        # ... and the sharded path never does (one (B, rows/S) block plus
+        # change; 0.5x leaves slack for scatter temporaries)
+        assert peak_sharded < 0.5 * dense_bias_bytes, (
+            f"sharded eval peak host alloc {peak_sharded} vs dense bias "
+            f"{dense_bias_bytes} — a (B, N) bias is being materialized")
 
 
 # ====================================================================== #
@@ -296,6 +483,91 @@ class TestShardedRankingEquivalence:
 
 
 # ====================================================================== #
+# ogbl candidate-list protocol routed through the sharded path (tentpole)
+# ====================================================================== #
+def _candidate_setup(seed=0, n_cand=40):
+    """Per-row candidate lists that cross shard boundaries, contain exact
+    score ties (duplicate embedding rows 3/7 and 11/n-1) and duplicate
+    candidate ids within a row."""
+    emb, dparams, tests, fidx, _ = _tied_eval_setup(seed=seed)
+    rng = np.random.default_rng(seed + 500)
+    n = emb.shape[0]
+    cands = rng.integers(0, n, size=(tests.shape[0], n_cand)).astype(
+        np.int32)
+    cands[:, 0] = 3                      # tie partners in every row ...
+    cands[:, 1] = 7
+    cands[:, 2] = 11
+    cands[:, 3] = n - 1                  # ... across shard boundaries
+    cands[:, 4] = cands[:, 5]            # duplicate candidate id in-row
+    return emb, dparams, tests, fidx, cands
+
+
+class TestShardedCandidateProtocol:
+    @pytest.mark.parametrize("s", SHARD_COUNTS)
+    def test_exactly_equals_dense(self, s):
+        emb, dparams, tests, fidx, cands = _candidate_setup()
+        m_dense = ranking_metrics(emb, dparams, tests, fidx,
+                                  candidates=cands)
+        m_sh = sharded_ranking_metrics(emb, dparams, tests, fidx, s,
+                                       candidates=cands)
+        assert m_sh == m_dense                 # exact, not allclose
+
+    @pytest.mark.parametrize("s", SHARD_COUNTS)
+    def test_dispatch_through_ranking_metrics(self, s):
+        """num_shards > 1 + candidates routes through the sharded path
+        (it used to silently fall back to dense)."""
+        emb, dparams, tests, fidx, cands = _candidate_setup(seed=1)
+        m_dense = ranking_metrics(emb, dparams, tests, fidx,
+                                  candidates=cands)
+        m_sh = ranking_metrics(emb, dparams, tests, fidx, candidates=cands,
+                               num_shards=s)
+        assert m_sh == m_dense
+
+    def test_shard_map_candidate_step(self):
+        """1×1 host mesh smoke for the shard_map + psum candidate path."""
+        from repro.launch.mesh import make_host_mesh
+        emb, dparams, tests, fidx, cands = _candidate_setup(seed=2)
+        step = make_sharded_rank_step(make_host_mesh(1, 1),
+                                      protocol="candidates")
+        m_spmd = sharded_ranking_metrics(emb, dparams, tests, fidx, 1,
+                                         rank_step=step, candidates=cands)
+        assert m_spmd == ranking_metrics(emb, dparams, tests, fidx,
+                                         candidates=cands)
+
+    def test_protocol_mismatch_fails_fast(self):
+        from repro.launch.mesh import make_host_mesh
+        emb, dparams, tests, fidx, cands = _candidate_setup(seed=3)
+        all_step = make_sharded_rank_step(make_host_mesh(1, 1))
+        with pytest.raises(ValueError, match="protocol"):
+            sharded_ranking_metrics(emb, dparams, tests, fidx, 1,
+                                    rank_step=all_step, candidates=cands)
+        cand_step = make_sharded_rank_step(make_host_mesh(1, 1),
+                                           protocol="candidates")
+        with pytest.raises(ValueError, match="protocol"):
+            sharded_ranking_metrics(emb, dparams, tests, fidx, 1,
+                                    rank_step=cand_step)
+        with pytest.raises(ValueError, match="unknown protocol"):
+            make_sharded_rank_step(make_host_mesh(1, 1), protocol="nope")
+
+    @pytest.mark.parametrize("decoder", ["transe", "rotate"])
+    def test_neg_l2_decoders_too(self, decoder):
+        """The routed candidate path carries every epilogue family, not
+        just the bilinear paper decoder."""
+        from repro.models.decoders import init_decoder_params
+        emb, _, tests, fidx, cands = _candidate_setup(seed=4)
+        d = emb.shape[1]
+        dparams = jax.tree_util.tree_map(np.asarray, init_decoder_params(
+            jax.random.PRNGKey(0), decoder, 16, d))
+        m_dense = ranking_metrics(emb, dparams, tests, fidx,
+                                  candidates=cands, decoder=decoder)
+        for s in (2, 4):
+            m_sh = sharded_ranking_metrics(
+                emb, dparams, tests, fidx, s, candidates=cands,
+                decoder=decoder)
+            assert m_sh == m_dense
+
+
+# ====================================================================== #
 # Streamed partition encoder (tentpole part 2)
 # ====================================================================== #
 class TestStreamedEncoder:
@@ -417,6 +689,17 @@ m_dense = ranking_metrics(emb, dparams, tests, fidx)
 # + zeros, so the psum is order-free: EXACT equality, unlike the training
 # gradient exchange
 assert m_spmd == m_dense, (m_spmd, m_dense)
+
+# ogbl candidate protocol through the same 2-device psum exchange, with
+# candidate ids scattered by owning row block (incl. the tied rows 3/7)
+cands = rng.integers(0, n, size=(tests.shape[0], 32)).astype(np.int32)
+cands[:, 0] = 3
+cands[:, 1] = 7
+cstep = make_sharded_rank_step(mesh, protocol="candidates")
+m_cand_spmd = sharded_ranking_metrics(emb, dparams, tests, fidx, 2,
+                                      rank_step=cstep, candidates=cands)
+m_cand_dense = ranking_metrics(emb, dparams, tests, fidx, candidates=cands)
+assert m_cand_spmd == m_cand_dense, (m_cand_spmd, m_cand_dense)
 print("TWO_DEVICE_EVAL_OK")
 """
 
