@@ -108,6 +108,11 @@ def run(quick: bool = True) -> List[Dict]:
 # ---------------------------------------------------------------------- #
 # Sharded entity table: gather+exchange time, table bytes per device
 # ---------------------------------------------------------------------- #
+GATE_RATIO = 1.5   # max allowed 2-shard gather+exchange / dense gather —
+#   the regression bar benchmarks/run.py enforces (ROADMAP open item 2:
+#   the old masked-sum chain sat at 3x)
+
+
 def _time_gather(fn, *args, iters: int = 30) -> float:
     import jax
     fn(*args)[0].block_until_ready()           # compile
@@ -118,14 +123,34 @@ def _time_gather(fn, *args, iters: int = 30) -> float:
     return (time.perf_counter() - t0) / iters
 
 
+def _zipf_ids(rng, v: int, batch: int, a: float = 1.3) -> np.ndarray:
+    """Skewed gather ids on the workload shape KGE batches actually have:
+    Zipf-ranked popularity over a random entity permutation (so the hot
+    set is not the contiguous low-id block — dedup wins must come from
+    repetition, not shard locality)."""
+    ranks = (rng.zipf(a, size=batch) - 1) % v
+    return rng.permutation(v)[ranks].astype(np.int32)
+
+
 def run_embedding(quick: bool = True) -> List[Dict]:
     """Dense replicated gather vs shard-local gather + exchange at 1-8
-    model shards (simulated mesh).  Per-device table bytes must shrink
-    ∝ 1/num_shards — that is the capacity the sharding buys."""
+    model shards (simulated mesh), three variants per shard count:
+
+    * ``fused`` — the flat-index fused gather (the default exchange);
+    * ``chain`` — the original take → mask → sum chain (the PR-2 path the
+      fused kernel replaced; kept as the regression reference);
+    * ``dedup`` — fused over the unique-id plan + on-device expansion.
+
+    ``sharded_over_dense_ratio`` (fused / dense) is the gated headline:
+    ``benchmarks/run.py`` exits non-zero when the 2-shard ratio exceeds
+    ``GATE_RATIO``.  A zipfian id case measures dedup on skewed batches.
+    Per-device table bytes must shrink ∝ 1/num_shards — that is the
+    capacity the sharding buys."""
     import jax
     import jax.numpy as jnp
     from repro.sharding.embedding import (
-        ShardedTableLayout, plan_local_gather, shard_table, sharded_gather,
+        ShardedTableLayout, plan_local_gather, plan_unique_gather,
+        shard_table, sharded_gather,
     )
 
     v, d = (20_000, 64) if quick else (200_000, 128)
@@ -133,21 +158,52 @@ def run_embedding(quick: bool = True) -> List[Dict]:
     rng = np.random.default_rng(0)
     table = jnp.asarray(rng.normal(size=(v, d)).astype(np.float32))
     ids = rng.integers(0, v, size=batch).astype(np.int32)
+    zipf = _zipf_ids(rng, v, batch)
 
     dense_us = _time_gather(
         jax.jit(lambda t, i: (t[i],)), table, jnp.asarray(ids)) * 1e6
+
+    fused_fn = jax.jit(lambda t, i, o: (sharded_gather(t, i, o),))
+    chain_fn = jax.jit(lambda t, i, o: (
+        sharded_gather(t, i, o, exchange="masked_sum"),))
+    dedup_fn = jax.jit(lambda t, i, o, inv: (
+        sharded_gather(t, i, o, inverse=inv),))
+
+    def time_variants(layout, sh, batch_ids):
+        li, ow = plan_local_gather(layout, batch_ids)
+        li, ow = jnp.asarray(li), jnp.asarray(ow)
+        ul, uo, inv = plan_unique_gather(layout, batch_ids)
+        out = {
+            "fused_us": _time_gather(fused_fn, sh, li, ow) * 1e6,
+            "chain_us": _time_gather(chain_fn, sh, li, ow) * 1e6,
+            "dedup_us": _time_gather(
+                dedup_fn, sh, jnp.asarray(ul), jnp.asarray(uo),
+                jnp.asarray(inv)) * 1e6,
+            "unique_ids": int(len(np.unique(batch_ids))),
+            "plan_slots": int(ul.shape[1]),
+        }
+        return out
 
     shards_out = []
     for s in (1, 2, 4, 8):
         layout = ShardedTableLayout(v, s)
         sh = shard_table(table, layout)
-        li, ow = plan_local_gather(layout, ids)
-        us = _time_gather(
-            jax.jit(lambda t, i, o: (sharded_gather(t, i, o),)),
-            sh, jnp.asarray(li), jnp.asarray(ow)) * 1e6
+        uni = time_variants(layout, sh, ids)
+        zip_ = time_variants(layout, sh, zipf)
         shards_out.append({
             "num_shards": s,
-            "gather_exchange_us": round(us, 2),
+            "gather_exchange_us": round(uni["fused_us"], 2),
+            "chain_exchange_us": round(uni["chain_us"], 2),
+            "dedup_gather_us": round(uni["dedup_us"], 2),
+            "sharded_over_dense_ratio":
+                round(uni["fused_us"] / max(dense_us, 1e-9), 3),
+            "unique_ids": uni["unique_ids"],
+            "zipf": {
+                "gather_exchange_us": round(zip_["fused_us"], 2),
+                "dedup_gather_us": round(zip_["dedup_us"], 2),
+                "unique_ids": zip_["unique_ids"],
+                "plan_slots": zip_["plan_slots"],
+            },
             "table_bytes_per_device": layout.bytes_per_shard(d),
             "rows_per_shard": layout.rows_per_shard,
         })
@@ -157,6 +213,7 @@ def run_embedding(quick: bool = True) -> List[Dict]:
         "table": {"entities": v, "dim": d, "batch_gather": batch,
                   "dense_bytes": v * d * 4, "quick": quick},
         "dense_gather_us": round(dense_us, 2),
+        "gate_max_2shard_ratio": GATE_RATIO,
         "sharded": shards_out,
     }
     with open(EMBED_JSON_PATH, "w") as f:
@@ -169,6 +226,10 @@ def run_embedding(quick: bool = True) -> List[Dict]:
         rows.append({
             "name": f"sharded_{r['num_shards']}",
             "us_per_call": r["gather_exchange_us"],
+            "over_dense": r["sharded_over_dense_ratio"],
+            "chain_us": r["chain_exchange_us"],
+            "dedup_us": r["dedup_gather_us"],
+            "zipf_dedup_us": r["zipf"]["dedup_gather_us"],
             "table_mib_per_device":
                 round(r["table_bytes_per_device"] / 2**20, 2),
         })

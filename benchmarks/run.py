@@ -9,11 +9,33 @@ quick mode finishes on a single CPU core in minutes.
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 import traceback
 
 from benchmarks.common import emit
+
+
+def check_embedding_gate() -> str:
+    """Perf gate over the freshly written ``BENCH_embedding.json``: the
+    2-shard gather+exchange must stay within ``GATE_RATIO``x the dense
+    replicated gather (ROADMAP open item 2 — the old masked-sum chain sat
+    at ~3x and this keeps the regression from silently returning).
+    Returns a summary line; raises on violation."""
+    from benchmarks.pipeline_bench import EMBED_JSON_PATH, GATE_RATIO
+    with open(EMBED_JSON_PATH) as f:
+        payload = json.load(f)
+    two = next(r for r in payload["sharded"] if r["num_shards"] == 2)
+    ratio = two["sharded_over_dense_ratio"]
+    if ratio > GATE_RATIO:
+        raise RuntimeError(
+            f"embedding gate FAILED: 2-shard gather+exchange is "
+            f"{ratio:.2f}x dense (limit {GATE_RATIO}x) — "
+            f"{two['gather_exchange_us']}us vs "
+            f"{payload['dense_gather_us']}us dense")
+    return (f"embedding gate ok: 2-shard gather+exchange "
+            f"{ratio:.2f}x dense (limit {GATE_RATIO}x)")
 
 
 def main() -> None:
@@ -56,6 +78,8 @@ def main() -> None:
             rows = fn()
             for line in emit(rows, name):
                 print(line, flush=True)
+            if name == "embedding":
+                print(f"# {check_embedding_gate()}", file=sys.stderr)
             print(f"# {name} done in {time.time() - t0:.1f}s",
                   file=sys.stderr)
         except Exception:

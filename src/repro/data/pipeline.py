@@ -153,15 +153,20 @@ def to_device_batch(
     mb: EdgeMiniBatch,
     table_layout: Optional[ShardedTableLayout] = None,
     shardings: Optional[BatchShardings] = None,
+    dedup_gather: bool = False,
 ) -> Dict[str, "jax.Array"]:
     """Host→device transfer of one stacked mini-batch (field-name dict, the
     layout the SPMD step consumes).  With a ``table_layout`` the batch also
     carries its host-precomputed per-shard gather plan
-    (``shard_local_ids`` / ``shard_owned``, trainer axis leading).  With
-    ``shardings`` the transfer is a per-axis ``jax.device_put`` — each
+    (``shard_local_ids`` / ``shard_owned``, trainer axis leading); with
+    ``dedup_gather`` the plan covers each trainer row's UNIQUE ids plus the
+    ``shard_inverse`` expansion map, so the device exchange moves each hot
+    entity once (bitwise-identical output — same rows, gathered once).
+    With ``shardings`` the transfer is a per-axis ``jax.device_put`` — each
     partition slice to its own ``data``-axis device, each gather-plan shard
-    block to its own ``model``-axis device — instead of a single-device
-    ``jnp.asarray``; the values are bitwise identical either way."""
+    block to its own ``model``-axis device, the ``(P, V_b)`` inverse riding
+    the batch placement — instead of a single-device ``jnp.asarray``; the
+    values are bitwise identical either way."""
     import jax
     import jax.numpy as jnp
     if shardings is None:
@@ -175,9 +180,12 @@ def to_device_batch(
     out = {f.name: put_batch(getattr(mb, f.name))
            for f in dataclasses.fields(mb)}
     if table_layout is not None:
-        plan = ShardedGatherPlan.for_stacked(table_layout, mb.gather_global)
+        plan = ShardedGatherPlan.for_stacked(
+            table_layout, mb.gather_global, dedup=dedup_gather)
         out["shard_local_ids"] = put_plan(plan.local_ids)
         out["shard_owned"] = put_plan(plan.owned)
+        if plan.inverse is not None:
+            out["shard_inverse"] = put_batch(plan.inverse)
     return out
 
 
@@ -195,10 +203,12 @@ class InputPipeline:
     def __init__(
         self, table_layout: Optional[ShardedTableLayout] = None,
         shardings: Optional[BatchShardings] = None,
+        dedup_gather: bool = False,
     ) -> None:
         self._stats = PipelineStats()
         self.table_layout = table_layout
         self.shardings = shardings
+        self.dedup_gather = dedup_gather
 
     @property
     def last_stats(self) -> PipelineStats:
@@ -209,7 +219,8 @@ class InputPipeline:
 
     def device_batches(self, epoch: int) -> Iterator[Dict]:
         for mb in self.epoch_batches(epoch):
-            yield to_device_batch(mb, self.table_layout, self.shardings)
+            yield to_device_batch(mb, self.table_layout, self.shardings,
+                                  self.dedup_gather)
 
     def close(self) -> None:
         """Release background resources (workers are per-epoch, so the base
@@ -232,8 +243,9 @@ class _MinibatchPipelineBase(InputPipeline):
         csrs: Optional[Sequence[_PartitionCSR]] = None,
         table_layout: Optional[ShardedTableLayout] = None,
         shardings: Optional[BatchShardings] = None,
+        dedup_gather: bool = False,
     ):
-        super().__init__(table_layout, shardings)
+        super().__init__(table_layout, shardings, dedup_gather)
         if shardings is not None:
             shardings.check(len(partitions), table_layout)
         self.partitions = list(partitions)
@@ -446,7 +458,8 @@ class AsyncMinibatchPipeline(_MinibatchPipelineBase):
                                                timed=False):
                     if not _put(xfer_q,
                                 (to_device_batch(mb, self.table_layout,
-                                                 self.shardings),
+                                                 self.shardings,
+                                                 self.dedup_gather),
                                  build),
                                 stop):
                         return
@@ -588,17 +601,20 @@ def make_input_pipeline(
     prefetch: int = 2,
     table_layout: Optional[ShardedTableLayout] = None,
     shardings: Optional[BatchShardings] = None,
+    dedup_gather: bool = False,
 ) -> InputPipeline:
     """Build a mini-batch input pipeline (``serial`` reference or ``async``
     prefetching); ``table_layout`` makes every device batch carry its
-    sharded-table gather plan, ``shardings`` makes the transfer a per-axis
-    sharded ``device_put`` onto a real mesh."""
+    sharded-table gather plan (deduplicated per trainer row with
+    ``dedup_gather``), ``shardings`` makes the transfer a per-axis sharded
+    ``device_put`` onto a real mesh."""
     if kind not in PIPELINES:
         raise ValueError(
             f"unknown pipeline {kind!r}; choose from {sorted(PIPELINES)}")
     kw = dict(batch_size=batch_size, num_negatives=num_negatives,
               num_hops=num_hops, budget=budget, seed=seed, sampler=sampler,
-              csrs=csrs, table_layout=table_layout, shardings=shardings)
+              csrs=csrs, table_layout=table_layout, shardings=shardings,
+              dedup_gather=dedup_gather)
     if kind == "async":
         kw["prefetch"] = prefetch
     return PIPELINES[kind](partitions, **kw)

@@ -16,6 +16,9 @@ from repro.kernels.kge_score import C_BLOCK, Q_BLOCK, kge_score
 from repro.kernels.rgcn_message import (
     EDGE_BLOCK, VERTEX_BLOCK, basis_message, segment_sum_onehot,
 )
+from repro.kernels.sharded_gather import (
+    COT_BLOCK, ROW_BLOCK, fused_gather, scatter_add_onehot,
+)
 
 
 def _pad_to(x: jax.Array, n: int, axis: int = 0, fill=0) -> jax.Array:
@@ -138,6 +141,97 @@ def kge_score_padded(
     out = kge_score(q_p, cand_p, bias_p, qb_p, cb_p, epilogue=epilogue,
                     interpret=interpret)
     return out[:b, :c]
+
+
+# ---------------------------------------------------------------------- #
+# Fused sharded-table gather (repro.sharding.embedding hot path)
+# ---------------------------------------------------------------------- #
+def flat_gather_plan(local_ids: jax.Array, owned: jax.Array,
+                     rows_per_shard: int):
+    """Collapse a per-shard gather plan into flat row indices.
+
+    ``(local_ids, owned)`` are the ``(S, V)`` plan of
+    ``repro.sharding.embedding.plan_local_gather``; exactly one shard owns
+    each valid slot, so the exchange's mask+accumulate reduces to integer
+    bookkeeping: ``flat[v] = Σ_s owned[s,v] ? s·rows + local[s,v] : 0`` —
+    which is the slot's GLOBAL row id in the stacked ``(S·rows, d)`` table
+    — plus ``any_owned[v]`` marking slots no shard owns (dedup-plan
+    padding), which must gather exact zeros."""
+    s = local_ids.shape[0]
+    offsets = (jnp.arange(s, dtype=jnp.int32) * rows_per_shard
+               ).reshape((s,) + (1,) * (local_ids.ndim - 1))
+    flat = jnp.sum(jnp.where(owned, local_ids.astype(jnp.int32) + offsets,
+                             0), axis=0)
+    return flat, jnp.any(owned, axis=0)
+
+
+def _fused_sharded_gather_impl(table, local_ids, owned,
+                               interpret: Optional[bool] = None,
+                               use_kernel: Optional[bool] = None):
+    s, rows, d = table.shape
+    flat, any_owned = flat_gather_plan(local_ids, owned, rows)
+    table_flat = table.reshape(s * rows, d)
+    if use_kernel is None:
+        # the per-row-DMA kernel wins on TPU; on CPU the interpreter's
+        # per-grid-step overhead would swamp the gather, so the production
+        # path is the IDENTICAL XLA lowering (one masked row gather —
+        # tests/test_kernels.py asserts kernel == XLA bit-for-bit)
+        use_kernel = jax.default_backend() == "tpu"
+    if use_kernel:
+        return fused_gather(table_flat, flat, any_owned,
+                            interpret=interpret)
+    return jnp.where(any_owned[:, None], table_flat[flat], 0.0)
+
+
+@jax.custom_vjp
+def fused_sharded_gather(
+    table: jax.Array,      # (S, rows, d) row-sharded table stack
+    local_ids: jax.Array,  # (S, V) per-shard LOCAL row ids
+    owned: jax.Array,      # (S, V) ownership masks
+) -> jax.Array:
+    """Fused replacement for the shard-local take → mask → sum chain
+    (``ref.sharded_gather_ref``): the ownership masks fold into flat row
+    indices (``flat_gather_plan``) and the whole exchange becomes ONE
+    masked row gather — V·d elements touched instead of S·V·d, no
+    (S, V, d) intermediate.  Bitwise equal to the chain (each output
+    element is the owner's row value; the chain adds S−1 zeros to it).
+
+    Differentiable with a fused backward: the custom VJP scatter-adds the
+    cotangents straight into the stacked table rows — the SAME single
+    scatter-add a dense ``table[ids]`` gather's VJP performs (so sharded
+    gradients stay bitwise equal to dense ones) instead of
+    differentiating through the S-way mask/sum chain.  On TPU the
+    forward runs the ``sharded_gather.fused_gather`` Pallas kernel and
+    the backward the ``scatter_add_onehot`` MXU one-hot kernel."""
+    return _fused_sharded_gather_impl(table, local_ids, owned)
+
+
+def _fsg_fwd(table, local_ids, owned):
+    out = _fused_sharded_gather_impl(table, local_ids, owned)
+    # bwd needs only table's STATIC shape/dtype; the array residual is a
+    # free edge to the parameter under jit (no extra buffer)
+    return out, (local_ids, owned, table)
+
+
+def _fsg_bwd(res, g):
+    from repro.kernels import ref
+    local_ids, owned, table = res
+    s, rows, d = table.shape
+    dtype = table.dtype
+    flat, any_owned = flat_gather_plan(local_ids, owned, rows)
+    if jax.default_backend() == "tpu":
+        v = flat.shape[0]
+        v_pad = _round_up(v, COT_BLOCK)
+        r_pad = _round_up(s * rows, ROW_BLOCK)
+        dt = scatter_add_onehot(
+            _pad_to(g, v_pad), _pad_to(flat, v_pad),
+            _pad_to(any_owned, v_pad, fill=False), r_pad)[:s * rows]
+    else:
+        dt = ref.sharded_scatter_add_ref(g, flat, any_owned, s * rows)
+    return dt.reshape(s, rows, d).astype(dtype), None, None
+
+
+fused_sharded_gather.defvjp(_fsg_fwd, _fsg_bwd)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(5,))

@@ -69,6 +69,33 @@ def kge_score_ref(
     return out
 
 
+def sharded_gather_ref(
+    table: jax.Array,      # (S, rows, d) row-sharded table stack
+    local_ids: jax.Array,  # (S, V) per-shard LOCAL row ids
+    owned: jax.Array,      # (S, V) ownership masks
+) -> jax.Array:
+    """The original shard-local take → mask → sum exchange chain — the
+    oracle for ``kernels.sharded_gather.fused_gather`` /
+    ``ops.fused_sharded_gather``.  Exactly one shard owns each slot, so
+    every output element is one real row plus zeros."""
+    g = jax.vmap(lambda t, i: t[i])(table, local_ids)        # (S, V, d)
+    return jnp.sum(jnp.where(owned[:, :, None], g, 0.0), axis=0)
+
+
+def sharded_scatter_add_ref(
+    g: jax.Array,          # (V, d) gather cotangents
+    flat_ids: jax.Array,   # (V,) flat destination rows
+    any_owned: jax.Array,  # (V,) mask — unowned slots contribute 0
+    num_rows: int,
+) -> jax.Array:
+    """Transpose of the fused gather: masked scatter-add of the cotangents
+    into the stacked table rows.  Oracle for
+    ``kernels.sharded_gather.scatter_add_onehot``."""
+    upd = jnp.where(any_owned[:, None], g, 0.0).astype(jnp.float32)
+    return jnp.zeros((num_rows, g.shape[1]), jnp.float32).at[
+        flat_ids].add(upd)
+
+
 def wkv_chunk_ref(
     r: jax.Array,          # (BH, S, hd)
     k: jax.Array,

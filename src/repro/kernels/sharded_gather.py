@@ -1,0 +1,152 @@
+"""Pallas TPU kernels for the sharded-embedding gather hot path.
+
+The PR-2 sharded entity table made per-device memory scale 1/S but left the
+gather 3-4x SLOWER than the dense gather it replaced: the shard-local
+take → mask → sum/psum chain materializes an (S, V, d) intermediate and
+touches ``S × V × d`` elements where the dense gather touches ``V × d``
+(``BENCH_embedding.json``, ROADMAP open item 2).  Exactly one shard owns
+every id, so the mask+accumulate is pure bookkeeping — it can be folded
+into the *index arithmetic*:
+
+    ``flat[v] = Σ_s owned[s, v] ? s · rows + local_ids[s, v] : 0``
+
+turns the per-shard plan back into one flat row index into the stacked
+``(S · rows, d)`` table, and the whole chain collapses to a single masked
+row gather — the exchange's masked sum never exists as data movement.
+This module provides that collapsed op as Pallas kernels:
+
+* ``fused_gather`` — forward: one output row per grid step; the row index
+  is a scalar-prefetch argument (``PrefetchScalarGridSpec``), so the block
+  index map DMAs exactly the owner's row from the stacked table and the
+  ownership mask is applied in-register.  No (S, V, d) intermediate, no
+  S-way elementwise mask, no reduction.
+* ``scatter_add_onehot`` — backward: the transpose scatter-add as tiled
+  one-hot matmuls (the TPU substitute for atomic scatter, same pattern as
+  ``rgcn_message.segment_sum_onehot``): for a (row tile, cotangent tile)
+  pair build the 0/1 incidence tile and accumulate ``onehot @ g`` on the
+  MXU, skipping tiles no cotangent row hits.
+
+Both run under ``interpret=True`` on CPU and compile for TPU unchanged.
+Oracles: ``repro.kernels.ref.sharded_gather_ref`` (the original
+take→mask→sum chain) and ``ref.sharded_scatter_add_ref``.  The jit-ready
+entry point with the custom VJP (and the XLA lowering used on non-TPU
+backends, bit-equal by construction) is ``repro.kernels.ops.
+fused_sharded_gather``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+ROW_BLOCK = 128   # table-row tile of the scatter-add kernel
+COT_BLOCK = 128   # cotangent-row tile of the scatter-add kernel
+
+
+# ====================================================================== #
+# Forward: fused gather + mask (+ the accumulate folded into flat ids)
+# ====================================================================== #
+def _fused_gather_kernel(flat_ref, mask_ref, table_ref, out_ref):
+    """One gathered row per grid step.  ``table_ref`` is the (1, d) row the
+    scalar-prefetched flat index selected via the block index map; a row no
+    shard owns (dedup-plan padding) is zeroed in-register — the fused
+    remnant of the old exchange mask."""
+    del flat_ref  # consumed by the index maps (scalar prefetch)
+    out_ref[...] = jnp.where(mask_ref[...] != 0, table_ref[...], 0.0)
+
+
+def fused_gather(
+    table_flat: jax.Array,  # (R, d) stacked table, R = S * rows_per_shard
+    flat_ids: jax.Array,    # (V,) int32 flat row index (owner-resolved)
+    any_owned: jax.Array,   # (V,) bool/int — does ANY shard own this slot
+    *, interpret: bool | None = None,
+) -> jax.Array:
+    """Fused gather+mask: ``out[v] = any_owned[v] ? table_flat[flat_ids[v]]
+    : 0`` — the collapsed form of the shard-local take → mask → sum chain
+    (``ref.sharded_gather_ref``), one row DMA per output row."""
+    v = flat_ids.shape[0]
+    d = table_flat.shape[1]
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(v,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, ids: (i, 0)),
+            pl.BlockSpec((1, d), lambda i, ids: (ids[i], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda i, ids: (i, 0)),
+    )
+    return pl.pallas_call(
+        _fused_gather_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((v, d), table_flat.dtype),
+        interpret=interpret,
+    )(flat_ids.astype(jnp.int32),
+      any_owned.astype(jnp.int32).reshape(v, 1), table_flat)
+
+
+# ====================================================================== #
+# Backward: fused scatter-add of the gather cotangents
+# ====================================================================== #
+def _scatter_add_kernel(flat_ref, g_ref, mask_ref, out_ref):
+    """Grid (i over table-row tiles, j over cotangent tiles); j is the
+    minor (fastest) dimension so each row tile accumulates across all
+    cotangent tiles before the grid moves on (same accumulation contract
+    as ``rgcn_message._segment_sum_kernel``)."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    flat = flat_ref[...][:, 0]                     # (COT_BLOCK,)
+    mask = mask_ref[...][:, 0]                     # (COT_BLOCK,)
+    local = flat - pl.program_id(0) * ROW_BLOCK
+    hit = jnp.any((local >= 0) & (local < ROW_BLOCK) & (mask > 0))
+
+    @pl.when(hit)
+    def _accum():
+        rows = jax.lax.broadcasted_iota(
+            jnp.int32, (ROW_BLOCK, local.shape[0]), 0)
+        onehot = jnp.where(
+            (rows == local[None, :]) & (mask[None, :] > 0), 1.0, 0.0
+        ).astype(jnp.float32)                      # (ROW_BLOCK, COT_BLOCK)
+        out_ref[...] += jax.lax.dot_general(
+            onehot, g_ref[...].astype(jnp.float32),
+            dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ).astype(out_ref.dtype)
+
+
+def scatter_add_onehot(
+    g: jax.Array,          # (V, d) gather cotangents
+    flat_ids: jax.Array,   # (V,) int32 flat destination rows
+    any_owned: jax.Array,  # (V,) bool/int — unowned slots contribute 0
+    num_rows: int,         # R = S * rows_per_shard (padded table rows)
+    *, interpret: bool | None = None,
+) -> jax.Array:
+    """Scatter-free transpose of :func:`fused_gather`:
+    ``out[r] = Σ_v (flat_ids[v] == r ∧ any_owned[v]) · g[v]`` via MXU
+    one-hot matmuls.  V and ``num_rows`` must be tile multiples (the ops
+    wrapper pads; padded cotangent rows carry ``any_owned=False``)."""
+    v, d = g.shape
+    assert v % COT_BLOCK == 0 and num_rows % ROW_BLOCK == 0, \
+        "pad V/num_rows to tile multiples (ops wrapper)"
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    return pl.pallas_call(
+        _scatter_add_kernel,
+        grid=(num_rows // ROW_BLOCK, v // COT_BLOCK),
+        in_specs=[
+            pl.BlockSpec((COT_BLOCK, 1), lambda i, j: (j, 0)),
+            pl.BlockSpec((COT_BLOCK, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((COT_BLOCK, 1), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((ROW_BLOCK, d), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((num_rows, d), jnp.float32),
+        interpret=interpret,
+    )(flat_ids.astype(jnp.int32)[:, None], g,
+      any_owned.astype(jnp.int32)[:, None])

@@ -44,12 +44,17 @@ def train_kge(args) -> None:
         pipeline=args.pipeline, prefetch=args.prefetch,
         num_table_shards=args.table_shards,
         sharded_transfer=args.sharded_transfer,
+        gather_dedup=args.gather_dedup,
+        gather_exchange=args.gather_exchange,
         decoder=args.decoder, num_negatives=args.num_negatives,
         **({"hidden_dim": args.hidden_dim} if args.hidden_dim > 0 else {}))
     pipe = ("full-graph (resident batch)" if cfg.batch_size is None
             else f"{cfg.pipeline} pipeline")   # --pipeline/--prefetch only
     #                                            drive the mini-batch path
     xfer = ", sharded transfer" if cfg.sharded_transfer else ""
+    xfer += ", deduped gather" if cfg.gather_dedup else ""
+    if cfg.gather_exchange:
+        xfer += f", {cfg.gather_exchange} exchange"
     print(f"[train] {name}: {splits['train'].num_edges} train edges, "
           f"{splits['train'].num_entities} entities; "
           f"{cfg.decoder} decoder, {cfg.num_negatives} negatives/edge; "
@@ -139,6 +144,16 @@ def main() -> None:
                          "slice to its own data-axis device, gather-plan "
                          "blocks to model-axis devices); bitwise identical "
                          "to the single-device transfer")
+    ap.add_argument("--gather-dedup", action="store_true",
+                    help="dedupe sharded-gather plans per trainer row in "
+                         "the collator (exchange each unique id once, "
+                         "expand on device; bitwise-identical output)")
+    ap.add_argument("--gather-exchange", default=None,
+                    choices=("fused", "masked_sum", "psum", "psum_scatter",
+                             "alltoall"),
+                    help="sharded-gather exchange layout (default: fused "
+                         "on the sim path, psum_scatter under shard_map; "
+                         "all layouts are bitwise equal)")
     from repro.models.decoders import registered_decoders
     ap.add_argument("--decoder", default="distmult",
                     choices=registered_decoders(),

@@ -63,6 +63,7 @@ def vertex_input(params: Dict[str, Any], cfg: KGEConfig,
                  features: Optional[jax.Array],
                  shard_local_ids: Optional[jax.Array] = None,
                  shard_owned: Optional[jax.Array] = None,
+                 shard_inverse: Optional[jax.Array] = None,
                  *, model_axis: Optional[str] = None) -> jax.Array:
     """Gather the per-vertex model input: learned embedding rows
     (transductive) or precomputed features (ogbl-citation2 style).
@@ -72,9 +73,13 @@ def vertex_input(params: Dict[str, Any], cfg: KGEConfig,
     gather + exchange, driven by a host-precomputed ``ShardedGatherPlan``
     (``shard_local_ids`` / ``shard_owned``, emitted by the input pipeline)
     or, when none is provided (full-graph / evaluation paths), by the
-    identical in-jit plan.  ``model_axis`` names the mesh axis when running
-    inside ``shard_map``; ``None`` selects the single-device simulation —
-    both are bitwise equal to the replicated dense gather.
+    identical in-jit plan.  A deduped plan additionally carries
+    ``shard_inverse`` — the plan covers each id once and the inverse map
+    expands the exchanged rows back to batch slots on device.
+    ``model_axis`` names the mesh axis when running inside ``shard_map``;
+    ``None`` selects the single-device simulation; ``cfg.rgcn.
+    gather_exchange`` picks the exchange layout — every combination is
+    bitwise equal to the replicated dense gather.
     """
     if cfg.rgcn.feature_dim is None:
         table = params["entity_embedding"]
@@ -85,7 +90,9 @@ def vertex_input(params: Dict[str, Any], cfg: KGEConfig,
                 shard_local_ids, shard_owned = plan_local_gather_device(
                     num_shards, table.shape[1], gather_global)
             return sharded_gather(table, shard_local_ids, shard_owned,
-                                  axis_name=model_axis)
+                                  axis_name=model_axis,
+                                  exchange=cfg.rgcn.gather_exchange,
+                                  inverse=shard_inverse)
         return table[gather_global]
     assert features is not None, "feature-mode model needs features"
     return features[gather_global]
@@ -107,7 +114,8 @@ def minibatch_loss(
     under ``shard_local_ids`` / ``shard_owned``)."""
     x = vertex_input(params, cfg, batch["gather_global"], features,
                      batch.get("shard_local_ids"),
-                     batch.get("shard_owned"), model_axis=model_axis)
+                     batch.get("shard_owned"),
+                     batch.get("shard_inverse"), model_axis=model_axis)
     x = jnp.where(batch["vertex_mask"][:, None], x, 0.0)
     h = rgcn_encode(
         params, cfg.rgcn, x,
@@ -148,7 +156,8 @@ def fullgraph_loss(
     k_neg, k_drop = jax.random.split(rng)
     x = vertex_input(params, cfg, part["local_to_global"], features,
                      part.get("shard_local_ids"),
-                     part.get("shard_owned"), model_axis=model_axis)
+                     part.get("shard_owned"),
+                     part.get("shard_inverse"), model_axis=model_axis)
     x = jnp.where(part["vertex_mask"][:, None], x, 0.0)
     h = rgcn_encode(
         params, cfg.rgcn, x,
@@ -184,7 +193,8 @@ def encode_partition(
     features: Optional[jax.Array] = None,
 ) -> jax.Array:
     x = vertex_input(params, cfg, part["local_to_global"], features,
-                     part.get("shard_local_ids"), part.get("shard_owned"))
+                     part.get("shard_local_ids"), part.get("shard_owned"),
+                     part.get("shard_inverse"))
     x = jnp.where(part["vertex_mask"][:, None], x, 0.0)
     return rgcn_encode(
         params, cfg.rgcn, x,

@@ -41,6 +41,10 @@ class RGCNConfig:
     num_table_shards: int = 1  # >1: entity table stored (S, rows, d), row-
     #   sharded over the model axis (repro.sharding.embedding); the gather
     #   becomes shard-local + exchange, bitwise equal to the dense gather
+    gather_exchange: Optional[str] = None  # exchange layout for the sharded
+    #   gather (None = per-path default: "fused" sim, "psum_scatter" under
+    #   shard_map; see sharding.embedding.SIM_EXCHANGES/SPMD_EXCHANGES) —
+    #   all layouts are bitwise equal, this picks the comm pattern only
 
     def layer_in_dim(self, layer: int) -> int:
         if layer == 0:

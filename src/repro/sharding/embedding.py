@@ -20,13 +20,26 @@ identical to the replicated gather:
   path); the device version is the in-jit fallback for paths that build
   their gather ids on device (full-graph training, evaluation).  Both use
   the same integer arithmetic, so their outputs are identical.
-* ``sharded_gather`` — shard-local gather + exchange.  In the single-device
-  simulation (``axis_name=None``) the exchange is a masked sum over the
-  shard axis; under ``shard_map`` it is a ``jax.lax.psum`` over the model
-  axis.  Exactly one shard owns every row, so each output element is one
-  real value plus zeros — bitwise equal to the dense ``table[ids]`` gather
-  (and its transpose scatter-adds the same cotangents per row, so gradients
-  match bitwise too; ``tests/test_sharded_embedding.py`` enforces this).
+* ``plan_unique_gather`` / ``ShardedGatherPlan.for_stacked(dedup=True)`` —
+  host-side plan dedup: KGE minibatches repeat hot entities heavily, so the
+  collator gathers each unique id once, exchanges only the deduped rows,
+  and the device expands with a cheap ``take`` (the ``inverse`` map) after
+  the exchange.  Unique lists are padded to a bucket multiple with a
+  sentinel id that no shard owns (→ exact zero rows), keeping shapes
+  static for jit.
+* ``sharded_gather`` — shard-local gather + exchange.  Exactly one shard
+  owns every row, so each output element is one real value plus zeros —
+  bitwise equal to the dense ``table[ids]`` gather under EVERY exchange
+  layout (and the transpose scatter-adds the same cotangents per row, so
+  gradients match bitwise too; ``tests/test_sharded_embedding.py`` enforces
+  this with ``==`` gates).  In the single-device simulation
+  (``axis_name=None``) the default is the fused flat-index gather
+  (``repro.kernels.ops.fused_sharded_gather``; ``exchange="masked_sum"``
+  keeps the original take → mask → sum chain).  Under ``shard_map`` the
+  default is ``psum_scatter`` (reduce only owned rows, then re-gather);
+  ``"psum"`` is the original dense replicated AllReduce and ``"alltoall"``
+  routes each shard's owned chunk point-to-point.  See ``docs/sharding.md``
+  for when to use which.
 """
 from __future__ import annotations
 
@@ -155,6 +168,33 @@ def plan_local_gather_device(num_shards: int, rows_per_shard: int,
     return jnp.clip(local, 0, rows_per_shard - 1), owned
 
 
+def plan_unique_gather(
+        layout: ShardedTableLayout, global_ids: np.ndarray,
+        pad_multiple: int = 64,
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Deduplicated host gather plan for ``(V,)`` ids.
+
+    Returns ``(local_ids (S, U), owned (S, U), inverse (V,))`` where ``U``
+    is the unique-id count rounded up to ``pad_multiple`` (static bucket
+    shapes bound jit recompilation across batches).  Padding slots carry a
+    sentinel id ``-1`` that no shard owns, so they gather exact zeros; the
+    exchange moves ``U ≤ V`` rows and ``out[inverse]`` restores the
+    original (duplicated) slot order on device AFTER the exchange —
+    bitwise the same rows, gathered once each.
+    """
+    g = np.asarray(global_ids, dtype=np.int64)
+    if g.ndim != 1:
+        raise ValueError(f"plan_unique_gather expects (V,) ids, "
+                         f"got {g.shape}")
+    uniq, inverse = np.unique(g, return_inverse=True)
+    bucket = max(pad_multiple,
+                 -(-len(uniq) // pad_multiple) * pad_multiple)
+    padded = np.full(bucket, -1, np.int64)
+    padded[:len(uniq)] = uniq
+    local, owned = plan_local_gather(layout, padded)
+    return local, owned, inverse.astype(np.int32)
+
+
 @dataclasses.dataclass
 class ShardedGatherPlan:
     """Host-precomputed per-shard gather indices for one stacked batch.
@@ -164,41 +204,99 @@ class ShardedGatherPlan:
     axis.  Emitted by the input-pipeline collator alongside each batch and
     double-buffered with it, so the device step never computes index
     arithmetic for the embedding exchange.
+
+    With ``dedup=True`` the plan covers each trainer row's UNIQUE ids
+    (bucket-padded with unowned sentinels to a common ``(P, S, U)``) and
+    ``inverse`` is the ``(P, V_b)`` expansion map the device applies after
+    the exchange; without dedup ``inverse`` is ``None``.
     """
 
-    local_ids: np.ndarray   # (P, S, V_b) int32
+    local_ids: np.ndarray   # (P, S, V_b) int32   (V_b = U when deduped)
     owned: np.ndarray       # (P, S, V_b) bool
+    inverse: "np.ndarray | None" = None   # (P, V_b) int32 when deduped
 
     @classmethod
     def for_stacked(cls, layout: ShardedTableLayout,
-                    gather_global: np.ndarray) -> "ShardedGatherPlan":
+                    gather_global: np.ndarray, *, dedup: bool = False,
+                    pad_multiple: int = 64) -> "ShardedGatherPlan":
         """Plan for a trainer-stacked ``(P, V_b)`` global-id array."""
-        local, owned = plan_local_gather(layout, gather_global)  # (S, P, V)
+        if not dedup:
+            local, owned = plan_local_gather(layout, gather_global)
+            return cls(local_ids=np.moveaxis(local, 0, 1),
+                       owned=np.moveaxis(owned, 0, 1))
+        g = np.asarray(gather_global, dtype=np.int64)
+        uniqs, inverses = zip(*(np.unique(row, return_inverse=True)
+                                for row in g))
+        # one bucket size across trainer rows — the stacked plan must be
+        # rectangular, and a shared bucket keeps jit shapes batch-stable
+        bucket = max(pad_multiple,
+                     -(-max(len(u) for u in uniqs) // pad_multiple)
+                     * pad_multiple)
+        padded = np.full((g.shape[0], bucket), -1, np.int64)
+        for p, u in enumerate(uniqs):
+            padded[p, :len(u)] = u
+        local, owned = plan_local_gather(layout, padded)  # (S, P, U)
         return cls(local_ids=np.moveaxis(local, 0, 1),
-                   owned=np.moveaxis(owned, 0, 1))
+                   owned=np.moveaxis(owned, 0, 1),
+                   inverse=np.stack(inverses).astype(np.int32))
 
 
 # ---------------------------------------------------------------------- #
 # Shard-local gather + exchange
 # ---------------------------------------------------------------------- #
-def sharded_gather(table, local_ids, owned, *, axis_name=None):
+SIM_EXCHANGES = ("fused", "masked_sum")
+SPMD_EXCHANGES = ("psum_scatter", "psum", "alltoall")
+
+
+def sharded_gather(table, local_ids, owned, *, axis_name=None,
+                   exchange=None, inverse=None):
     """Gather ``(V_b, d)`` rows from a row-sharded table.
 
     * ``axis_name=None`` (single-device simulation): ``table`` is the full
-      ``(S, rows, d)`` stack; each shard gathers its local ids, non-owned
-      lanes are zeroed, and the sum over the shard axis reconstructs the
-      dense gather (bitwise: one real value + zeros per element).
+      ``(S, rows, d)`` stack.  ``exchange="fused"`` (default) collapses the
+      plan into flat row indices and runs ONE masked gather with a fused
+      scatter-add backward (``repro.kernels.ops.fused_sharded_gather``);
+      ``"masked_sum"`` keeps the original per-shard take → mask → sum
+      chain.  Both are bitwise equal to the dense ``table[ids]`` gather.
     * ``axis_name="model"`` (inside ``shard_map``): ``table`` is this
-      device's ``(1, rows, d)`` block; the masked local gather is exchanged
-      with ``jax.lax.psum`` over the model axis — the AllReduce that
-      replaces replicated-table storage with replicated *activations*.
+      device's ``(1, rows, d)`` block; each device gathers+masks its owned
+      rows locally (fused) and the shards exchange:
+
+      - ``"psum_scatter"`` (default): reduce-scatter the masked rows so
+        each device sums only its ``V/S`` output chunk, then re-gather —
+        same total payload as an AllReduce's reduce phase but no
+        replicated broadcast-side accumulate work per device.
+      - ``"psum"``: the original dense replicated AllReduce.
+      - ``"alltoall"``: route each shard's owned chunk point-to-point,
+        sum the S received chunks locally, re-gather.  Lowest exchange
+        volume when ownership is chunk-aligned; see ``docs/sharding.md``.
+
+      ``V_b`` is padded to a multiple of S around the collective (padding
+      rows are unowned → exact zeros) and sliced back after, so every
+      layout is bitwise equal to ``"psum"`` — each element is one real
+      value plus zeros regardless of where the zeros are summed.
+
+    ``inverse`` (from a deduped plan) expands the exchanged unique rows
+    back to batch slots with ``out[inverse]`` AFTER the exchange, so the
+    exchange payload scales with unique ids, not batch slots.
     """
     import jax
     import jax.numpy as jnp
 
+    from repro.kernels import ops
+
     if axis_name is None:
-        g = jax.vmap(lambda t, i: t[i])(table, local_ids)     # (S, V, d)
-        return jnp.sum(jnp.where(owned[:, :, None], g, 0.0), axis=0)
+        exchange = exchange or "fused"
+        if exchange not in SIM_EXCHANGES:
+            raise ValueError(
+                f"unknown sim exchange {exchange!r}: one of {SIM_EXCHANGES}")
+        if exchange == "fused":
+            out = ops.fused_sharded_gather(table, local_ids, owned)
+        else:
+            g = jax.vmap(lambda t, i: t[i])(table, local_ids)  # (S, V, d)
+            out = jnp.sum(jnp.where(owned[:, :, None], g, 0.0), axis=0)
+        return out if inverse is None else jnp.take(out, inverse, axis=0)
+
     if table.shape[0] != 1:
         # a replicated (S, rows, d) table inside shard_map would gather
         # shard 0's rows against every shard's local ids and psum S wrong
@@ -207,10 +305,36 @@ def sharded_gather(table, local_ids, owned, *, axis_name=None):
             f"sharded_gather under shard_map expects this device's "
             f"(1, rows, d) row block, got {table.shape} — shard the table "
             f"over {axis_name!r} (see kge_param_specs)")
-    s = jax.lax.axis_index(axis_name)
-    x = table[0][local_ids[s]]                                # (V, d)
-    x = jnp.where(owned[s][:, None], x, 0.0)
-    return jax.lax.psum(x, axis_name)
+    exchange = exchange or "psum_scatter"
+    if exchange not in SPMD_EXCHANGES:
+        raise ValueError(
+            f"unknown shard_map exchange {exchange!r}: "
+            f"one of {SPMD_EXCHANGES}")
+    s = local_ids.shape[0]
+    i = jax.lax.axis_index(axis_name)
+    # this device's masked local gather, via the fused S=1 flat-plan path
+    x = ops.fused_sharded_gather(
+        table, jax.lax.dynamic_index_in_dim(local_ids, i, keepdims=True),
+        jax.lax.dynamic_index_in_dim(owned, i, keepdims=True))   # (V, d)
+    if exchange == "psum":
+        out = jax.lax.psum(x, axis_name)
+    else:
+        v = x.shape[0]
+        v_pad = -(-v // s) * s
+        if v_pad != v:
+            x = jnp.pad(x, ((0, v_pad - v), (0, 0)))
+        if exchange == "psum_scatter":
+            y = jax.lax.psum_scatter(
+                x, axis_name, scatter_dimension=0, tiled=True)
+            out = jax.lax.all_gather(y, axis_name, axis=0, tiled=True)
+        else:  # alltoall
+            pieces = jax.lax.all_to_all(
+                x.reshape(s, v_pad // s, x.shape[1]), axis_name,
+                split_axis=0, concat_axis=0)          # (S, V_pad/S, d)
+            out = jax.lax.all_gather(
+                jnp.sum(pieces, axis=0), axis_name, axis=0, tiled=True)
+        out = out[:v]
+    return out if inverse is None else jnp.take(out, inverse, axis=0)
 
 
 def shard_bias_blocks(bias: np.ndarray,

@@ -232,7 +232,12 @@ def kge_param_specs(params: PyTree, mesh: Mesh) -> PyTree:
     row block per model-axis device — requires ``S == mesh.shape['model']``);
     every other leaf is replicated (relation tables are gathered densely in
     compute, so they stay replicated here even though ``_RULES`` records a
-    row-wise storage rule for them)."""
+    row-wise storage rule for them).
+
+    Batch-side plans need no specs here: the ``(P, S, V_b)`` gather plans
+    (deduped or not) ride ``BatchShardings.plan`` through the transfer and
+    the step's leading-axis batch spec, and the ``(P, V_b)`` dedup inverse
+    rides the plain batch placement."""
     model = int(mesh.shape.get("model", 1))
 
     def one(path, leaf):

@@ -35,18 +35,26 @@ LossFn = Callable[[PyTree, Dict[str, jax.Array], jax.Array],
 
 
 def make_simulated_train_step(
-    loss_fn: LossFn, optimizer: Optimizer,
+    loss_fn: LossFn, optimizer: Optimizer, *, donate_batch: bool = False,
 ) -> Callable:
     """Single-device simulation of P trainers: vmap the per-trainer grad,
     average (== AllReduce), one optimizer step.  Batch pytree has a leading
-    trainer axis; keys is (P, 2) PRNG keys."""
+    trainer axis; keys is (P, 2) PRNG keys.
+
+    ``donate_batch`` donates the batch pytree's buffers to the step (the
+    exchange arrays — gather plans, inverse maps — are dead after the step,
+    so XLA can reuse their memory for the exchange outputs).  Only enable
+    it for streamed batches that are never reused (the trainer keeps it off
+    for ``FullGraphPipeline``'s resident batch, and on CPU where donation
+    is a no-op that warns)."""
 
     def grad_one(params, batch, key):
         (loss, aux), grads = jax.value_and_grad(
             loss_fn, has_aux=True)(params, batch, key)
         return loss, aux, grads
 
-    @jax.jit
+    @functools.partial(
+        jax.jit, donate_argnums=(2,) if donate_batch else ())
     def step(params, opt_state, batch, keys):
         loss, aux, grads = jax.vmap(
             grad_one, in_axes=(None, 0, 0))(params, batch, keys)
@@ -69,6 +77,7 @@ def make_spmd_train_step(
     replicate_params_axes: Optional[Sequence[str]] = None,
     param_specs: Optional[Any] = None,
     opt_state_specs: Optional[Any] = None,
+    donate_batch: bool = False,
 ):
     """shard_map train step over a real mesh.
 
@@ -96,6 +105,11 @@ def make_spmd_train_step(
     structure (plain SGD has ``mu=None``; momentum SGD has ``nu=None``)
     needs an explicit ``opt_state_specs`` tree, otherwise shard_map raises
     a pytree-structure error at trace time.
+
+    ``donate_batch`` donates the streamed batch's buffers (gather plans,
+    inverse maps, id arrays are dead after the step — XLA reuses them for
+    the exchange outputs); keep it off for resident batches that are
+    reused across steps (``FullGraphPipeline``).
     """
     data_axes = tuple(data_axes)
     all_axes = tuple(mesh.axis_names)
@@ -146,7 +160,8 @@ def make_spmd_train_step(
         check_rep=False,
     )
 
-    @jax.jit
+    @functools.partial(
+        jax.jit, donate_argnums=(2,) if donate_batch else ())
     def step(params, opt_state, batch, keys):
         return sharded(params, opt_state, batch, keys)
 

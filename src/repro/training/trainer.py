@@ -68,6 +68,13 @@ class TrainConfig:
     #   lands on its own data-axis device, each gather-plan block on its
     #   model-axis device.  Values are bitwise identical to the
     #   single-device transfer; on a 1-device mesh the paths coincide.
+    gather_dedup: bool = False          # dedupe gather plans per trainer
+    #   row in the collator: the embedding exchange then moves each unique
+    #   id once and expands on device (bitwise-identical output; wins grow
+    #   with id skew).  Mini-batch pipelines only — the full-graph resident
+    #   batch is transferred once, so there is nothing to save.
+    gather_exchange: Optional[str] = None  # sharded-gather exchange layout
+    #   (None = per-path default; see sharding.embedding.sharded_gather)
 
 
 class KGETrainer:
@@ -108,6 +115,7 @@ class KGETrainer:
                 dropout=cfg.dropout,
                 use_kernel=cfg.use_kernel,
                 num_table_shards=cfg.num_table_shards,
+                gather_exchange=cfg.gather_exchange,
             ),
             decoder=cfg.decoder,
             num_negatives=cfg.num_negatives,
@@ -129,14 +137,19 @@ class KGETrainer:
         shardings = (self._make_batch_shardings()
                      if cfg.sharded_transfer else None)
         if self._fullgraph:
+            # the resident full-graph batch is reused every epoch, so its
+            # buffers must NOT be donated (and there is nothing to dedup)
             self._step = make_simulated_train_step(
                 self._fullgraph_loss, optimizer)
             self.pipeline: InputPipeline = FullGraphPipeline(
                 self.pre.padded, table_layout=self.pre.table_layout,
                 shardings=shardings)
         else:
+            # streamed batches die after their step — donate their buffers
+            # to the exchange (no-op with a warning on CPU, so gate it)
             self._step = make_simulated_train_step(
-                self._minibatch_loss, optimizer)
+                self._minibatch_loss, optimizer,
+                donate_batch=jax.default_backend() != "cpu")
             self.pipeline = make_input_pipeline(
                 cfg.pipeline, self.pre.partitions,
                 batch_size=cfg.batch_size,
@@ -149,6 +162,7 @@ class KGETrainer:
                 prefetch=cfg.prefetch,
                 table_layout=self.pre.table_layout,
                 shardings=shardings,
+                dedup_gather=cfg.gather_dedup,
             )
 
     def _make_batch_shardings(self):

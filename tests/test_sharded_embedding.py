@@ -134,6 +134,226 @@ class TestShardedGatherBitwise:
             sharded_gather(shards, jnp.asarray(li), jnp.asarray(ow),
                            axis_name="model")
 
+    @pytest.mark.parametrize("s", SHARD_COUNTS + (8,))
+    def test_fused_matches_chain_exchange(self, s):
+        """The fused flat-index default is bitwise the original
+        take -> mask -> sum chain, forward and grad."""
+        v, d = 301, 16
+        table = jax.random.normal(jax.random.PRNGKey(1), (v, d))
+        ids = np.array([5, 3, 5, 0, v - 1, 3, 299, 150, 150, 7, 0, v - 1],
+                       np.int32)
+        lay = ShardedTableLayout(v, s)
+        shards = shard_table(table, lay)
+        li, ow = plan_local_gather(lay, ids)
+        li, ow = jnp.asarray(li), jnp.asarray(ow)
+        np.testing.assert_array_equal(
+            np.asarray(sharded_gather(shards, li, ow, exchange="fused")),
+            np.asarray(sharded_gather(shards, li, ow,
+                                      exchange="masked_sum")))
+        w = jnp.arange(1.0, d + 1)
+        g_f = jax.grad(lambda t: jnp.sum(jnp.tanh(sharded_gather(
+            t, li, ow, exchange="fused")) * w))(shards)
+        g_c = jax.grad(lambda t: jnp.sum(jnp.tanh(sharded_gather(
+            t, li, ow, exchange="masked_sum")) * w))(shards)
+        np.testing.assert_array_equal(np.asarray(g_f), np.asarray(g_c))
+
+    def test_unknown_exchange_rejected(self):
+        lay = ShardedTableLayout(40, 2)
+        shards = shard_table(jnp.ones((40, 4)), lay)
+        li, ow = plan_local_gather(lay, np.arange(8))
+        li, ow = jnp.asarray(li), jnp.asarray(ow)
+        with pytest.raises(ValueError, match="unknown sim exchange"):
+            sharded_gather(shards, li, ow, exchange="psum")
+        with pytest.raises(ValueError, match="unknown shard_map exchange"):
+            jax.vmap(lambda t: sharded_gather(
+                t[None], li, ow, axis_name="model", exchange="fused"),
+                axis_name="model")(shards)
+
+
+# ====================================================================== #
+# Exchange layouts under a named axis: psum / psum_scatter / alltoall
+# ====================================================================== #
+class TestExchangeLayouts:
+    """``jax.vmap(axis_name=...)`` drives the shard_map code path (same
+    collectives, rank-1 mesh semantics) cheaply on one device: every
+    exchange layout must be bitwise equal to the dense gather, including
+    a V that is NOT a multiple of S (the pad-around-collective path)."""
+
+    @pytest.mark.parametrize("s", SHARD_COUNTS + (8,))
+    @pytest.mark.parametrize("exchange",
+                             ("psum", "psum_scatter", "alltoall"))
+    def test_exchange_bitwise_vs_dense(self, s, exchange):
+        v, d, nids = 301, 16, 41        # 41 % s != 0 for s in (2, 4, 8)
+        rng = np.random.default_rng(s)
+        table = jax.random.normal(jax.random.PRNGKey(2), (v, d))
+        ids = np.concatenate([rng.integers(0, v, nids - 4),
+                              [0, v - 1, 5, 5]]).astype(np.int32)
+        lay = ShardedTableLayout(v, s)
+        shards = shard_table(table, lay)
+        li, ow = plan_local_gather(lay, ids)
+        li, ow = jnp.asarray(li), jnp.asarray(ow)
+        out = jax.vmap(lambda t: sharded_gather(
+            t[None], li, ow, axis_name="model", exchange=exchange),
+            axis_name="model")(shards)
+        dense = np.asarray(table[ids])
+        for shard in range(s):          # exchange output is replicated
+            np.testing.assert_array_equal(np.asarray(out[shard]), dense)
+
+    @pytest.mark.parametrize("exchange",
+                             ("psum", "psum_scatter", "alltoall"))
+    def test_exchange_grads_bitwise_vs_dense(self, exchange):
+        v, d, s = 201, 8, 4
+        table = jax.random.normal(jax.random.PRNGKey(3), (v, d))
+        ids = np.array([7, 7, 0, v - 1, 50, 50, 50, 3, 9], np.int32)
+        lay = ShardedTableLayout(v, s)
+        shards = shard_table(table, lay)
+        li, ow = plan_local_gather(lay, ids)
+        li, ow = jnp.asarray(li), jnp.asarray(ow)
+        w = jnp.arange(1.0, d + 1)
+
+        def loss(stack):
+            out = jax.vmap(lambda t: sharded_gather(
+                t[None], li, ow, axis_name="model", exchange=exchange),
+                axis_name="model")(stack)
+            # each shard computes the SAME loss on the replicated output;
+            # take shard 0's (they are identical) to mimic the spmd step
+            return jnp.sum(jnp.tanh(out[0]) * w)
+
+        g_sh = jax.grad(loss)(shards)
+        g_d = jax.grad(lambda t: jnp.sum(jnp.tanh(t[ids]) * w))(table)
+        np.testing.assert_array_equal(
+            np.asarray(unshard_table(g_sh, v)), np.asarray(g_d))
+
+
+# ====================================================================== #
+# Plan dedup: unique-id gather + on-device inverse expansion
+# ====================================================================== #
+class TestDedupPlans:
+    def _check(self, lay, table, dense, ids, pad_multiple=8):
+        from repro.sharding.embedding import plan_unique_gather
+        li, ow, inv = plan_unique_gather(lay, ids,
+                                         pad_multiple=pad_multiple)
+        u = len(np.unique(ids))
+        assert li.shape[1] % pad_multiple == 0 and li.shape[1] >= u
+        # padding slots are owned by NO shard -> exact zero rows
+        np.testing.assert_array_equal(ow.sum(axis=0)[:u], np.ones(u))
+        np.testing.assert_array_equal(ow.sum(axis=0)[u:],
+                                      np.zeros(li.shape[1] - u))
+        out = sharded_gather(table, jnp.asarray(li), jnp.asarray(ow),
+                             inverse=jnp.asarray(inv))
+        np.testing.assert_array_equal(np.asarray(out),
+                                      np.asarray(dense[ids]))
+        return li, ow, inv
+
+    @pytest.mark.parametrize("s", SHARD_COUNTS + (8,))
+    def test_dedup_bitwise_vs_dense(self, s):
+        v, d = 301, 16
+        dense = jax.random.normal(jax.random.PRNGKey(4), (v, d))
+        lay = ShardedTableLayout(v, s)
+        table = shard_table(dense, lay)
+        ids = np.array([5, 3, 5, 0, v - 1, 3, 299, 150, 150, 7, 0, v - 1],
+                       np.int32)
+        li, _, _ = self._check(lay, table, dense, ids)
+        assert li.shape[1] < len(ids) + 8   # it actually deduped
+
+    def test_all_duplicate_batch(self):
+        """Every slot the same id: one exchanged row, V-way expansion, and
+        the gradient accumulates V cotangents into ONE row — bitwise equal
+        to the dense gather's scatter-add."""
+        v, d, s = 120, 8, 4
+        dense = jax.random.normal(jax.random.PRNGKey(5), (v, d))
+        lay = ShardedTableLayout(v, s)
+        table = shard_table(dense, lay)
+        ids = np.full(17, 42, np.int32)
+        from repro.sharding.embedding import plan_unique_gather
+        li, ow, inv = self._check(lay, table, dense, ids)
+        assert ow.sum() == 1                      # one owned slot total
+        w = jnp.arange(1.0, d + 1)
+        g_sh = jax.grad(lambda t: jnp.sum(jnp.tanh(sharded_gather(
+            t, jnp.asarray(li), jnp.asarray(ow),
+            inverse=jnp.asarray(inv))) * w))(table)
+        g_d = jax.grad(
+            lambda t: jnp.sum(jnp.tanh(t[ids]) * w))(dense)
+        np.testing.assert_array_equal(
+            np.asarray(unshard_table(g_sh, v)), np.asarray(g_d))
+
+    def test_single_shard_batch(self):
+        """A batch whose ids all live on one shard: the other shards own
+        nothing and contribute exact zeros."""
+        v, d, s = 200, 8, 4
+        dense = jax.random.normal(jax.random.PRNGKey(6), (v, d))
+        lay = ShardedTableLayout(v, s)
+        table = shard_table(dense, lay)
+        rows = lay.rows_per_shard
+        ids = np.arange(2 * rows, 2 * rows + 10, dtype=np.int32)  # shard 2
+        li, ow, _ = self._check(lay, table, dense, ids)
+        assert (ow[[0, 1, 3]] == 0).all() and ow[2].sum() == 10
+
+    def test_empty_shards_on_ragged_block(self):
+        """Ragged last shard (301 rows / 4 shards -> 3 pad rows): ids
+        clustered at the front leave the tail shard completely unowned,
+        and the layout's zero-padded tail rows are never touched."""
+        v, d, s = 301, 8, 4
+        dense = jax.random.normal(jax.random.PRNGKey(7), (v, d))
+        lay = ShardedTableLayout(v, s)
+        assert lay.padded_rows > v   # genuinely ragged
+        table = shard_table(dense, lay)
+        ids = np.array([0, 1, 2, 1, 0, 2, 2], np.int32)
+        li, ow, inv = self._check(lay, table, dense, ids)
+        assert ow[-1].sum() == 0     # tail shard owns nothing
+        g_sh = jax.grad(lambda t: jnp.sum(sharded_gather(
+            t, jnp.asarray(li), jnp.asarray(ow),
+            inverse=jnp.asarray(inv)) ** 2))(table)
+        pad = np.asarray(g_sh).reshape(-1, d)[v:]
+        assert (pad == 0).all()      # padding rows get exactly zero grad
+
+    def test_grad_accumulation_head_and_tail_dup(self):
+        """One id in both the first and last slot: the inverse expansion's
+        transpose must accumulate both slots' cotangents into the single
+        exchanged row — bitwise vs dense (same scatter-add order)."""
+        v, d, s = 150, 8, 2
+        dense = jax.random.normal(jax.random.PRNGKey(8), (v, d))
+        lay = ShardedTableLayout(v, s)
+        table = shard_table(dense, lay)
+        ids = np.array([99] + list(range(10, 20)) + [99], np.int32)
+        from repro.sharding.embedding import plan_unique_gather
+        li, ow, inv = plan_unique_gather(lay, ids, pad_multiple=8)
+        li, ow, inv = jnp.asarray(li), jnp.asarray(ow), jnp.asarray(inv)
+        # distinct per-slot weights so head/tail cotangents differ
+        w = jnp.arange(1.0, len(ids) + 1)[:, None] * jnp.arange(1.0, d + 1)
+        g_sh = jax.grad(lambda t: jnp.sum(jnp.tanh(sharded_gather(
+            t, li, ow, inverse=inv)) * w))(table)
+        g_d = jax.grad(lambda t: jnp.sum(jnp.tanh(t[ids]) * w))(dense)
+        np.testing.assert_array_equal(
+            np.asarray(unshard_table(g_sh, v)), np.asarray(g_d))
+
+    def test_stacked_dedup_plan(self):
+        """for_stacked(dedup=True): per-row uniques share one bucket, and
+        every row's inverse expansion reproduces its dense gather."""
+        lay = ShardedTableLayout(100, 4)
+        g = np.array([[7, 7, 7, 7, 7, 7],          # 1 unique
+                      [0, 99, 0, 99, 50, 50],      # 3 uniques
+                      [1, 2, 3, 4, 5, 6]], np.int32)   # 6 uniques
+        plan = ShardedGatherPlan.for_stacked(lay, g, dedup=True,
+                                             pad_multiple=4)
+        assert plan.local_ids.shape == (3, 4, 8)   # bucket = ceil(6/4)*4
+        assert plan.inverse.shape == g.shape
+        dense = jax.random.normal(jax.random.PRNGKey(9), (100, 8))
+        table = shard_table(dense, lay)
+        for p in range(3):
+            out = sharded_gather(
+                table, jnp.asarray(plan.local_ids[p]),
+                jnp.asarray(plan.owned[p]),
+                inverse=jnp.asarray(plan.inverse[p]))
+            np.testing.assert_array_equal(np.asarray(out),
+                                          np.asarray(dense[g[p]]))
+
+    def test_plan_unique_rejects_stacked_input(self):
+        from repro.sharding.embedding import plan_unique_gather
+        with pytest.raises(ValueError, match="expects"):
+            plan_unique_gather(ShardedTableLayout(10, 2),
+                               np.zeros((2, 3), np.int32))
+
 
 # ====================================================================== #
 # Model-level equivalence: vertex_input / losses / gradients
@@ -260,6 +480,43 @@ class TestTrainerEquivalence:
                 tr.close()
             assert losses[1] == losses[2] == losses[4], (batch_size, losses)
             assert mrrs[1] == mrrs[2] == mrrs[4], (batch_size, mrrs)
+
+    def test_dedup_training_matches(self):
+        """gather_dedup rearranges the exchange payload, never the math:
+        the full loss trajectory is identical to the non-deduped run."""
+        from repro.data import synthetic_fb15k
+        from repro.training import KGETrainer, TrainConfig
+        splits = synthetic_fb15k(scale=0.01, seed=3)
+        losses = {}
+        for dedup in (False, True):
+            tr = KGETrainer(splits, TrainConfig(
+                num_trainers=2, epochs=2, hidden_dim=16, batch_size=64,
+                num_negatives=1, learning_rate=0.01, seed=0,
+                num_table_shards=2, gather_dedup=dedup))
+            if dedup:   # the deduped batch really carries the inverse map
+                batch = next(tr.pipeline.device_batches(1))
+                assert "shard_inverse" in batch
+                assert batch["shard_local_ids"].shape[-1] <= \
+                    batch["shard_inverse"].shape[-1] + 64
+            losses[dedup] = [h["loss"] for h in tr.fit()]
+            tr.close()
+        assert losses[False] == losses[True]
+
+    def test_masked_sum_exchange_training_matches_fused(self):
+        """The legacy chain exchange and the fused default train
+        identically (the fused path's bitwise contract, trainer-level)."""
+        from repro.data import synthetic_fb15k
+        from repro.training import KGETrainer, TrainConfig
+        splits = synthetic_fb15k(scale=0.01, seed=3)
+        losses = {}
+        for exchange in (None, "masked_sum"):
+            tr = KGETrainer(splits, TrainConfig(
+                num_trainers=2, epochs=2, hidden_dim=16, batch_size=64,
+                num_negatives=1, learning_rate=0.01, seed=0,
+                num_table_shards=2, gather_exchange=exchange))
+            losses[exchange] = [h["loss"] for h in tr.fit()]
+            tr.close()
+        assert losses[None] == losses["masked_sum"]
 
     def test_feature_mode_rejects_sharding(self):
         from repro.data import synthetic_citation2
@@ -446,6 +703,25 @@ _, _, m2b = step_sim(p2, o2, batch, keys2)
 np.testing.assert_allclose(float(m1b["loss"]), float(m2b["loss"]),
                            rtol=1e-3)
 assert float(m1b["loss"]) < float(m1["loss"])    # it is actually learning
+
+# every exchange layout over the REAL 2-device axis is bitwise equal to
+# the dense replicated psum: same loss, same updated params, bit for bit
+ref_p = ref_m = None
+for exchange in ("psum", "psum_scatter", "alltoall"):
+    cfg_x = KGEConfig(rgcn=dataclasses.replace(
+        cfg.rgcn, gather_exchange=exchange))
+    step_x = make_spmd_train_step(
+        lambda p, b, k: fullgraph_loss(p, cfg_x, b, k, train=False,
+                                       model_axis="model"),
+        opt, mesh, param_specs=kge_param_specs(params, mesh))
+    p_x, _, m_x = step_x(params, opt.init(params), batch, keys)
+    if ref_p is None:
+        ref_p, ref_m = p_x, m_x
+    else:
+        assert float(m_x["loss"]) == float(ref_m["loss"]), exchange
+        for a, b in zip(jax.tree_util.tree_leaves(p_x),
+                        jax.tree_util.tree_leaves(ref_p)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 print("TWO_DEVICE_OK")
 """
 
