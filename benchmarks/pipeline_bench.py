@@ -26,14 +26,29 @@ EMBED_JSON_PATH = os.path.join(os.path.dirname(__file__), "..",
                                "BENCH_embedding.json")
 
 
+def _hbm_per_device(tr) -> int:
+    """Max bytes any one device holds for params + optimizer state (the
+    spmd row's capacity headline: row-sharding the entity table divides
+    its — and its adam moments' — footprint across the model axis)."""
+    import jax
+    per: Dict[int, int] = {}
+    for arr in jax.tree_util.tree_leaves((tr.params, tr.opt_state)):
+        if not hasattr(arr, "addressable_shards"):
+            continue
+        for sh in arr.addressable_shards:
+            per[sh.device.id] = per.get(sh.device.id, 0) + sh.data.nbytes
+    return max(per.values()) if per else 0
+
+
 def _measure(splits, kind: str, quick: bool,
-             sharded_transfer: bool = False) -> Dict[str, float]:
+             sharded_transfer: bool = False,
+             spmd=None) -> Dict[str, float]:
     from repro.training import KGETrainer, TrainConfig
 
     tr = KGETrainer(splits, TrainConfig(
         num_trainers=4, strategy="vertex_cut", num_hops=2, hidden_dim=32,
         num_negatives=1, batch_size=256, learning_rate=0.01, seed=0,
-        pipeline=kind, sharded_transfer=sharded_transfer))
+        pipeline=kind, sharded_transfer=sharded_transfer, spmd=spmd))
     tr.train_epoch()                      # warmup + compile epoch
     epochs = 2 if quick else 5
     walls, recs = [], []
@@ -53,6 +68,7 @@ def _measure(splits, kind: str, quick: bool,
         "overlap_fraction": float(np.median(
             [r["overlap_fraction"] for r in recs])),
         "num_batches": int(recs[0]["num_batches"]),
+        "hbm_per_device_bytes": _hbm_per_device(tr),
     }
 
 
@@ -68,6 +84,12 @@ def run(quick: bool = True) -> List[Dict]:
     # real mesh it buys the per-device slice placement)
     results["async_sharded"] = _measure(splits, "async", quick,
                                         sharded_transfer=True)
+    # the REAL shard_map step (spmd=True forces it even on the 1-device
+    # box, where the 1x1 mesh measures pure shard_map dispatch overhead
+    # vs the vmap simulation; on a multi-device host it runs the mesh
+    # fit_spmd_mesh picks) — step time + per-device param/opt-state HBM
+    import jax
+    results["spmd"] = _measure(splits, "async", quick, spmd=True)
     speedup = results["serial"]["epoch_wall_s"] / \
         max(results["async"]["epoch_wall_s"], 1e-9)
 
@@ -76,10 +98,12 @@ def run(quick: bool = True) -> List[Dict]:
         "graph": {"entities": int(kg.num_entities),
                   "edges": int(kg.num_edges)},
         "config": {"trainers": 4, "batch_size": 256, "num_hops": 2,
-                   "hidden_dim": 32, "quick": quick},
+                   "hidden_dim": 32, "quick": quick,
+                   "devices": int(jax.device_count())},
         "serial": results["serial"],
         "async": results["async"],
         "async_sharded_transfer": results["async_sharded"],
+        "spmd": results["spmd"],
         "async_speedup": round(speedup, 3),
     }
     with open(JSON_PATH, "w") as f:
@@ -87,7 +111,7 @@ def run(quick: bool = True) -> List[Dict]:
         f.write("\n")
 
     rows = []
-    for kind in ("serial", "async", "async_sharded"):
+    for kind in ("serial", "async", "async_sharded", "spmd"):
         r = results[kind]
         rows.append({
             "name": kind,
@@ -96,6 +120,8 @@ def run(quick: bool = True) -> List[Dict]:
             "epoch_wall_s": round(r["epoch_wall_s"], 3),
             "host_exposed_s": round(r["host_exposed_s"], 3),
             "overlap": round(r["overlap_fraction"], 3),
+            "hbm_per_device_mib":
+                round(r["hbm_per_device_bytes"] / 2**20, 2),
         })
     rows.append({
         "name": "speedup",

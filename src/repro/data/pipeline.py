@@ -70,7 +70,8 @@ from repro.core.minibatch import (
     stack_minibatches,
 )
 from repro.sharding.embedding import (
-    ShardedGatherPlan, ShardedTableLayout, plan_local_gather,
+    PLAN_BATCH_KEYS, ShardedGatherPlan, ShardedTableLayout,
+    plan_local_gather,
 )
 
 
@@ -542,10 +543,9 @@ class FullGraphPipeline(InputPipeline):
                 self._device = {k: jnp.asarray(v)
                                 for k, v in self._host.items()}
             else:
-                plan_keys = ("shard_local_ids", "shard_owned")
                 self._device = {
                     k: jax.device_put(
-                        v, self.shardings.plan if k in plan_keys
+                        v, self.shardings.plan if k in PLAN_BATCH_KEYS
                         else self.shardings.batch)
                     for k, v in self._host.items()}
         self._stats = PipelineStats(num_batches=1)

@@ -48,6 +48,29 @@ def make_host_mesh(data: int = 1, model: int = 1) -> Mesh:
     return _make_mesh((data, model), ("data", "model"), devices)
 
 
+def fit_spmd_mesh(num_trainers: int, num_table_shards: int,
+                  ndev: "int | None" = None) -> "tuple[int, int] | None":
+    """``(data, model)`` shape for the trainer's spmd step, or ``None``
+    when the local devices cannot host it.
+
+    The ``model`` axis must be EXACTLY ``num_table_shards`` — the
+    row-sharded entity table places one ``(rows, d)`` block per model-axis
+    device (``kge_param_specs`` enforces ``S == mesh.shape['model']``); a
+    dense table (``num_table_shards == 1``) means a 1-wide model axis.
+    The ``data`` axis is the largest divisor of ``num_trainers`` that fits
+    the remaining devices (partitions must split evenly over it —
+    ``BatchShardings.check``).  The same rule drives ``--spmd`` auto-on in
+    the CLI and ``TrainConfig.spmd=None`` auto-detection.
+    """
+    ndev = jax.device_count() if ndev is None else ndev
+    model = max(num_table_shards, 1)
+    if model > ndev:
+        return None
+    data = max(d for d in range(1, ndev // model + 1)
+               if num_trainers % d == 0)
+    return data, model
+
+
 # TPU v5e hardware constants used by the roofline (EXPERIMENTS.md §Roofline)
 PEAK_FLOPS_BF16 = 197e12        # FLOP/s per chip
 HBM_BW = 819e9                  # bytes/s per chip

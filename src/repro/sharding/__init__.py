@@ -1,7 +1,8 @@
 """Sharding rules: 2-D (fsdp × tensor) parameter layout, batch/cache specs,
 and the model-axis row-sharded embedding table (``repro.sharding.embedding``)."""
 from repro.sharding.embedding import (
-    ShardedGatherPlan, ShardedTableLayout, convert_table_layout,
+    PLAN_BATCH_KEYS, ShardedGatherPlan, ShardedTableLayout,
+    convert_table_layout,
     plan_local_gather, plan_local_gather_block, plan_local_gather_device,
     shard_bias_blocks, shard_table, shard_table_block, sharded_gather,
     unshard_table,
@@ -9,6 +10,6 @@ from repro.sharding.embedding import (
 from repro.sharding.rules import (
     param_shardings, opt_state_shardings, batch_shardings, cache_shardings,
     kge_param_specs, spec_for_param, spec_for_batch_leaf, spec_for_cache_leaf,
-    fsdp_axes,
+    fsdp_axes, tree_named_shardings,
 )
 __all__ = [n for n in dir() if not n.startswith("_")]

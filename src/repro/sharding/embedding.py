@@ -247,6 +247,67 @@ class ShardedGatherPlan:
 SIM_EXCHANGES = ("fused", "masked_sum")
 SPMD_EXCHANGES = ("psum_scatter", "psum", "alltoall")
 
+# batch keys carrying the stacked (P, S, V_b) sharded-gather plan: the
+# transfer (``BatchShardings.plan``) and the spmd step's ``in_specs`` place
+# them over BOTH the trainer (data) and shard (model) axes, so each device
+# receives its own pre-sliced plan block
+PLAN_BATCH_KEYS = ("shard_local_ids", "shard_owned")
+
+# custom-VJP exchange closures, cached per (axis_name, exchange) so repeated
+# traces reuse one function identity (stable jit cache keys)
+_EXCHANGE_FNS: dict = {}
+
+
+def _replicated_exchange(axis_name: str, exchange: str):
+    """The named-axis exchange collective with a REPLICATED-LOSS backward.
+
+    Forward: sum each device's masked owned-row block ``(V_pad, d)`` over
+    ``axis_name`` into the replicated gather output (via ``psum``,
+    ``psum_scatter`` + re-gather, or ``alltoall`` + local sum + re-gather —
+    all bitwise equal: each element is one real value plus zeros).
+
+    Backward: IDENTITY, not the collective transpose.  The SPMD training
+    contract is that everything downstream of the exchange is replicated
+    along ``axis_name`` (same batch slice, same replicated weights on every
+    model-axis device), so each device's incoming cotangent already IS the
+    full cotangent.  jax's default transpose of ``psum`` is ``psum`` —
+    under ``shard_map(check_rep=False)`` (rep-tracking cannot be enabled
+    for this body) that sums the S identical cotangent replicas and scales
+    the entity-table gradient by S, which adam's scale-invariant first
+    step masked historically.  Passing the cotangent through once is exact
+    for any S; ``tests/test_sharded_embedding.py`` gates the whole step
+    bitwise against the dense reference.
+    """
+    key = (axis_name, exchange)
+    fn = _EXCHANGE_FNS.get(key)
+    if fn is not None:
+        return fn
+    import jax
+    import jax.numpy as jnp
+
+    def collective(x):
+        if exchange == "psum":
+            return jax.lax.psum(x, axis_name)
+        if exchange == "psum_scatter":
+            y = jax.lax.psum_scatter(
+                x, axis_name, scatter_dimension=0, tiled=True)
+            return jax.lax.all_gather(y, axis_name, axis=0, tiled=True)
+        s = jax.lax.psum(1, axis_name)            # static axis size
+        pieces = jax.lax.all_to_all(
+            x.reshape(s, x.shape[0] // s, x.shape[1]), axis_name,
+            split_axis=0, concat_axis=0)          # (S, V_pad/S, d)
+        return jax.lax.all_gather(
+            jnp.sum(pieces, axis=0), axis_name, axis=0, tiled=True)
+
+    @jax.custom_vjp
+    def exchange_fn(x):
+        return collective(x)
+
+    exchange_fn.defvjp(lambda x: (collective(x), None),
+                       lambda _res, ct: (ct,))
+    _EXCHANGE_FNS[key] = exchange_fn
+    return exchange_fn
+
 
 def sharded_gather(table, local_ids, owned, *, axis_name=None,
                    exchange=None, inverse=None):
@@ -275,6 +336,14 @@ def sharded_gather(table, local_ids, owned, *, axis_name=None,
       rows are unowned → exact zeros) and sliced back after, so every
       layout is bitwise equal to ``"psum"`` — each element is one real
       value plus zeros regardless of where the zeros are summed.
+
+      The plan may be the replicated ``(S, V_b)`` stack (each device picks
+      its own row) or this device's pre-sliced ``(1, V_b)`` block (the
+      sharded-transfer placement).  The exchange's backward passes each
+      device's cotangent through ONCE (see ``_replicated_exchange``): the
+      loss downstream must be replicated along ``axis_name`` — the SPMD
+      training contract — otherwise the default collective transpose
+      would scale the table gradient by S.
 
     ``inverse`` (from a deduped plan) expands the exchanged unique rows
     back to batch slots with ``out[inverse]`` AFTER the exchange, so the
@@ -310,30 +379,29 @@ def sharded_gather(table, local_ids, owned, *, axis_name=None,
         raise ValueError(
             f"unknown shard_map exchange {exchange!r}: "
             f"one of {SPMD_EXCHANGES}")
-    s = local_ids.shape[0]
-    i = jax.lax.axis_index(axis_name)
+    if local_ids.shape[0] == 1:
+        # pre-sliced per-device plan block: the sharded transfer
+        # (BatchShardings) places each shard's (1, V_b) plan block on its
+        # own model-axis device and the spmd step's in_specs keep it there,
+        # so the plan is never replicated over the model axis
+        li, ow = local_ids, owned
+        s = jax.lax.psum(1, axis_name)            # static axis size
+    else:
+        # replicated (S, V_b) plan: pick this device's row
+        i = jax.lax.axis_index(axis_name)
+        li = jax.lax.dynamic_index_in_dim(local_ids, i, keepdims=True)
+        ow = jax.lax.dynamic_index_in_dim(owned, i, keepdims=True)
+        s = local_ids.shape[0]
     # this device's masked local gather, via the fused S=1 flat-plan path
-    x = ops.fused_sharded_gather(
-        table, jax.lax.dynamic_index_in_dim(local_ids, i, keepdims=True),
-        jax.lax.dynamic_index_in_dim(owned, i, keepdims=True))   # (V, d)
+    x = ops.fused_sharded_gather(table, li, ow)                  # (V, d)
     if exchange == "psum":
-        out = jax.lax.psum(x, axis_name)
+        out = _replicated_exchange(axis_name, exchange)(x)
     else:
         v = x.shape[0]
         v_pad = -(-v // s) * s
         if v_pad != v:
             x = jnp.pad(x, ((0, v_pad - v), (0, 0)))
-        if exchange == "psum_scatter":
-            y = jax.lax.psum_scatter(
-                x, axis_name, scatter_dimension=0, tiled=True)
-            out = jax.lax.all_gather(y, axis_name, axis=0, tiled=True)
-        else:  # alltoall
-            pieces = jax.lax.all_to_all(
-                x.reshape(s, v_pad // s, x.shape[1]), axis_name,
-                split_axis=0, concat_axis=0)          # (S, V_pad/S, d)
-            out = jax.lax.all_gather(
-                jnp.sum(pieces, axis=0), axis_name, axis=0, tiled=True)
-        out = out[:v]
+        out = _replicated_exchange(axis_name, exchange)(x)[:v]
     return out if inverse is None else jnp.take(out, inverse, axis=0)
 
 

@@ -250,3 +250,21 @@ def kge_param_specs(params: PyTree, mesh: Mesh) -> PyTree:
             return P("model", None, None)
         return P()
     return jax.tree_util.tree_map_with_path(one, params)
+
+
+def tree_named_shardings(spec_tree: PyTree, mesh: Mesh) -> PyTree:
+    """PartitionSpec tree → ``NamedSharding`` tree for ``jax.device_put``.
+
+    Places a params (or optimizer-state) pytree on the mesh BEFORE the
+    first spmd step, so the row-sharded entity table and its moments start
+    — and stay — distributed instead of being resharded out of a
+    replicated copy on the first dispatch.  A single ``PartitionSpec``
+    (e.g. the ``P()`` every-leaf default) broadcasts over the whole tree;
+    ``None`` subtrees (absent SGD moments) pass through untouched.
+    """
+    def one(spec):
+        return NamedSharding(mesh, spec)
+    if isinstance(spec_tree, P):
+        return one(spec_tree)
+    return jax.tree_util.tree_map(
+        one, spec_tree, is_leaf=lambda x: isinstance(x, P))

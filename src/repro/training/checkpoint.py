@@ -51,10 +51,25 @@ def save_checkpoint(directory: str, step: int, tree: PyTree,
 
 
 def _garbage_collect(directory: str, keep: int) -> None:
-    ckpts = sorted(
-        f for f in os.listdir(directory)
-        if re.fullmatch(r"ckpt_\d+\.npz", f))
-    for old in ckpts[:-keep] if keep else []:
+    """Prune old checkpoints, newest ``keep`` retained.
+
+    ``keep <= 0`` means KEEP EVERYTHING — an explicit contract, not the
+    accident of ``ckpts[:-0]`` being empty (``ckpts[:-keep] if keep`` only
+    worked for 0; a negative keep would have deleted the newest files).
+    Orphaned ``.json`` manifests whose ``.npz`` payload is gone (partial
+    copy, crashed save, out-of-band cleanup) are removed either way so
+    ``latest_checkpoint`` and the GC window never count phantom steps.
+    """
+    names = os.listdir(directory)
+    ckpts = sorted(f for f in names if re.fullmatch(r"ckpt_\d+\.npz", f))
+    live = set(ckpts)
+    for f in names:
+        if re.fullmatch(r"ckpt_\d+\.json", f) and \
+                f.replace(".json", ".npz") not in live:
+            os.remove(os.path.join(directory, f))
+    if keep <= 0:
+        return
+    for old in ckpts[:-keep]:
         os.remove(os.path.join(directory, old))
         j = os.path.join(directory, old.replace(".npz", ".json"))
         if os.path.exists(j):
@@ -68,6 +83,15 @@ def latest_checkpoint(directory: str) -> Optional[str]:
         f for f in os.listdir(directory)
         if re.fullmatch(r"ckpt_\d+\.npz", f))
     return os.path.join(directory, ckpts[-1]) if ckpts else None
+
+
+def read_metadata(path: str) -> Tuple[int, Dict]:
+    """``(step, metadata)`` from a checkpoint's JSON manifest — the
+    trainer-side state (epoch counter, PRNG key) that must survive a
+    resume lives here, next to (not inside) the array tree."""
+    with open(path.replace(".npz", ".json")) as f:
+        manifest = json.load(f)
+    return manifest["step"], manifest.get("metadata", {})
 
 
 def restore_checkpoint(path: str, like: PyTree,

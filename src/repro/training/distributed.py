@@ -26,7 +26,12 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.training.optimizer import Optimizer, OptState, apply_updates
+# plan-carrying batch keys, defined next to the plan layout: the spmd step
+# shards them P(data, model) in its in_specs to match the
+# BatchShardings.plan transfer placement (per-device plan blocks arrive
+# pre-sliced — no resharding on dispatch)
+from repro.sharding.embedding import PLAN_BATCH_KEYS
+from repro.training.optimizer import Optimizer, apply_updates
 
 PyTree = Any
 # loss_fn(params, batch_slice, key) -> (loss, aux)
@@ -69,6 +74,29 @@ def make_simulated_train_step(
     return step
 
 
+def derive_opt_state_specs(opt_state: Any, params: Any,
+                           param_specs: Any) -> Any:
+    """PartitionSpec tree for an optimizer state, derived from its ACTUAL
+    structure (``optimizer.init(params)``): any subtree mirroring the
+    params structure (adam's mu/nu moments, SGD's momentum buffer) gets
+    ``param_specs`` — moments shard exactly like their parameters — and
+    every other leaf (the step counter) stays replicated.  ``None``
+    subtrees (plain SGD's missing moments) are empty pytrees and stay
+    ``None``, so the spec tree always matches the state the optimizer
+    really built — no more hardcoded adam-shaped
+    ``OptState(step, mu, nu)`` default that trace-errored for SGD.
+    """
+    p_struct = jax.tree_util.tree_structure(params)
+
+    def params_like(sub) -> bool:
+        return jax.tree_util.tree_structure(sub) == p_struct
+
+    return jax.tree_util.tree_map(
+        lambda sub: param_specs if params_like(sub) else P(),
+        opt_state, is_leaf=params_like)
+
+
+
 def make_spmd_train_step(
     loss_fn: LossFn,
     optimizer: Optimizer,
@@ -77,6 +105,7 @@ def make_spmd_train_step(
     replicate_params_axes: Optional[Sequence[str]] = None,
     param_specs: Optional[Any] = None,
     opt_state_specs: Optional[Any] = None,
+    model_axis: Optional[str] = None,
     donate_batch: bool = False,
 ):
     """shard_map train step over a real mesh.
@@ -92,19 +121,25 @@ def make_spmd_train_step(
     ``repro.sharding.kge_param_specs``) opts individual parameters out of
     replication: a model-axis row-sharded entity table
     (``repro.sharding.embedding``) stays sharded through the step — its
-    gradients are shard-local by construction (the forward psum exchange
-    broadcasts the cotangent, each shard scatter-adds only its own rows),
-    so they are pmean'd over ``data_axes`` only, like every other leaf, and
-    the optimizer updates each row block in place.  The ``loss_fn`` must
-    perform the shard-local gather + exchange itself (pass
-    ``model_axis="model"`` into the model's ``vertex_input`` path).
+    gradients are shard-local by construction (the exchange's backward
+    passes each device's replicated cotangent through once, each shard
+    scatter-adds only its own rows), so they are pmean'd over
+    ``data_axes`` only, like every other leaf, and the optimizer updates
+    each row block in place.  The ``loss_fn`` must perform the shard-local
+    gather + exchange itself (pass ``model_axis="model"`` into the model's
+    ``vertex_input`` path) and the same ``model_axis`` here.
 
-    With ``param_specs`` set, the optimizer-state specs default to
-    adam-shaped moments (``OptState(step, mu, nu)`` with both moment trees
-    mirroring the params).  An optimizer whose state has a different
-    structure (plain SGD has ``mu=None``; momentum SGD has ``nu=None``)
-    needs an explicit ``opt_state_specs`` tree, otherwise shard_map raises
-    a pytree-structure error at trace time.
+    Optimizer-state specs are derived from the REAL state structure at the
+    first call (``derive_opt_state_specs``): moment trees mirroring the
+    params shard like the params, scalars stay replicated, absent moments
+    (plain/momentum SGD) stay ``None``.  An explicit ``opt_state_specs``
+    tree still overrides.
+
+    With ``model_axis`` set, the gather-plan batch keys
+    (``PLAN_BATCH_KEYS``) are sharded ``P(data_axes, model_axis)`` — the
+    same placement ``BatchShardings`` transfers them with — so each device
+    receives its own pre-sliced ``(1, V_b)`` plan block; every other batch
+    leaf (and the keys) shards on the leading trainer axis only.
 
     ``donate_batch`` donates the streamed batch's buffers (gather plans,
     inverse maps, id arrays are dead after the step — XLA reuses them for
@@ -112,22 +147,12 @@ def make_spmd_train_step(
     reused across steps (``FullGraphPipeline``).
     """
     data_axes = tuple(data_axes)
-    all_axes = tuple(mesh.axis_names)
-    other_axes = tuple(a for a in all_axes if a not in data_axes)
-
     batch_spec = P(data_axes)      # leading trainer axis sharded
     rep_spec = P()                 # params replicated
     p_spec = rep_spec if param_specs is None else param_specs
-    # Adam-style moments mirror their parameters, so they shard the same
-    # way (matches opt_state_shardings in repro.sharding.rules); the step
-    # scalar stays replicated.  Optimizers with a different state
-    # structure must pass opt_state_specs (see docstring).
-    if opt_state_specs is not None:
-        o_spec = opt_state_specs
-    elif param_specs is not None:
-        o_spec = OptState(step=rep_spec, mu=param_specs, nu=param_specs)
-    else:
-        o_spec = rep_spec
+    model_size = int(mesh.shape.get(model_axis, 1)) if model_axis else 1
+    plan_spec = (P(data_axes, model_axis)
+                 if model_axis and model_size > 1 else batch_spec)
 
     def shard_body(params, opt_state, batch, keys):
         # strip the per-shard leading axis of size trainers/shard (==1 when
@@ -153,17 +178,35 @@ def make_spmd_train_step(
 
     from jax.experimental.shard_map import shard_map
 
-    sharded = shard_map(
-        shard_body, mesh=mesh,
-        in_specs=(p_spec, o_spec, batch_spec, batch_spec),
-        out_specs=(p_spec, o_spec, rep_spec),
-        check_rep=False,
-    )
+    # the shard_map is built lazily at the first call: the opt-state spec
+    # tree needs the REAL state structure and the batch spec tree the REAL
+    # key set (plan keys present or not), neither known at build time.
+    # Cached per (opt-state structure, batch keys) — stable across steps.
+    cache: Dict[Any, Callable] = {}
 
-    @functools.partial(
-        jax.jit, donate_argnums=(2,) if donate_batch else ())
+    def build(params, opt_state, batch):
+        if opt_state_specs is not None:
+            o_spec = opt_state_specs
+        else:
+            o_spec = derive_opt_state_specs(opt_state, params, p_spec)
+        b_spec = {k: plan_spec if k in PLAN_BATCH_KEYS else batch_spec
+                  for k in batch}
+        sharded = shard_map(
+            shard_body, mesh=mesh,
+            in_specs=(p_spec, o_spec, b_spec, batch_spec),
+            out_specs=(p_spec, o_spec, rep_spec),
+            check_rep=False,
+        )
+        return jax.jit(sharded,
+                       donate_argnums=(2,) if donate_batch else ())
+
     def step(params, opt_state, batch, keys):
-        return sharded(params, opt_state, batch, keys)
+        key = (jax.tree_util.tree_structure(opt_state),
+               tuple(sorted(batch)))
+        fn = cache.get(key)
+        if fn is None:
+            cache[key] = fn = build(params, opt_state, batch)
+        return fn(params, opt_state, batch, keys)
 
     return step
 

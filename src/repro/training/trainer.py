@@ -75,6 +75,17 @@ class TrainConfig:
     #   batch is transferred once, so there is nothing to save.
     gather_exchange: Optional[str] = None  # sharded-gather exchange layout
     #   (None = per-path default; see sharding.embedding.sharded_gather)
+    spmd: Optional[bool] = None         # run the REAL shard_map step over a
+    #   data×model mesh (repro.training.distributed.make_spmd_train_step):
+    #   params + adam moments placed with kge_param_specs (the row-sharded
+    #   entity table stays sharded through the step), batches routed to
+    #   per-device placements via BatchShardings on the same mesh.  None =
+    #   auto: on when more than one device exists and the mesh fits
+    #   (launch.mesh.fit_spmd_mesh — model axis == num_table_shards, data
+    #   axis divides num_trainers); True forces it (1×1 mesh allowed);
+    #   False keeps the vmap-simulated step.  Both steps are bitwise
+    #   identical (tests/test_distributed.py gates losses == and final
+    #   params bitwise on a forced 2-device mesh).
 
 
 class KGETrainer:
@@ -132,24 +143,51 @@ class KGETrainer:
         self._epoch = 0
         self.timings: List[Dict[str, float]] = []
 
-        # ---- input pipeline + SPMD step ----
+        # ---- mesh + step selection (simulated vmap vs real shard_map) ----
         self._fullgraph = cfg.batch_size is None
-        shardings = (self._make_batch_shardings()
-                     if cfg.sharded_transfer else None)
-        if self._fullgraph:
-            # the resident full-graph batch is reused every epoch, so its
-            # buffers must NOT be donated (and there is nothing to dedup)
+        self.mesh = None
+        self._spmd = self._resolve_spmd()
+        self._model_axis = "model" if self._spmd else None
+        self._validate_exchange()
+
+        if self._spmd:
+            from repro.launch.mesh import fit_spmd_mesh, make_host_mesh
+            self.mesh = make_host_mesh(*fit_spmd_mesh(
+                cfg.num_trainers, cfg.num_table_shards))
+            self._place_state()
+
+        # ---- input pipeline ----
+        if self._spmd:
+            # spmd batches always transfer with mesh-aware placements:
+            # partition slices over the data axis, gather-plan blocks over
+            # the model axis — the step's in_specs, so no resharding
+            from repro.data.pipeline import BatchShardings
+            shardings = BatchShardings(self.mesh)
+        elif cfg.sharded_transfer:
+            shardings = self._make_batch_shardings()
+        else:
+            shardings = None
+        # full-graph: the resident batch is reused every epoch, so its
+        # buffers must NOT be donated (and there is nothing to dedup).
+        # mini-batch: streamed batches die after their step — donate their
+        # buffers to the exchange (no-op with a warning on CPU, so gate it)
+        donate = not self._fullgraph and jax.default_backend() != "cpu"
+        loss = self._fullgraph_loss if self._fullgraph \
+            else self._minibatch_loss
+        if self._spmd:
+            from repro.training.distributed import make_spmd_train_step
+            self._step = make_spmd_train_step(
+                loss, optimizer, self.mesh,
+                param_specs=self._param_specs,
+                model_axis="model", donate_batch=donate)
+        else:
             self._step = make_simulated_train_step(
-                self._fullgraph_loss, optimizer)
+                loss, optimizer, donate_batch=donate)
+        if self._fullgraph:
             self.pipeline: InputPipeline = FullGraphPipeline(
                 self.pre.padded, table_layout=self.pre.table_layout,
                 shardings=shardings)
         else:
-            # streamed batches die after their step — donate their buffers
-            # to the exchange (no-op with a warning on CPU, so gate it)
-            self._step = make_simulated_train_step(
-                self._minibatch_loss, optimizer,
-                donate_batch=jax.default_backend() != "cpu")
             self.pipeline = make_input_pipeline(
                 cfg.pipeline, self.pre.partitions,
                 batch_size=cfg.batch_size,
@@ -164,6 +202,52 @@ class KGETrainer:
                 shardings=shardings,
                 dedup_gather=cfg.gather_dedup,
             )
+
+    def _resolve_spmd(self) -> bool:
+        """``cfg.spmd`` tri-state: explicit True/False wins (True validates
+        the mesh fits and raises otherwise); None auto-enables the real
+        shard_map step exactly when it buys parallelism — more than one
+        local device AND the mesh fits (``fit_spmd_mesh``)."""
+        from repro.launch.mesh import fit_spmd_mesh
+        cfg = self.cfg
+        fit = fit_spmd_mesh(cfg.num_trainers, cfg.num_table_shards)
+        if cfg.spmd is None:
+            return fit is not None and fit[0] * fit[1] > 1
+        if cfg.spmd and fit is None:
+            raise ValueError(
+                f"spmd=True needs {cfg.num_table_shards} model-axis "
+                f"devices for {cfg.num_table_shards} table shards but "
+                f"only {jax.device_count()} devices exist")
+        return bool(cfg.spmd)
+
+    def _validate_exchange(self) -> None:
+        """Fail fast on an exchange layout the selected step can't run:
+        the vmap simulation implements ``SIM_EXCHANGES``, the shard_map
+        step the collective ``SPMD_EXCHANGES`` — ``None`` always resolves
+        to the right per-path default."""
+        from repro.sharding.embedding import SIM_EXCHANGES, SPMD_EXCHANGES
+        ex = self.cfg.gather_exchange
+        allowed = SPMD_EXCHANGES if self._spmd else SIM_EXCHANGES
+        if ex is not None and ex not in allowed:
+            kind = "spmd" if self._spmd else "simulated"
+            raise ValueError(
+                f"gather_exchange={ex!r} is not available on the {kind} "
+                f"step (one of {allowed}); leave it None for the default")
+
+    def _place_state(self) -> None:
+        """Place params and optimizer state on the mesh BEFORE the first
+        step: the row-sharded entity table (and its adam moments) start —
+        and stay — distributed with ``kge_param_specs`` instead of being
+        resharded out of a replicated copy on the first dispatch."""
+        from repro.sharding import kge_param_specs, tree_named_shardings
+        from repro.training.distributed import derive_opt_state_specs
+        self._param_specs = kge_param_specs(self.params, self.mesh)
+        self._opt_specs = derive_opt_state_specs(
+            self.opt_state, self.params, self._param_specs)
+        self.params = jax.device_put(
+            self.params, tree_named_shardings(self._param_specs, self.mesh))
+        self.opt_state = jax.device_put(
+            self.opt_state, tree_named_shardings(self._opt_specs, self.mesh))
 
     def _make_batch_shardings(self):
         """Mesh-aware transfer placements for ``cfg.sharded_transfer``: the
@@ -206,11 +290,13 @@ class KGETrainer:
     # ------------------------------------------------------------------ #
     def _fullgraph_loss(self, params, batch, key):
         return fullgraph_loss(params, self.kge_cfg, batch, key,
-                              features=self.features, train=True)
+                              features=self.features, train=True,
+                              model_axis=self._model_axis)
 
     def _minibatch_loss(self, params, batch, key):
         return minibatch_loss(params, self.kge_cfg, batch,
-                              features=self.features, dropout_key=key)
+                              features=self.features, dropout_key=key,
+                              model_axis=self._model_axis)
 
     # ------------------------------------------------------------------ #
     def train_epoch(self) -> Dict[str, float]:
@@ -265,6 +351,49 @@ class KGETrainer:
 
     def close(self) -> None:
         self.pipeline.close()
+
+    # ------------------------------------------------------------------ #
+    # checkpointing: params + optimizer state + the TRAINER-side state
+    # (epoch counter, PRNG key) that the per-epoch key schedule
+    # (``split_trainer_keys(key, P, epoch)``) depends on — without both, a
+    # resumed run silently restarts the negative-sampling / dropout RNG
+    # stream at epoch 1 and diverges from the uninterrupted run.
+    # ------------------------------------------------------------------ #
+    def save_checkpoint(self, directory: str, keep: int = 3) -> str:
+        """One checkpoint per call, stamped with the current epoch; the
+        manifest ``metadata`` carries ``epoch`` and the raw PRNG ``key``
+        so ``restore`` continues the exact RNG stream."""
+        from repro.training.checkpoint import save_checkpoint
+        tree = {"params": self.params, "opt": self.opt_state}
+        meta = {
+            "epoch": int(self._epoch),
+            "key": np.asarray(self._key, dtype=np.uint32).tolist(),
+        }
+        return save_checkpoint(directory, self._epoch, tree,
+                               metadata=meta, keep=keep)
+
+    def restore(self, path: str) -> int:
+        """Resume from ``save_checkpoint`` output: restores params +
+        optimizer state (entity tables convert across storage layouts and
+        shard counts — checkpoints are layout-portable), then the epoch
+        counter and PRNG key from the manifest metadata, so the next
+        ``train_epoch`` draws the SAME keys the uninterrupted run would
+        have.  Under spmd the restored (host) arrays are re-placed on the
+        mesh.  Returns the restored epoch."""
+        from repro.training.checkpoint import read_metadata, \
+            restore_checkpoint
+        like = {"params": self.params, "opt": self.opt_state}
+        step, tree = restore_checkpoint(
+            path, like, entity_rows=self.train_kg.num_entities)
+        self.params, self.opt_state = tree["params"], tree["opt"]
+        _, meta = read_metadata(path)
+        self._epoch = int(meta.get("epoch", step))
+        if "key" in meta:
+            self._key = jnp.asarray(np.asarray(meta["key"],
+                                               dtype=np.uint32))
+        if self._spmd:
+            self._place_state()
+        return self._epoch
 
     # ------------------------------------------------------------------ #
     def encode_all_entities(self) -> np.ndarray:

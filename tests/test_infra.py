@@ -87,6 +87,40 @@ class TestCheckpoint:
         with pytest.raises(ValueError):
             restore_checkpoint(path, {"a": jnp.zeros(4)})
 
+    def test_gc_keep_zero_keeps_everything(self, tmp_path):
+        """keep<=0 is the documented KEEP-ALL contract (the old
+        ``ckpts[:-keep] if keep`` only kept-all for exactly 0; a negative
+        keep would have deleted the NEWEST checkpoints)."""
+        tree = {"a": jnp.zeros(2)}
+        for keep in (0, -1):
+            for s in range(4):
+                save_checkpoint(str(tmp_path), s, tree, keep=keep)
+            files = [f for f in os.listdir(tmp_path)
+                     if f.endswith(".npz")]
+            assert len(files) == 4
+
+    def test_gc_removes_orphaned_manifests(self, tmp_path):
+        """A .json manifest whose .npz payload is gone (crashed save,
+        out-of-band cleanup) is pruned on the next save — even with
+        keep=0 — so it can never shadow a real checkpoint."""
+        tree = {"a": jnp.zeros(2)}
+        save_checkpoint(str(tmp_path), 1, tree)
+        path2 = save_checkpoint(str(tmp_path), 2, tree)
+        os.remove(path2)                       # orphan ckpt_00000002.json
+        save_checkpoint(str(tmp_path), 3, tree, keep=0)
+        names = sorted(os.listdir(tmp_path))
+        assert "ckpt_00000002.json" not in names
+        assert {"ckpt_00000001.npz", "ckpt_00000001.json",
+                "ckpt_00000003.npz", "ckpt_00000003.json"} <= set(names)
+
+    def test_metadata_roundtrip(self, tmp_path):
+        from repro.training.checkpoint import read_metadata
+        path = save_checkpoint(str(tmp_path), 5, {"a": jnp.zeros(2)},
+                               metadata={"epoch": 5, "key": [1, 2]})
+        step, meta = read_metadata(path)
+        assert step == 5
+        assert meta == {"epoch": 5, "key": [1, 2]}
+
 
 class TestRankingEval:
     def test_known_ranks(self):

@@ -215,8 +215,14 @@ class TestExchangeLayouts:
             out = jax.vmap(lambda t: sharded_gather(
                 t[None], li, ow, axis_name="model", exchange=exchange),
                 axis_name="model")(stack)
-            # each shard computes the SAME loss on the replicated output;
-            # take shard 0's (they are identical) to mimic the spmd step
+            # vmap inlines the exchange's custom VJP (jax 0.4 batching), so
+            # this path exercises the COLLECTIVE-TRANSPOSE backward: the
+            # loss must consume the replicated output exactly once (shard
+            # 0's copy) for the broadcast cotangent to match dense.  The
+            # real shard_map path instead computes the loss replicated on
+            # every device and uses the identity backward — gated bitwise
+            # by the 2-device subprocess tests (test_sharded_embedding /
+            # test_distributed slow tier).
             return jnp.sum(jnp.tanh(out[0]) * w)
 
         g_sh = jax.grad(loss)(shards)
@@ -684,24 +690,24 @@ step_spmd = make_spmd_train_step(
     opt, mesh, param_specs=kge_param_specs(params, mesh))
 step_sim = make_simulated_train_step(
     lambda p, b, k: fullgraph_loss(p, cfg, b, k, train=False), opt)
-# The real psum reassociates float sums and adam's first step is near
-# sign-descent (delta ~ +-lr), which amplifies reduction-order noise in
-# tiny gradients; bitwise equality is the SIMULATION path's contract.
-# Here the contract is: same loss, same trajectory.
+# The exchange's REPLICATED-LOSS backward (identity, not the collective
+# transpose — sharding.embedding._replicated_exchange) makes the real
+# shard_map step BITWISE equal to the vmap simulation: the historical S-x
+# entity-gradient inflation (psum transposing to psum under
+# check_rep=False, masked by adam's scale-invariant first step and the
+# old atol=5e-3) would fail this exactly.
 p1, o1, m1 = step_spmd(params, opt.init(params), batch, keys)
 p2, o2, m2 = step_sim(params, opt.init(params), batch, keys)
-np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]), rtol=1e-5)
+assert float(m1["loss"]) == float(m2["loss"])
 for a, b in zip(jax.tree_util.tree_leaves(p1),
                 jax.tree_util.tree_leaves(p2)):
-    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=5e-3,
-                               rtol=0)
-# second step: a wrong exchange transpose (doubled / missing shard rows)
-# would knock the loss visibly off the simulated trajectory
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+# second step (optimizer state now differs from init — a wrong exchange
+# backward would compound here) stays bitwise on the same trajectory
 keys2 = jax.random.split(jax.random.PRNGKey(5), 1)
 _, _, m1b = step_spmd(p1, o1, batch, keys2)
 _, _, m2b = step_sim(p2, o2, batch, keys2)
-np.testing.assert_allclose(float(m1b["loss"]), float(m2b["loss"]),
-                           rtol=1e-3)
+assert float(m1b["loss"]) == float(m2b["loss"])
 assert float(m1b["loss"]) < float(m1["loss"])    # it is actually learning
 
 # every exchange layout over the REAL 2-device axis is bitwise equal to
@@ -731,8 +737,9 @@ def test_spmd_two_device_model_axis_psum_exchange():
     """Drive the REAL exchange: 2 forced host devices, mesh 1x2
     (data x model), entity table sharded P('model') so each device holds
     one row block and sharded_gather takes the axis_index + psum branch;
-    loss and training trajectory must match the single-device vmap
-    simulation (up to collective reduction-order float noise)."""
+    loss and training trajectory must be BITWISE equal to the
+    single-device vmap simulation (the replicated-loss identity backward
+    makes the exchange transpose exact)."""
     import os
     import subprocess
     import sys
