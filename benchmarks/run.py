@@ -38,6 +38,29 @@ def check_embedding_gate() -> str:
             f"{ratio:.2f}x dense (limit {GATE_RATIO}x)")
 
 
+def check_serve_gate() -> str:
+    """Correctness gate over the freshly written ``BENCH_serve.json``:
+    every sharded top-k result — per decoder, per shard count, filtered
+    and unfiltered — must be EXACTLY equal to dense ``jax.lax.top_k``
+    (the serving engine never materializes the dense score matrix, so
+    exact equality is the contract, not a tolerance).  Returns a summary
+    line; raises on violation."""
+    from benchmarks.serve_bench import SERVE_JSON_PATH
+    with open(SERVE_JSON_PATH) as f:
+        payload = json.load(f)
+    bits = payload["equal_dense"] + payload["sharded"]
+    bad = [b for b in bits if not b["topk_equal_dense"]]
+    if bad:
+        raise RuntimeError(
+            f"serve gate FAILED: sharded top-k != dense jax.lax.top_k "
+            f"for {bad}")
+    n_dec = len({b["decoder"] for b in payload["equal_dense"]})
+    n_shard = len({b["num_shards"] for b in payload["equal_dense"]})
+    return (f"serve gate ok: sharded top-k == dense for {n_dec} decoders "
+            f"x {n_shard} shard counts, filtered+unfiltered "
+            f"({len(bits)} checks)")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
@@ -63,7 +86,7 @@ def main() -> None:
         "f6": lambda: figs.run_f6(quick),                 # Figure 6
         "f7": lambda: figs.run_f7(quick),                 # Figure 7
         "kernels": lambda: kernels_bench.run(quick),
-        "serve": lambda: serve_bench.run(quick),
+        "serve": lambda: serve_bench.run(quick),        # BENCH_serve.json
         "comm": lambda: comm_analysis.run(quick),
         "roofline": lambda: roofline.run(quick),          # deliverable (g)
     }
@@ -80,6 +103,8 @@ def main() -> None:
                 print(line, flush=True)
             if name == "embedding":
                 print(f"# {check_embedding_gate()}", file=sys.stderr)
+            if name == "serve":
+                print(f"# {check_serve_gate()}", file=sys.stderr)
             print(f"# {name} done in {time.time() - t0:.1f}s",
                   file=sys.stderr)
         except Exception:

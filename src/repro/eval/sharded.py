@@ -94,8 +94,8 @@ def shard_filter_bias_block(filter_index, batch: np.ndarray,
     result so many blocks of one batch share a single key lookup.
     """
     rows = layout.rows_per_shard
-    lo = shard * rows
-    width = max(0, min(layout.num_rows, lo + rows) - lo)
+    lo, hi = layout.shard_row_span(shard)
+    width = hi - lo
     if width == rows:                  # interior shard: no layout padding
         return _filter_bias(filter_index, batch, rows, col_start=lo,
                             resolved=resolved)
@@ -168,11 +168,18 @@ def _stack_bias_blocks(filter_index, batch: np.ndarray,
         for s in range(layout.num_shards)])
 
 
-def _shard_scores(decoder: Decoder, dec_params, table_block, q, q_bias,
-                  bias_block, interpret):
-    """One shard's (B, rows) kernel scores: row-local candidate preparation
-    of the shard's own table block + the shared query rows."""
-    cand, c_bias = decoder.prepare_candidates(dec_params, table_block)
+def shard_scores(decoder: Decoder, dec_params, table_block, q, q_bias,
+                 bias_block, interpret=None, *, prepared=None):
+    """One shard's ``(B, rows)`` kernel scores: row-local candidate
+    preparation of the shard's own table block + the shared query rows.
+
+    Because preparation is row-local, each column is bitwise the matching
+    column of the dense kernel's ``(B, N)`` output — the invariant both the
+    sharded ranking metrics and the serving top-k (``repro.serving.kge``,
+    which passes its per-shard ``prepared`` cache to skip re-preparing the
+    static candidate side every request) are built on."""
+    cand, c_bias = (prepared if prepared is not None else
+                    decoder.prepare_candidates(dec_params, table_block))
     return kge_score_padded(q, cand, bias_block, q_bias, c_bias,
                             epilogue=decoder.epilogue, interpret=interpret)
 
@@ -209,8 +216,8 @@ def sharded_rank_counts(
 
     if axis_name is None:
         # masked single-device simulation over the full shard stack
-        scores = [_shard_scores(decoder, dec_params, table[s], q, q_bias,
-                                bias[s], interpret)
+        scores = [shard_scores(decoder, dec_params, table[s], q, q_bias,
+                               bias[s], interpret)
                   for s in range(table.shape[0])]
         true_score = sum(
             jnp.where(true_owned[s], scores[s][rows_idx, true_local[s]], 0.0)
@@ -232,8 +239,8 @@ def sharded_rank_counts(
             f"(1, rows, d) row block, got {table.shape} — shard the table "
             f"and bias over {axis_name!r}")
     s = jax.lax.axis_index(axis_name)
-    scores = _shard_scores(decoder, dec_params, table[0], q, q_bias,
-                           bias[0], interpret)
+    scores = shard_scores(decoder, dec_params, table[0], q, q_bias,
+                          bias[0], interpret)
     true_score = jax.lax.psum(
         jnp.where(true_owned[s], scores[rows_idx, true_local[s]], 0.0),
         axis_name)

@@ -5,6 +5,12 @@
 * ``kge_score`` — blocked candidate ranking in the canonical decoder query
   form ``epilogue(q @ C'^T + q_bias + c_bias) + mask`` — one kernel carries
   every registered decoder (``repro.models.decoders``).
+* ``sharded_gather`` — fused flat-index gather / one-hot scatter-add for
+  the row-sharded entity table exchange.
+* ``topk`` — deterministic per-shard top-k selection (serving: reduce each
+  shard's score block to ``(B, k)`` so the dense ``(B, N)`` matrix never
+  materializes; ties break toward the lowest index, matching
+  ``jax.lax.top_k``).
 * ``wkv_chunk`` — chunked RWKV-6 WKV with VMEM-resident recurrent state
   (the §Perf-winning formulation, TPU-native).
 
@@ -14,8 +20,10 @@ On CPU the kernels run with ``interpret=True``; on TPU they compile.
 from repro.kernels import ops, ref
 from repro.kernels.kge_score import EPILOGUES, NORM_EPS, apply_epilogue
 from repro.kernels.ops import (
-    kge_score_padded, rgcn_message_basis, wkv_chunked_op,
+    kge_score_padded, merge_topk, rgcn_message_basis, topk_padded,
+    wkv_chunked_op,
 )
 
 __all__ = ["ops", "ref", "EPILOGUES", "NORM_EPS", "apply_epilogue",
-           "kge_score_padded", "rgcn_message_basis", "wkv_chunked_op"]
+           "kge_score_padded", "merge_topk", "rgcn_message_basis",
+           "topk_padded", "wkv_chunked_op"]

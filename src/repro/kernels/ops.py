@@ -19,6 +19,7 @@ from repro.kernels.rgcn_message import (
 from repro.kernels.sharded_gather import (
     COT_BLOCK, ROW_BLOCK, fused_gather, scatter_add_onehot,
 )
+from repro.kernels.topk import TOPK_Q_BLOCK, topk_scores
 
 
 def _pad_to(x: jax.Array, n: int, axis: int = 0, fill=0) -> jax.Array:
@@ -141,6 +142,65 @@ def kge_score_padded(
     out = kge_score(q_p, cand_p, bias_p, qb_p, cb_p, epilogue=epilogue,
                     interpret=interpret)
     return out[:b, :c]
+
+
+# ---------------------------------------------------------------------- #
+# Per-shard top-k + merge (repro.serving hot path)
+# ---------------------------------------------------------------------- #
+@functools.partial(jax.jit, static_argnames=("k", "interpret", "use_kernel"))
+def topk_padded(
+    scores: jax.Array,      # (B, C) score block
+    k: int,
+    *, interpret: Optional[bool] = None,
+    use_kernel: Optional[bool] = None,
+):
+    """Padding/dispatch wrapper around the Pallas ``topk_scores`` kernel:
+    ``(values (B, k), indices (B, k))``, values descending, ties broken
+    toward the LOWEST index.  ``k`` must already be clamped to ``[1, C]``
+    (the serving layer owns the vocabulary clamp so the request-level
+    semantics live in one place); ragged B is padded to the kernel's
+    128-row tile and sliced back.
+
+    On TPU the Pallas kernel runs; elsewhere the production path is
+    ``jax.lax.top_k`` — the same documented selection order (descending,
+    lower index wins ties), with no arithmetic that could drift, so the
+    two dispatches are bit-identical (``tests/test_serving.py`` asserts
+    kernel == ref == ``lax.top_k``)."""
+    b, c = scores.shape
+    if not 1 <= k <= c:
+        raise ValueError(f"k={k} outside [1, C={c}] — clamp before topk")
+    scores = scores.astype(jnp.float32)
+    if use_kernel is None:
+        # mirror fused_sharded_gather: the kernel's iterative selection is
+        # VPU-friendly on TPU; on CPU the interpreter per-grid overhead
+        # loses to XLA's native sort-based TopK, which implements the
+        # identical order
+        use_kernel = jax.default_backend() == "tpu"
+    if not use_kernel:
+        return jax.lax.top_k(scores, k)
+    b_pad = _round_up(b, TOPK_Q_BLOCK)
+    vals, idx = topk_scores(_pad_to(scores, b_pad), k, interpret=interpret)
+    return vals[:b], idx[:b]
+
+
+def merge_topk(
+    vals: jax.Array,       # (B, S * k) per-shard top-k values, concat
+    ids: jax.Array,        # (B, S * k) matching GLOBAL candidate ids
+    k: int,
+    *, interpret: Optional[bool] = None,
+):
+    """Global k-way merge of per-shard top-k winners: top-k over the
+    concatenated ``(B, S·k)`` value rows, then the winning positions are
+    mapped back to their global candidate ids.
+
+    Exactness: each shard's list is (value desc, local index asc) and the
+    shard row blocks cover contiguous ascending global-id ranges, so among
+    equal values a lower concat POSITION is always a lower global id —
+    the lowest-index tie-break of ``topk_padded`` therefore selects and
+    orders exactly the candidates dense ``jax.lax.top_k`` would over the
+    full axis."""
+    v, pos = topk_padded(vals, k, interpret=interpret)
+    return v, jnp.take_along_axis(ids, pos, axis=1)
 
 
 # ---------------------------------------------------------------------- #

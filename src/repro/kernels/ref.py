@@ -69,6 +69,31 @@ def kge_score_ref(
     return out
 
 
+def topk_ref(
+    scores: jax.Array,      # (B, C) score block
+    k: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """Deterministic top-k oracle for ``kernels.topk.topk_scores``: the
+    identical iterative selection (max over active columns, lowest index
+    wins ties, winner deactivated) in pure jnp.  Selection is
+    arithmetic-free, so values AND indices are bit-equal to
+    ``jax.lax.top_k`` on float32 scores — the dense serving reference."""
+    scores = scores.astype(jnp.float32)
+    b, c = scores.shape
+    col = jnp.broadcast_to(jnp.arange(c, dtype=jnp.int32), (b, c))
+
+    def step(active, _):
+        cur = jnp.where(active, scores, -jnp.inf)
+        m = jnp.max(cur, axis=1)
+        hit = active & (cur == m[:, None])
+        pick = jnp.min(jnp.where(hit, col, c), axis=1)
+        return active & (col != pick[:, None]), (m, pick)
+
+    _, (vals, idx) = jax.lax.scan(
+        step, jnp.ones((b, c), jnp.bool_), None, length=k)
+    return jnp.moveaxis(vals, 0, 1), jnp.moveaxis(idx, 0, 1)
+
+
 def sharded_gather_ref(
     table: jax.Array,      # (S, rows, d) row-sharded table stack
     local_ids: jax.Array,  # (S, V) per-shard LOCAL row ids

@@ -1,0 +1,111 @@
+"""Pallas TPU kernel for per-shard streaming top-k selection.
+
+The serving engine (``repro.serving``) answers ``(head, relation, ?)``
+queries with the k best tails.  The dense path materializes the full
+``(B, N)`` score matrix on one device and runs ``jax.lax.top_k`` — the
+memory wall the candidate-axis-sharded table was built to remove.  The
+sharded path instead scores each shard's ``(B, rows/S)`` block with the
+``kge_score`` kernel, reduces it to ``(B, k)`` *immediately* with this
+kernel, and k-way-merges the per-shard winners — the ``(B, N)`` matrix
+never exists on any device (peak score memory per device is one
+``(B, rows/S)`` block, and only ``S · B · k`` merge candidates cross
+shards).
+
+Selection contract (the serving ``==``-vs-dense gate depends on it):
+
+    k iterations of  (max over still-active columns,
+                      LOWEST column index among the maxima wins,
+                      winner deactivated)
+
+which is exactly ``jax.lax.top_k``'s documented order — values descending,
+ties broken toward the lower index — so per-shard top-k + merge reproduces
+the dense ``jax.lax.top_k`` indices EXACTLY (shard row blocks are
+contiguous global-id ranges: among equal values, a lower global id is an
+earlier shard or a lower local index, both of which the merge preserves).
+The oracle is ``kernels.ref.topk_ref`` (same algorithm, pure jnp);
+``tests/test_serving.py`` asserts kernel == ref == ``jax.lax.top_k``.
+
+The ``active`` mask — not a ``-inf`` substitution — is what keeps ties
+exact: a selected ``-inf`` score (layout-padded rows, filtered
+candidates) would be re-selected forever if masking rewrote values, but
+deactivation removes the *column*, so repeated ``-inf`` entries drain in
+ascending index order exactly like ``lax.top_k``.
+
+One grid step per ``Q_BLOCK`` query rows; the candidate axis stays whole
+in VMEM (serving blocks are ``rows/S ≲ 32k`` columns — well inside the
+VMEM budget at 128 query rows).  The jit-ready wrapper with B-padding,
+k-clamping and the CPU dispatch to the bit-identical ``jax.lax.top_k``
+lowering is ``repro.kernels.ops.topk_padded``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+TOPK_Q_BLOCK = 128   # query rows per grid step
+
+
+def _topk_kernel(scores_ref, vals_ref, idx_ref, *, k: int):
+    """Deterministic iterative selection on one (Q_BLOCK, C) score tile."""
+    scores = scores_ref[...].astype(jnp.float32)          # (Q, C)
+    q, c = scores.shape
+    col = jax.lax.broadcasted_iota(jnp.int32, (q, c), 1)
+    kcol = jax.lax.broadcasted_iota(jnp.int32, (q, k), 1)
+
+    def body(j, carry):
+        active, vals, idx = carry
+        cur = jnp.where(active, scores, -jnp.inf)
+        m = jnp.max(cur, axis=1)                          # (Q,)
+        # the winner: lowest ACTIVE column attaining the max ("& active"
+        # matters — when m == -inf every deactivated column also compares
+        # equal, and without it the same column would win every round)
+        hit = active & (cur == m[:, None])
+        pick = jnp.min(jnp.where(hit, col, c), axis=1)    # (Q,)
+        vals = jnp.where(kcol == j, m[:, None], vals)
+        idx = jnp.where(kcol == j, pick[:, None], idx)
+        return active & (col != pick[:, None]), vals, idx
+
+    _, vals, idx = jax.lax.fori_loop(
+        0, k, body,
+        (jnp.ones((q, c), jnp.bool_),
+         jnp.full((q, k), -jnp.inf, jnp.float32),
+         jnp.zeros((q, k), jnp.int32)))
+    vals_ref[...] = vals
+    idx_ref[...] = idx
+
+
+def topk_scores(
+    scores: jax.Array,      # (B, C) float score block
+    k: int,
+    *, interpret: bool | None = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Top-k per row of a score block: ``(values (B, k), indices (B, k))``,
+    values descending, ties broken toward the LOWEST index — bit-equal to
+    ``jax.lax.top_k`` on float32 scores.  B must be a ``TOPK_Q_BLOCK``
+    multiple and ``k <= C`` (``ops.topk_padded`` pads/clamps ragged
+    callers)."""
+    b, c = scores.shape
+    assert b % TOPK_Q_BLOCK == 0, \
+        "ragged B must go through ops.topk_padded"
+    assert 1 <= k <= c, f"k={k} outside [1, C={c}] — ops.topk_padded clamps"
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    return pl.pallas_call(
+        functools.partial(_topk_kernel, k=k),
+        grid=(b // TOPK_Q_BLOCK,),
+        in_specs=[pl.BlockSpec((TOPK_Q_BLOCK, c), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((TOPK_Q_BLOCK, k), lambda i: (i, 0)),
+            pl.BlockSpec((TOPK_Q_BLOCK, k), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, k), jnp.float32),
+            jax.ShapeDtypeStruct((b, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(scores)

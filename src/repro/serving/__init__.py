@@ -1,3 +1,8 @@
-"""Serving: batched LM decode engine + KGE link-prediction server."""
+"""Serving: batched LM decode engine + KGE link-prediction servers
+(dense ``KGEServer``; sharded top-k ``ShardedKGEServer`` + dynamic-batching
+``KGEServeEngine`` — see ``docs/serving.md``)."""
 from repro.serving.engine import ServeEngine, Request, KGEServer
-__all__ = ["ServeEngine", "Request", "KGEServer"]
+from repro.serving.kge import KGEQuery, KGEServeEngine, ShardedKGEServer
+
+__all__ = ["ServeEngine", "Request", "KGEServer", "KGEQuery",
+           "KGEServeEngine", "ShardedKGEServer"]

@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.ops import topk_padded
 from repro.launch.steps import make_serve_step
 from repro.nn.transformer import ArchConfig, init_decode_cache
 
@@ -28,7 +29,8 @@ class Request:
     prompt: np.ndarray          # (P,) int32
     max_new_tokens: int = 16
     output: Optional[List[int]] = None
-    done: bool = False
+    done: bool = False          # produced its full max_new_tokens budget
+    truncated: bool = False     # cut off by the engine's max_seq horizon
 
 
 class ServeEngine:
@@ -79,8 +81,11 @@ class ServeEngine:
                 cur[i] = 0
             if all(r.done for r in reqs):
                 break
+        # A request the max_seq horizon cut off before it exhausted
+        # max_new_tokens is NOT complete — report the truncation instead of
+        # silently claiming done.
         for r in reqs:
-            r.done = True
+            r.truncated = not r.done
 
     def run(self, requests: List[Request]) -> List[Request]:
         for lo in range(0, len(requests), self.slots):
@@ -113,7 +118,13 @@ class KGEServer:
 
     def topk_tails(self, heads: np.ndarray, rels: np.ndarray,
                    k: int = 10) -> np.ndarray:
+        """Top-k tail entity ids, ``(B, min(k, num_entities))`` — ``k`` is
+        clamped to the vocabulary and ties break deterministically toward
+        the lowest entity id on every backend."""
+        if k < 1:
+            raise ValueError(f"k={k} must be >= 1")
+        k = min(int(k), int(self.emb.shape[0]))
         scores = self.decoder.rank_scores(
             self.params, self.emb[jnp.asarray(heads)], jnp.asarray(rels),
             self.emb, prepared=self._prepared)
-        return np.asarray(jax.lax.top_k(scores, k)[1])
+        return np.asarray(topk_padded(scores, k)[1])

@@ -74,6 +74,14 @@ class ShardedTableLayout:
         """Per-device table footprint — the quantity sharding shrinks."""
         return self.rows_per_shard * dim * itemsize
 
+    def shard_row_span(self, shard: int) -> Tuple[int, int]:
+        """Global row range ``[lo, hi)`` of the REAL rows shard ``shard``
+        stores — ``hi - lo < rows_per_shard`` on ragged tail shards, whose
+        remaining local rows are layout padding (zero rows holding no
+        entity; scoring paths mask them with ``-inf``)."""
+        lo = shard * self.rows_per_shard
+        return lo, max(lo, min(self.num_rows, lo + self.rows_per_shard))
+
 
 def shard_table(table, layout: ShardedTableLayout):
     """Dense ``(num_rows, d)`` → sharded ``(num_shards, rows_per_shard, d)``
