@@ -15,12 +15,9 @@ This is the table DESIGN.md §2 promises; it runs on host numpy only.
 """
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import emit
-from repro.core import (
-    core_vertices, expand_all, partition_graph,
-)
+from repro.core import expand_all, partition_graph
 from repro.data import synthetic_citation2
 
 

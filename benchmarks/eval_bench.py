@@ -29,7 +29,6 @@ from __future__ import annotations
 
 import json
 import os
-import time
 from typing import Dict, List
 
 import numpy as np

@@ -72,6 +72,44 @@ def _measure(splits, kind: str, quick: bool,
     }
 
 
+AUDIT_DEVICES = 4      # forced host devices for the comm audit (2x2 mesh)
+
+
+def _comm_audit(quick: bool) -> Dict:
+    """Run the SPMD contract auditor (``repro.launch.audit``) in a
+    subprocess — it needs a forced multi-device CPU platform, and this
+    process's jax already locked the real device count — and return its
+    ``comm_audit`` rows for the pipeline payload.  Quick mode audits one
+    exchange layout (both dedup settings) + rank + serve; full mode
+    every layout."""
+    import subprocess
+    import sys
+    import tempfile
+
+    cmd = [sys.executable, "-m", "repro.launch.audit",
+           "--devices", str(AUDIT_DEVICES), "--quiet"]
+    if quick:
+        cmd += ["--exchanges", "psum_scatter"]
+    with tempfile.NamedTemporaryFile(suffix=".json") as tmp:
+        cmd += ["--json", tmp.name]
+        env = dict(os.environ)
+        env["PYTHONPATH"] = os.pathsep.join(
+            [os.path.join(os.path.dirname(__file__), "..", "src"),
+             env.get("PYTHONPATH", "")])
+        proc = subprocess.run(cmd, capture_output=True, text=True,
+                              env=env, timeout=1200)
+        if proc.returncode != 0:
+            # keep the violation table in the payload — the run.py gate
+            # raises on it, with the table in the error message
+            return {"ok": False, "returncode": proc.returncode,
+                    "table": proc.stdout, "stderr": proc.stderr[-2000:],
+                    "rows": []}
+        with open(tmp.name) as f:
+            rows = json.load(f)["comm_audit"]
+    return {"ok": all(r["ok"] for r in rows), "returncode": 0,
+            "table": proc.stdout, "rows": rows}
+
+
 def run(quick: bool = True) -> List[Dict]:
     from repro.data import synthetic_citation2
 
@@ -105,6 +143,9 @@ def run(quick: bool = True) -> List[Dict]:
         "async_sharded_transfer": results["async_sharded"],
         "spmd": results["spmd"],
         "async_speedup": round(speedup, 3),
+        # static SPMD contract audit: collective whitelist + closed-form
+        # byte budget per production program (repro.analysis)
+        "comm_audit": _comm_audit(quick),
     }
     with open(JSON_PATH, "w") as f:
         json.dump(payload, f, indent=2)
@@ -127,6 +168,13 @@ def run(quick: bool = True) -> List[Dict]:
         "name": "speedup",
         "us_per_call": 0.0,
         "async_over_serial": round(speedup, 3),
+    })
+    audit = payload["comm_audit"]
+    rows.append({
+        "name": "comm_audit",
+        "us_per_call": 0.0,
+        "programs": len(audit["rows"]),
+        "ok": audit["ok"],
     })
     return rows
 

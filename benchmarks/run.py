@@ -61,6 +61,31 @@ def check_serve_gate() -> str:
             f"({len(bits)} checks)")
 
 
+def check_comm_audit_gate() -> str:
+    """Contract gate over the freshly written ``BENCH_pipeline.json``:
+    every ``comm_audit`` row — one per lowered production program — must
+    pass its CommContract (collective whitelist, replication, donation,
+    and parsed collective bytes within the closed-form budget).
+    Returns a summary line; raises on violation with the audit table."""
+    from benchmarks.pipeline_bench import JSON_PATH
+    with open(JSON_PATH) as f:
+        payload = json.load(f)
+    audit = payload["comm_audit"]
+    bad = [r for r in audit["rows"] if not r["ok"]]
+    if not audit["ok"] or bad:
+        detail = "\n".join(
+            f"  {r['program']}: {'; '.join(r['violations'])}"
+            for r in bad) or audit.get("stderr", "")
+        raise RuntimeError(
+            f"comm_audit gate FAILED: contract violations in "
+            f"{[r['program'] for r in bad] or 'the audit subprocess'}\n"
+            f"{detail}\n{audit.get('table', '')}")
+    total = sum(r["wire_bytes"] for r in audit["rows"])
+    return (f"comm_audit gate ok: {len(audit['rows'])} programs within "
+            f"contract, {total / 1024:.1f} KiB collective wire bytes "
+            f"within closed-form budget")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
@@ -101,6 +126,8 @@ def main() -> None:
             rows = fn()
             for line in emit(rows, name):
                 print(line, flush=True)
+            if name == "pipeline":
+                print(f"# {check_comm_audit_gate()}", file=sys.stderr)
             if name == "embedding":
                 print(f"# {check_embedding_gate()}", file=sys.stderr)
             if name == "serve":

@@ -5,7 +5,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import emit, time_call
+from benchmarks.common import emit
 from repro.core import expand_all, partition_graph, replication_factor
 from repro.data import synthetic_citation2, synthetic_fb15k
 

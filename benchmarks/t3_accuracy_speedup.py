@@ -8,11 +8,9 @@ where the batch count per trainer falls with P.
 """
 from __future__ import annotations
 
-import dataclasses
 
-import numpy as np
 
-from benchmarks.common import emit, time_call
+from benchmarks.common import emit
 from repro.data import synthetic_fb15k
 from repro.training import KGETrainer, TrainConfig
 

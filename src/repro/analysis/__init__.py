@@ -1,0 +1,29 @@
+"""Static analysis of the lowered SPMD programs.
+
+``repro.analysis.hlo`` is the shared HLO-text parsing core (also behind
+``repro.sharding.hlo_analysis``'s roofline counters);
+``repro.analysis.contracts`` the declarative CommContract auditor;
+``repro.analysis.programs`` lowers every production jitted program and
+audits it.  CLI front-end: ``python -m repro.launch.audit``.
+"""
+from repro.analysis.contracts import (
+    AuditReport, CollectiveRule, CommContract, audit_hlo,
+    format_report_table,
+)
+from repro.analysis.hlo import (
+    COLLECTIVE_KINDS, COLLECTIVE_WIRE_FACTOR, DTYPE_BYTES, Collective,
+    HloModule, buffer_donors, entry_parameters, group_axes,
+    input_output_aliases, iter_collectives, parse_instruction,
+    parse_replica_groups, shape_bytes, shape_dims,
+    used_parameter_numbers,
+)
+
+__all__ = [
+    "AuditReport", "CollectiveRule", "CommContract", "audit_hlo",
+    "format_report_table",
+    "COLLECTIVE_KINDS", "COLLECTIVE_WIRE_FACTOR", "DTYPE_BYTES",
+    "Collective", "HloModule", "buffer_donors", "entry_parameters",
+    "group_axes", "input_output_aliases", "iter_collectives",
+    "parse_instruction", "parse_replica_groups", "shape_bytes",
+    "shape_dims", "used_parameter_numbers",
+]

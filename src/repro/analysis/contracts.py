@@ -1,0 +1,250 @@
+"""Declarative SPMD communication contracts over post-optimization HLO.
+
+A :class:`CommContract` states, for ONE production jitted program, what
+its per-device HLO is allowed to do on the wire and in memory; pass the
+compiled module text to :func:`audit_hlo` and get back an
+:class:`AuditReport` with every violation.  Four audits compose:
+
+1. **Collective whitelist** — every collective in the module must match
+   exactly one :class:`CollectiveRule` by (kind, spanned mesh axes); the
+   replica groups are classified onto the row-major device mesh
+   (``repro.analysis.hlo.group_axes``), so a gradient all-reduce over
+   the ``data`` axis and a table exchange over the ``model`` axis are
+   distinguished statically.  Anything unmatched is a stray collective
+   — the "no cross-partition traffic" claim, proven on the lowering.
+   All-singleton-group collectives move no bytes and are ignored.
+2. **Count bounds** — each rule's matches must fall in
+   ``[min_count, max_count]`` (a psum_scatter exchange is exactly one
+   reduce-scatter plus one all-gather, not two of either).
+3. **Byte budget** — a rule with ``expected_bytes`` compares the summed
+   wire bytes of its matches against the closed-form expectation (from
+   plan sizes / dedup counts), within ``tol`` relative tolerance.
+4. **Replication audit** — no instruction in a top-level computation
+   (entry, loop bodies — fusion internals never materialize) may
+   produce or consume a buffer whose shape ends with a forbidden
+   suffix (e.g. the full-table ``(V, d)``) or contains a forbidden
+   dimension: the static form of "table memory ∝ 1/S".
+5. **Donation audit** — ``donate_batch``-style donation must survive to
+   the executable: at least ``min_donated`` entry parameters appear in
+   ``input_output_alias`` (established aliases) or ``buffer_donor``
+   (retained donatable buffers).  XLA drops donation silently; this
+   turns that into a failure.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+from repro.analysis.hlo import (
+    Collective, HloModule, buffer_donors, group_axes,
+    input_output_aliases, iter_collectives, shape_dims,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveRule:
+    """One whitelisted collective family: ``kind`` spanning exactly the
+    mesh ``axes``, with count bounds and an optional closed-form wire
+    byte budget (summed over every match)."""
+
+    kind: str                      # e.g. "reduce-scatter"
+    axes: Tuple[str, ...]          # spanned mesh axes, e.g. ("model",)
+    min_count: int = 1
+    max_count: int = 1
+    expected_bytes: Optional[float] = None
+    tol: float = 0.02              # relative tolerance on expected_bytes
+    note: str = ""
+
+    @property
+    def label(self) -> str:
+        return f"{self.kind}@{'+'.join(self.axes) or 'none'}"
+
+
+@dataclasses.dataclass(frozen=True)
+class CommContract:
+    """The full communication/memory contract of one jitted program."""
+
+    name: str
+    mesh_axes: Tuple[Tuple[str, int], ...]   # row-major (name, size)
+    rules: Tuple[CollectiveRule, ...] = ()
+    # replication audit: shape SUFFIXES that must never materialize
+    # (e.g. ((V, d), (S*rows, d))) and single dims that must not appear
+    forbidden_suffixes: Tuple[Tuple[int, ...], ...] = ()
+    forbidden_dims: Tuple[int, ...] = ()
+    # donation audit: entry params that must stay aliased or donatable
+    min_donated: int = 0
+    notes: str = ""
+
+
+@dataclasses.dataclass
+class RuleResult:
+    """One rule's observed matches."""
+
+    rule: CollectiveRule
+    count: float = 0.0
+    wire_bytes: float = 0.0
+
+    def as_row(self) -> Dict[str, object]:
+        return {
+            "rule": self.rule.label,
+            "count": self.count,
+            "wire_bytes": self.wire_bytes,
+            "expected_bytes": self.rule.expected_bytes,
+        }
+
+
+@dataclasses.dataclass
+class AuditReport:
+    """Everything :func:`audit_hlo` measured, plus the violations."""
+
+    program: str
+    contract: CommContract
+    violations: List[str] = dataclasses.field(default_factory=list)
+    rule_results: List[RuleResult] = dataclasses.field(default_factory=list)
+    stray: List[Collective] = dataclasses.field(default_factory=list)
+    n_aliased: int = 0
+    n_donor: int = 0
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations
+
+    def as_row(self) -> Dict[str, object]:
+        """JSON-friendly summary (one ``comm_audit`` benchmark row)."""
+        return {
+            "program": self.program,
+            "ok": self.ok,
+            "violations": list(self.violations),
+            "rules": [r.as_row() for r in self.rule_results],
+            "wire_bytes": sum(r.wire_bytes for r in self.rule_results),
+            "expected_bytes": sum(
+                r.rule.expected_bytes or 0.0 for r in self.rule_results),
+            "aliased": self.n_aliased,
+            "donor": self.n_donor,
+            "min_donated": self.contract.min_donated,
+        }
+
+
+def _audit_collectives(mod: HloModule, contract: CommContract,
+                       report: AuditReport) -> None:
+    results = [RuleResult(rule) for rule in contract.rules]
+    for c in iter_collectives(mod):
+        axes = group_axes(c.replica_groups, contract.mesh_axes)
+        if c.replica_groups is not None and not axes:
+            # all-singleton groups: a degenerate collective moving no
+            # bytes (e.g. a pmean lowered on a size-1 axis) — not traffic
+            continue
+        for res in results:
+            if res.rule.kind == c.kind and set(res.rule.axes) == axes:
+                res.count += c.scale
+                res.wire_bytes += c.wire_bytes
+                break
+        else:
+            report.stray.append(c)
+            report.violations.append(
+                f"stray collective: {c.kind} over axes "
+                f"{sorted(axes)} — {c.line[:120]}")
+    for res in results:
+        rule = res.rule
+        if not rule.min_count <= res.count <= rule.max_count:
+            report.violations.append(
+                f"{rule.label}: count {res.count:g} outside "
+                f"[{rule.min_count}, {rule.max_count}]"
+                + (f" ({rule.note})" if rule.note else ""))
+        if rule.expected_bytes is not None and res.count:
+            err = abs(res.wire_bytes - rule.expected_bytes)
+            if err > rule.tol * rule.expected_bytes:
+                report.violations.append(
+                    f"{rule.label}: wire bytes {res.wire_bytes:.0f} vs "
+                    f"closed-form {rule.expected_bytes:.0f} "
+                    f"(tol {rule.tol:.0%})"
+                    + (f" ({rule.note})" if rule.note else ""))
+    report.rule_results = results
+
+
+def _audit_replication(mod: HloModule, contract: CommContract,
+                       report: AuditReport) -> None:
+    if not contract.forbidden_suffixes and not contract.forbidden_dims:
+        return
+    flagged = 0
+    for comp in mod.comps:
+        if not mod.top_level(comp):
+            continue
+        for inst in mod.instructions(comp):
+            for _dtype, dims in shape_dims(inst.type_str):
+                bad = any(
+                    len(dims) >= len(suf) and dims[-len(suf):] == suf
+                    for suf in contract.forbidden_suffixes
+                ) or any(d in contract.forbidden_dims for d in dims)
+                if bad:
+                    flagged += 1
+                    if flagged <= 5:       # cap the noise, keep the count
+                        report.violations.append(
+                            f"replicated buffer {dims} in {comp}: "
+                            f"{inst.line.strip()[:120]}")
+                    break
+    if flagged > 5:
+        report.violations.append(
+            f"... {flagged - 5} more forbidden-shape buffers")
+
+
+def _audit_donation(mod: HloModule, contract: CommContract,
+                    report: AuditReport) -> None:
+    aliases = input_output_aliases(mod.text)
+    donors = buffer_donors(mod.text)
+    report.n_aliased = len({(a.param, a.param_index) for a in aliases})
+    report.n_donor = len(donors)
+    if contract.min_donated <= 0:
+        return
+    total = report.n_aliased + report.n_donor
+    if total < contract.min_donated:
+        report.violations.append(
+            f"donation dropped: {total} entry params aliased/donatable "
+            f"({report.n_aliased} aliased + {report.n_donor} donor), "
+            f"contract requires >= {contract.min_donated}")
+
+
+def audit_hlo(hlo_text: str, contract: CommContract,
+              program: Optional[str] = None) -> AuditReport:
+    """Run every audit of ``contract`` against one per-device
+    post-optimization HLO module text."""
+    mod = HloModule(hlo_text)
+    report = AuditReport(program=program or contract.name,
+                         contract=contract)
+    _audit_collectives(mod, contract, report)
+    _audit_replication(mod, contract, report)
+    _audit_donation(mod, contract, report)
+    return report
+
+
+def format_report_table(reports: List[AuditReport]) -> str:
+    """Fixed-width per-program contract table (the CLI/step-summary
+    output)."""
+    headers = ("program", "collectives (count, wire KiB / expected)",
+               "donated", "status")
+    rows: List[Tuple[str, str, str, str]] = []
+    for rep in reports:
+        cells = []
+        for res in rep.rule_results:
+            if not res.count and res.rule.min_count == 0:
+                continue
+            exp = (f"/{res.rule.expected_bytes / 1024:.1f}"
+                   if res.rule.expected_bytes is not None else "")
+            cells.append(f"{res.rule.label} x{res.count:g} "
+                         f"{res.wire_bytes / 1024:.1f}{exp}")
+        donated = f"{rep.n_aliased}+{rep.n_donor}"
+        if rep.contract.min_donated:
+            donated += f" (>= {rep.contract.min_donated})"
+        status = "OK" if rep.ok else f"FAIL ({len(rep.violations)})"
+        rows.append((rep.program, "; ".join(cells) or "none", donated,
+                     status))
+    widths = [max(len(headers[i]), *(len(r[i]) for r in rows)) if rows
+              else len(headers[i]) for i in range(4)]
+    lines = ["  ".join(h.ljust(w) for h, w in zip(headers, widths)),
+             "  ".join("-" * w for w in widths)]
+    lines += ["  ".join(c.ljust(w) for c, w in zip(row, widths))
+              for row in rows]
+    for rep in reports:
+        for v in rep.violations:
+            lines.append(f"  !! {rep.program}: {v}")
+    return "\n".join(lines)

@@ -1,0 +1,370 @@
+"""Lower every production jitted program and audit its CommContract.
+
+Program inventory (the complete set of jitted multi-device programs the
+repo ships — anything new belongs here with a contract):
+
+* ``train[<exchange>,<dedup>]`` — the shard_map SPMD train step
+  (``repro.training.distributed.make_spmd_train_step`` as the trainer
+  wires it), one per ``gather_exchange`` layout in ``SPMD_EXCHANGES``
+  × gather dedup on/off.  Contract: the exchange's own collectives on
+  the ``model`` axis (with closed-form wire bytes from the batch's plan
+  width), the gradient/loss pmean all-reduces on the ``data`` axis, and
+  NOTHING else; no buffer of full-table shape; donated batch buffers
+  survive to the executable.
+* ``rank[<protocol>]`` — the sharded rank-count step
+  (``repro.eval.sharded.make_sharded_rank_step``), both protocols.
+  Contract: only the integer-count/true-score psums on the ``model``
+  axis, with exact closed-form bytes.
+* ``serve[topk]`` — the sharded top-k serve program
+  (``repro.serving.kge.ShardedKGEServer.topk_program``).  Contract: no
+  collectives at all, and no buffer with a full-vocabulary dimension —
+  the ``(B, N)`` dense score matrix provably never materializes.
+
+Byte closed-forms (verified against live lowerings; ``U`` = plan width,
+``U'`` = ``U`` padded to a shard multiple, ``d`` = embedding dim, ``S``
+= model-axis size, f32):
+
+=============  =====================================================
+layout         expected exchange wire bytes
+=============  =====================================================
+psum           ``2·U·d·4``          (one dense all-reduce, ring 2x)
+psum_scatter   ``U'·d·4·(1 + 1/S)`` (reduce-scatter + tiled gather)
+alltoall       ``2·U'·d·4``         (all-to-all + tiled all-gather)
+=============  =====================================================
+
+Dedup shrinks ``U`` to the bucket-padded unique count — the formulas
+read the REAL batch's plan width, so the budget tracks dedup for free.
+
+The builders need the forced multi-device CPU platform
+(``XLA_FLAGS=--xla_force_host_platform_device_count=N`` before jax
+imports) — use the ``repro.launch.audit`` CLI or the tier-1 test's
+subprocess; importing this module does not import jax at top level for
+exactly that reason.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.analysis.contracts import (
+    AuditReport, CollectiveRule, CommContract, audit_hlo,
+)
+
+RANK_PROTOCOLS = ("all-entities", "candidates")
+_N_LOSS_SCALARS = 3     # loss + pos/neg score means (aux keys, CSE'd)
+
+
+@dataclasses.dataclass(frozen=True)
+class AuditConfig:
+    """One audited configuration — small enough for CPU CI, shaped like
+    production (multi-trainer data axis, multi-shard model axis)."""
+
+    num_trainers: int = 2
+    num_table_shards: int = 2
+    hidden_dim: int = 8
+    num_hops: int = 1
+    batch_size: int = 64
+    data_scale: float = 0.01     # synthetic_fb15k scale (V = 200)
+    seed: int = 3
+    eval_dim: int = 16
+    eval_batch: int = 16
+    eval_relations: int = 4
+    num_candidates: int = 8
+    serve_batch: int = 8
+    serve_k: int = 5
+
+
+def _mesh_axes(mesh) -> Tuple[Tuple[str, int], ...]:
+    return tuple((name, int(size)) for name, size in mesh.shape.items())
+
+
+def _guard_dims(name: str, legit: Sequence[int],
+                forbidden: Sequence[int]) -> None:
+    clash = sorted(set(legit) & set(forbidden))
+    if clash:
+        raise ValueError(
+            f"degenerate audit config for {name}: legitimate buffer "
+            f"dims {clash} collide with the forbidden full-table dims "
+            f"{sorted(set(forbidden))} — the replication audit could "
+            f"not tell them apart; pick different audit sizes")
+
+
+# ---------------------------------------------------------------------- #
+# train step
+# ---------------------------------------------------------------------- #
+def _build_trainer(cfg: AuditConfig, exchange: str, dedup: bool):
+    from repro.data.datasets import synthetic_fb15k
+    from repro.training.trainer import KGETrainer, TrainConfig
+    splits = synthetic_fb15k(scale=cfg.data_scale, seed=cfg.seed)
+    return KGETrainer(splits, TrainConfig(
+        num_trainers=cfg.num_trainers,
+        num_hops=cfg.num_hops,
+        hidden_dim=cfg.hidden_dim,
+        batch_size=cfg.batch_size,
+        num_table_shards=cfg.num_table_shards,
+        gather_exchange=exchange,
+        gather_dedup=dedup,
+        pipeline="serial",
+        spmd=True,
+        epochs=1,
+        seed=cfg.seed,
+    ))
+
+
+def train_contract(tr, batch: Dict, exchange: str,
+                   name: str) -> CommContract:
+    """The spmd train step's contract, computed from the trainer's REAL
+    mesh, parameter placement and the batch's plan width."""
+    import jax
+
+    axes = _mesh_axes(tr.mesh)
+    s = int(tr.mesh.shape["model"])
+    data = int(tr.mesh.shape["data"])
+    d = int(tr.cfg.hidden_dim)
+    u = int(batch["shard_local_ids"].shape[-1])
+    u_pad = -(-u // s) * s
+    itm = 4
+    # trainers stacked per data-axis device: the shard_body vmaps the
+    # exchange over them, so every exchange buffer (and its wire bytes)
+    # scales by t_dev while the collective COUNT stays 1
+    t_dev = int(tr.cfg.num_trainers) // data
+    rules: List[CollectiveRule] = []
+    if s > 1:
+        if exchange == "psum":
+            rules.append(CollectiveRule(
+                "all-reduce", ("model",),
+                expected_bytes=2.0 * t_dev * u * d * itm,
+                note="dense table-exchange psum"))
+        elif exchange == "psum_scatter":
+            rules.append(CollectiveRule(
+                "reduce-scatter", ("model",),
+                expected_bytes=float(t_dev * (u_pad // s) * d * itm),
+                note="scatter phase of the exchange"))
+            rules.append(CollectiveRule(
+                "all-gather", ("model",),
+                expected_bytes=float(t_dev * u_pad * d * itm),
+                note="tiled gather phase of the exchange"))
+        elif exchange == "alltoall":
+            rules.append(CollectiveRule(
+                "all-to-all", ("model",),
+                expected_bytes=float(t_dev * u_pad * d * itm),
+                note="shard-major exchange"))
+            rules.append(CollectiveRule(
+                "all-gather", ("model",),
+                expected_bytes=float(t_dev * u_pad * d * itm),
+                note="tiled gather phase of the exchange"))
+        else:
+            raise ValueError(f"no contract for exchange {exchange!r}")
+    leaves = jax.tree_util.tree_leaves(tr.params)
+    grad_bytes = sum(
+        math.prod(x.sharding.shard_shape(x.shape)) * x.dtype.itemsize
+        for x in leaves)
+    if data > 1:
+        rules.append(CollectiveRule(
+            "all-reduce", ("data",),
+            min_count=1, max_count=len(leaves) + _N_LOSS_SCALARS + 1,
+            expected_bytes=2.0 * (grad_bytes + _N_LOSS_SCALARS * itm),
+            note="gradient/loss pmean (Algorithm 1 line 8)"))
+
+    v = int(tr.train_kg.num_entities)
+    layout = tr.pre.table_layout
+    padded = (layout.num_shards * layout.rows_per_shard
+              if layout is not None else v)
+    _guard_dims(name, [u, u_pad, d], [v, padded])
+    return CommContract(
+        name=name, mesh_axes=axes, rules=tuple(rules),
+        forbidden_suffixes=tuple({(v, d), (padded, d)}),
+        min_donated=max(1, len(batch) - 3),
+        notes=f"V={v} d={d} U={u} U'={u_pad} mesh={dict(tr.mesh.shape)}")
+
+
+def audit_train_step(exchange: str, dedup: bool,
+                     cfg: Optional[AuditConfig] = None) -> AuditReport:
+    """Lower the production spmd train step for one exchange layout ×
+    dedup setting and audit its per-device HLO."""
+    from repro.training.distributed import (
+        make_spmd_train_step, split_trainer_keys,
+    )
+    import jax
+
+    cfg = cfg or AuditConfig()
+    tr = _build_trainer(cfg, exchange, dedup)
+    try:
+        it = tr.pipeline.device_batches(1)
+        batch = next(iter(it))
+        close = getattr(it, "close", None)
+        if close is not None:
+            close()
+        # the trainer turns donation off on CPU (where it is a warning
+        # no-op); the audit builds the SAME step with the real-backend
+        # donation flag so the donation contract is checked as shipped
+        step = make_spmd_train_step(
+            tr._minibatch_loss, tr.optimizer, tr.mesh,
+            param_specs=tr._param_specs, model_axis="model",
+            donate_batch=True)
+        keys = split_trainer_keys(
+            jax.random.PRNGKey(cfg.seed), cfg.num_trainers, 1)
+        keys = jax.vmap(jax.random.fold_in, (0, None))(keys, 0)
+        lowered = step.lower(tr.params, tr.opt_state, batch, keys)
+        hlo = lowered.compile().as_text()
+        name = f"train[{exchange}{',dedup' if dedup else ''}]"
+        return audit_hlo(hlo, train_contract(tr, batch, exchange, name))
+    finally:
+        tr.close()
+
+
+# ---------------------------------------------------------------------- #
+# sharded rank step
+# ---------------------------------------------------------------------- #
+def audit_rank_step(protocol: str,
+                    cfg: Optional[AuditConfig] = None) -> AuditReport:
+    """Lower ``make_sharded_rank_step`` for one protocol and audit it."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.eval.sharded import _model_axis_put, make_sharded_rank_step
+    from repro.launch.mesh import fit_spmd_mesh, make_host_mesh
+    from repro.models.decoders import get_decoder, init_decoder_params
+    from repro.sharding.embedding import (
+        ShardedTableLayout, plan_local_gather, shard_table_block,
+    )
+
+    cfg = cfg or AuditConfig()
+    fit = fit_spmd_mesh(cfg.num_trainers, cfg.num_table_shards)
+    if fit is None:
+        raise RuntimeError(
+            f"rank-step audit needs {cfg.num_table_shards} model-axis "
+            f"devices; {jax.device_count()} available")
+    mesh = make_host_mesh(*fit)
+    s = cfg.num_table_shards
+    b, d, c = cfg.eval_batch, cfg.eval_dim, cfg.num_candidates
+    v = 25 * s * d   # V: multiple of S (no layout padding), != any of b/d/c
+    layout = ShardedTableLayout(v, s)
+    rows = layout.rows_per_shard
+    rng = np.random.RandomState(cfg.seed)
+    emb = rng.standard_normal((v, d)).astype(np.float32)
+    dec = get_decoder("distmult")
+    dparams = jax.tree_util.tree_map(jnp.asarray, init_decoder_params(
+        jax.random.PRNGKey(cfg.seed), dec, cfg.eval_relations, d))
+
+    table = _model_axis_put(
+        (s, rows, d), lambda i: shard_table_block(emb, layout, i),
+        mesh, "model")
+    heads = rng.randint(0, v, size=b)
+    rel = jnp.asarray(rng.randint(0, cfg.eval_relations, size=b)
+                      .astype(np.int32))
+    q, q_bias = dec.prepare_query(dparams, jnp.asarray(emb[heads]), rel)
+
+    step = make_sharded_rank_step(mesh, decoder=dec, protocol=protocol)
+    itm = 4
+    if protocol == "all-entities":
+        bias = _model_axis_put(
+            (s, b, rows), lambda i: np.zeros((b, rows), np.float32),
+            mesh, "model")
+        t_li, t_ow = plan_local_gather(layout, rng.randint(0, v, size=b))
+        lowered = step.lower(dparams, table, q, q_bias, bias,
+                             jnp.asarray(t_li), jnp.asarray(t_ow))
+        # greater + equal (s32) + true_score (f32) psums, (B,) each
+        n_psums, psum_bytes = 3, 3 * 2.0 * b * itm
+    elif protocol == "candidates":
+        cand = rng.randint(0, v, size=(b, c))
+        c_li, c_ow = plan_local_gather(layout, cand)      # (S, B, C)
+        c_li = _model_axis_put((s, b, c), lambda i: c_li[i], mesh, "model")
+        c_ow = _model_axis_put((s, b, c), lambda i: c_ow[i], mesh, "model")
+        true_score = jnp.zeros((b,), jnp.float32)
+        lowered = step.lower(dparams, table, q, q_bias, c_li, c_ow,
+                             true_score)
+        n_psums, psum_bytes = 2, 2 * 2.0 * b * itm
+    else:
+        raise ValueError(f"unknown rank protocol {protocol!r}")
+
+    _guard_dims(f"rank[{protocol}]", [b, d, c, rows], [v])
+    contract = CommContract(
+        name=f"rank[{protocol}]",
+        mesh_axes=_mesh_axes(mesh),
+        rules=(CollectiveRule(
+            "all-reduce", ("model",), min_count=1, max_count=n_psums,
+            expected_bytes=psum_bytes,
+            note="integer rank-count / true-score psums"),),
+        forbidden_dims=(v,),
+        notes=f"V={v} B={b} d={d} rows={rows}")
+    return audit_hlo(lowered.compile().as_text(), contract)
+
+
+# ---------------------------------------------------------------------- #
+# sharded top-k serve step
+# ---------------------------------------------------------------------- #
+def audit_serve_step(cfg: Optional[AuditConfig] = None) -> AuditReport:
+    """Lower the sharded top-k serve program and audit it: no
+    collectives, and no buffer with a full-vocabulary dimension."""
+    import jax
+    import numpy as np
+
+    from repro.models.decoders import init_decoder_params
+    from repro.serving.kge import ShardedKGEServer
+
+    cfg = cfg or AuditConfig()
+    s, d, b, k = (cfg.num_table_shards, cfg.eval_dim, cfg.serve_batch,
+                  cfg.serve_k)
+    v = 25 * s * d
+    rng = np.random.RandomState(cfg.seed)
+    emb = rng.standard_normal((v, d)).astype(np.float32)
+    dparams = init_decoder_params(
+        jax.random.PRNGKey(cfg.seed), "distmult", cfg.eval_relations, d)
+    server = ShardedKGEServer(emb, dparams, "distmult", num_shards=s)
+    lowered = server.lower_topk(b, k)
+    _guard_dims("serve[topk]",
+                [b, d, k, server.layout.rows_per_shard,
+                 s * min(k, server.layout.rows_per_shard)], [v])
+    contract = CommContract(
+        name="serve[topk]",
+        mesh_axes=(),
+        rules=(),                      # any collective is a stray
+        forbidden_dims=(v,),
+        notes=f"V={v} B={b} k={k} S={s} — dense (B, N) scores must "
+              f"never materialize")
+    return audit_hlo(lowered.compile().as_text(), contract)
+
+
+# ---------------------------------------------------------------------- #
+# runner
+# ---------------------------------------------------------------------- #
+def run_audit(cfg: Optional[AuditConfig] = None,
+              programs: Sequence[str] = ("train", "rank", "serve"),
+              exchanges: Optional[Sequence[str]] = None,
+              dedups: Sequence[bool] = (False, True),
+              log=None) -> List[AuditReport]:
+    """Audit every requested production program; returns one report per
+    lowered module (all ok ⇔ the repo's communication contracts hold)."""
+    from repro.sharding.embedding import SPMD_EXCHANGES
+
+    cfg = cfg or AuditConfig()
+    exchanges = tuple(exchanges) if exchanges else SPMD_EXCHANGES
+    reports: List[AuditReport] = []
+
+    def note(msg):
+        if log is not None:
+            log(msg)
+
+    if "train" in programs:
+        for exchange in exchanges:
+            for dedup in dedups:
+                note(f"lowering train[{exchange}"
+                     f"{',dedup' if dedup else ''}] ...")
+                reports.append(audit_train_step(exchange, dedup, cfg))
+    if "rank" in programs:
+        for protocol in RANK_PROTOCOLS:
+            note(f"lowering rank[{protocol}] ...")
+            reports.append(audit_rank_step(protocol, cfg))
+    if "serve" in programs:
+        note("lowering serve[topk] ...")
+        reports.append(audit_serve_step(cfg))
+    return reports
+
+
+def comm_audit_rows(reports: List[AuditReport]) -> List[Dict]:
+    """JSON rows for the ``comm_audit`` section of
+    ``BENCH_pipeline.json`` (gated by ``benchmarks/run.py``)."""
+    return [r.as_row() for r in reports]

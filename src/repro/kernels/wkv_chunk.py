@@ -18,7 +18,6 @@ scratch state persists across a tile's chunks.  Oracle:
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -24,7 +24,7 @@ import json
 import sys
 import time
 import traceback
-from typing import Dict, Optional
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

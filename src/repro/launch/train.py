@@ -29,7 +29,7 @@ import numpy as np
 
 def train_kge(args) -> None:
     from repro.data import load_or_synthesize
-    from repro.training import KGETrainer, TrainConfig
+    from repro.training import KGETrainer
     from repro.configs import RGCN_FB15K237, RGCN_CITATION2
 
     name = "fb15k-237" if args.arch == "rgcn-fb15k237" else "ogbl-citation2"

@@ -52,7 +52,7 @@ from typing import Dict, Optional, Tuple, Union
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.kge_score import EPILOGUES, NORM_EPS, apply_epilogue
+from repro.kernels.kge_score import EPILOGUES, apply_epilogue
 
 
 # ====================================================================== #

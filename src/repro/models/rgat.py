@@ -11,7 +11,7 @@ h'_s = σ( Σ α_srt · W h_t ).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

@@ -21,7 +21,6 @@ frame embeddings, qwen2-vl consumes precomputed patch embeddings
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax

@@ -110,6 +110,7 @@ class ShardedKGEServer:
             collections.OrderedDict()
         self.cache_hits = 0
         self.cache_misses = 0
+        self._topk_programs: dict = {}      # k -> jitted program
 
     # ------------------------------------------------------------------ #
     # head-embedding fetch (sharded exchange + optional LRU)
@@ -153,6 +154,62 @@ class ShardedKGEServer:
     # ------------------------------------------------------------------ #
     # sharded top-k
     # ------------------------------------------------------------------ #
+    def topk_program(self, k: int):
+        """The jitted sharded top-k program for one static ``k``: ONE
+        device program per request — score each shard's row block,
+        reduce it to ``(B, k')`` immediately, merge — so the whole
+        serve step is a single lowered module the SPMD contract auditor
+        (``repro.analysis.programs``) can statically check: no
+        collectives, and no buffer with a full-vocabulary dimension.
+
+        Signature: ``program(table, prepared, params, q, q_bias, bias)
+        -> (values (B, k), tails (B, k))`` with ``table`` the ``(S,
+        rows, d)`` shard stack, ``prepared`` the per-shard candidate
+        cache, and ``bias`` the ``(S, B, rows)`` per-shard bias stack
+        (``-inf`` on layout padding).  Cached per ``k``.
+        """
+        k = min(int(k), self.num_entities)
+        prog = self._topk_programs.get(k)
+        if prog is not None:
+            return prog
+        rows = self.layout.rows_per_shard
+        kp = min(k, rows)    # per-shard k': enough for any global winner
+        num_shards = self.layout.num_shards
+        decoder, interpret = self.decoder, self.interpret
+
+        def program(table, prepared, params, q, q_bias, bias):
+            vals_parts, ids_parts = [], []
+            for s in range(num_shards):
+                scores = shard_scores(
+                    decoder, params, table[s], q, q_bias, bias[s],
+                    interpret, prepared=prepared[s])
+                v, i = topk_padded(scores, kp, interpret=interpret)
+                vals_parts.append(v)
+                ids_parts.append(i + s * rows)   # local → global id
+            vals = jnp.concatenate(vals_parts, axis=1)    # (B, S·k')
+            ids = jnp.concatenate(ids_parts, axis=1)
+            return merge_topk(vals, ids, k, interpret=interpret)
+
+        prog = jax.jit(program)
+        self._topk_programs[k] = prog
+        return prog
+
+    def lower_topk(self, batch_size: int, k: int = 10):
+        """``jax.stages.Lowered`` of :meth:`topk_program` for a
+        ``batch_size``-row request batch — the serve-side hook the SPMD
+        contract auditor lowers through.  Queries come from the
+        decoder's own ``prepare_query`` so the traced shapes match every
+        registered decoder."""
+        b = int(batch_size)
+        h = jnp.zeros((b, self.dim), jnp.float32)
+        rel = jnp.zeros((b,), jnp.int32)
+        q, q_bias = self.decoder.prepare_query(self.params, h, rel)
+        bias = jnp.zeros(
+            (self.layout.num_shards, b, self.layout.rows_per_shard),
+            jnp.float32)
+        return self.topk_program(k).lower(
+            self.table, self._prepared, self.params, q, q_bias, bias)
+
     def topk_tails(self, heads: np.ndarray, rels: np.ndarray, k: int = 10,
                    *, filtered: bool = False
                    ) -> Tuple[np.ndarray, np.ndarray]:
@@ -187,25 +244,18 @@ class ShardedKGEServer:
                         else None)
 
         rows = self.layout.rows_per_shard
-        kp = min(k, rows)    # per-shard k': enough for any global winner
-        vals_parts, ids_parts = [], []
-        for s in range(self.layout.num_shards):
-            if filtered:
-                # column-range CSR form; fills layout padding with -inf
-                bias = shard_filter_bias_block(
+        if filtered:
+            # column-range CSR form; fills layout padding with -inf
+            bias = np.stack([
+                shard_filter_bias_block(
                     self.filter_index, batch, self.layout, s, resolved)
-            else:
-                bias = np.broadcast_to(self._pad_bias[s], (b, rows))
-            scores = shard_scores(
-                self.decoder, self.params, self.table[s], q, q_bias,
-                jnp.asarray(bias), self.interpret,
-                prepared=self._prepared[s])
-            v, i = topk_padded(scores, kp, interpret=self.interpret)
-            vals_parts.append(v)
-            ids_parts.append(i + s * rows)   # local → global candidate id
-        vals = jnp.concatenate(vals_parts, axis=1)    # (B, S·k')
-        ids = jnp.concatenate(ids_parts, axis=1)
-        mv, mi = merge_topk(vals, ids, k, interpret=self.interpret)
+                for s in range(self.layout.num_shards)])
+        else:
+            bias = np.broadcast_to(self._pad_bias[:, None, :],
+                                   (self.layout.num_shards, b, rows))
+        mv, mi = self.topk_program(k)(
+            self.table, self._prepared, self.params, q, q_bias,
+            jnp.asarray(bias))
         return np.asarray(mv), np.asarray(mi)
 
 

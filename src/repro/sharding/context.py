@@ -9,7 +9,7 @@ unchanged.
 from __future__ import annotations
 
 import contextlib
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P

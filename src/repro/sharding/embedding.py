@@ -44,7 +44,7 @@ identical to the replicated gather:
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import Optional, Tuple
 
 import numpy as np
 
@@ -452,7 +452,7 @@ def _layout_row_range(shape) -> Tuple[int, int]:
 
 
 def convert_table_layout(arr: np.ndarray, target_shape,
-                         num_rows: int = None) -> np.ndarray:
+                         num_rows: Optional[int] = None) -> np.ndarray:
     """Convert an embedding table between layouts: dense ``(V, d)`` ⇄
     sharded ``(S, rows, d)`` (any shard count).  Row blocks are contiguous,
     so flattening a sharded table recovers global row order with the zero

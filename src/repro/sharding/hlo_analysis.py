@@ -20,117 +20,24 @@ parses the post-optimization (SPMD, per-device) HLO module text instead:
 
 All byte/FLOP numbers are per device (the module is the per-device SPMD
 program).
+
+The instruction/shape grammar and the dtype/collective tables live in
+``repro.analysis.hlo`` — one parsing core shared with the SPMD contract
+auditor (``repro.analysis.contracts``), so rank-0 (``f32[]``) and
+nested-tuple collective results are counted correctly here too.
 """
 from __future__ import annotations
 
 import re
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Tuple
 
-_DTYPE_BYTES = {
-    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
-    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
-    "c128": 16,
-}
+from repro.analysis.hlo import (
+    COLLECTIVE_KINDS, COLLECTIVE_WIRE_FACTOR, HEADER_RE, HloModule,
+    OPERAND_RE, PARAM_RE, first_shape_dims, iter_collectives,
+    parse_instruction, shape_bytes,
+)
 
-_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
-                "collective-permute")
-
-_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
-_DEF_RE = re.compile(
-    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*"
-    r"((?:\([^()]*\)|[\w.\-]+\[[0-9,]*\](?:\{[0-9,]*\})?))\s+"
-    r"([\w\-]+)\((.*)$")
-_HEADER_RE = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->")
-_PARAM_RE = re.compile(r"%?([\w.\-]+)\s*:\s*((?:\([^)]*\)|[\w\[\],{} ]+))")
 _CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
-_OPERAND_RE = re.compile(r"%([\w.\-]+)")
-_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
-_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
-_CALLS_RE = re.compile(r"(?:calls|to_apply|comparator)=%?([\w.\-]+)")
-_CONST_RE = re.compile(r"=\s*s32\[\]\s*constant\((\d+)\)")
-
-
-def _shape_bytes(text: str) -> int:
-    total = 0
-    for dtype, dims in _SHAPE_RE.findall(text):
-        n = 1
-        for d in dims.split(","):
-            if d:
-                n *= int(d)
-        total += n * _DTYPE_BYTES[dtype]
-    return total
-
-
-def _first_shape_dims(type_str: str) -> Optional[List[int]]:
-    m = _SHAPE_RE.search(type_str)
-    if not m:
-        return None
-    return [int(d) for d in m.group(1 + 1).split(",") if d]
-
-
-class _Module:
-    """Parsed HLO module: computations, loop graph, trip multipliers."""
-
-    def __init__(self, hlo_text: str, default_trip: int = 1):
-        self.comps: Dict[str, List[str]] = {}
-        self.entry: str = ""
-        cur: Optional[List[str]] = None
-        for line in hlo_text.splitlines():
-            h = _HEADER_RE.match(line)
-            if h and line.rstrip().endswith("{"):
-                name = h.group(1)
-                cur = []
-                self.comps[name] = cur
-                if line.lstrip().startswith("ENTRY"):
-                    self.entry = name
-                # parameters as pseudo-defs for the shape table
-                cur.append(line)
-                continue
-            if cur is not None:
-                cur.append(line)
-                if line.strip() == "}":
-                    cur = None
-
-        # loop graph: parent comp -> [(body, cond, trip)]
-        self.loops: Dict[str, List[Tuple[str, str, int]]] = {}
-        self.call_targets = set()
-        for name, lines in self.comps.items():
-            for line in lines:
-                b = _BODY_RE.search(line)
-                c = _COND_RE.search(line)
-                if b and c:
-                    trip = self._trip_from_cond(c.group(1), default_trip)
-                    self.loops.setdefault(name, []).append(
-                        (b.group(1), c.group(1), trip))
-                for t in _CALLS_RE.findall(line):
-                    self.call_targets.add(t)
-
-        # multipliers by DFS from entry
-        self.mult: Dict[str, float] = {}
-        if self.entry:
-            self._assign(self.entry, 1.0)
-        # computations never reached (e.g. dead) default to 1 when visited
-
-    def _trip_from_cond(self, cond: str, default: int) -> int:
-        lines = self.comps.get(cond, [])
-        consts = [int(m.group(1)) for line in lines
-                  for m in [_CONST_RE.search(line)] if m]
-        return max(consts) if consts else default
-
-    def _assign(self, comp: str, mult: float, depth: int = 0) -> None:
-        if depth > 32:
-            return
-        self.mult[comp] = max(self.mult.get(comp, 0.0), mult)
-        for body, cond, trip in self.loops.get(comp, []):
-            self._assign(body, mult * trip, depth + 1)
-            self._assign(cond, mult * trip, depth + 1)
-
-    def multiplier(self, comp: str) -> float:
-        return self.mult.get(comp, 1.0)
-
-    def top_level(self, comp: str) -> bool:
-        """entry / loop bodies / conds — not fusion internals."""
-        return comp == self.entry or comp not in self.call_targets
 
 
 def collective_stats(hlo_text: str, loop_trip_count: int = 1
@@ -138,24 +45,11 @@ def collective_stats(hlo_text: str, loop_trip_count: int = 1
     """Per-collective-kind {count, bytes}, per device, loop-scaled.
     ``loop_trip_count`` is only the FALLBACK when a loop condition's trip
     constant can't be parsed."""
-    mod = _Module(hlo_text, default_trip=loop_trip_count)
-    stats = {k: {"count": 0.0, "bytes": 0.0} for k in _COLLECTIVES}
-    op_re = re.compile(
-        r"=\s*(\([^()]*\)|[\w.\-]+\[[0-9,]*\](?:\{[0-9,]*\})?)\s+(" +
-        "|".join(_COLLECTIVES) + r")(-start)?\(")
-    for comp, lines in mod.comps.items():
-        scale = mod.multiplier(comp)
-        for line in lines:
-            if "-done(" in line:
-                continue
-            m = op_re.search(line)
-            if not m:
-                continue
-            size = _shape_bytes(m.group(1))
-            kind = m.group(2)
-            mult = 2.0 if kind == "all-reduce" else 1.0
-            stats[kind]["count"] += scale
-            stats[kind]["bytes"] += scale * mult * size
+    mod = HloModule(hlo_text, default_trip=loop_trip_count)
+    stats = {k: {"count": 0.0, "bytes": 0.0} for k in COLLECTIVE_KINDS}
+    for c in iter_collectives(mod):
+        stats[c.kind]["count"] += c.scale
+        stats[c.kind]["bytes"] += c.wire_bytes
     return stats
 
 
@@ -177,42 +71,49 @@ _MEM_OPS = {"fusion", "dot", "copy", "convert", "bitcast-convert",
 def analyze_hlo(hlo_text: str, loop_trip_count: int = 1
                 ) -> Dict[str, float]:
     """Loop-aware {flops, bytes} totals (per device)."""
-    mod = _Module(hlo_text, default_trip=loop_trip_count)
+    mod = HloModule(hlo_text, default_trip=loop_trip_count)
     flops_total = 0.0
     bytes_total = 0.0
 
     for comp, lines in mod.comps.items():
         scale = mod.multiplier(comp)
         shapes: Dict[str, str] = {}
-        header = _HEADER_RE.match(lines[0]) if lines else None
+        header = HEADER_RE.match(lines[0]) if lines else None
         if header:
-            for pname, ptype in _PARAM_RE.findall(header.group(2)):
+            for pname, ptype in PARAM_RE.findall(header.group(2)):
                 shapes[pname] = ptype
         top = mod.top_level(comp)
         for line in lines[1:]:
-            m = _DEF_RE.match(line)
-            if not m:
+            inst = parse_instruction(line)
+            if inst is None:
                 continue
-            var, vtype, op, rest = m.groups()
-            shapes[var] = vtype
-            if op == "dot":
+            shapes[inst.name] = inst.type_str
+            if inst.op == "dot":
                 dims = _CONTRACT_RE.search(line)
                 contract = 1
-                operands = _OPERAND_RE.findall(rest.split(")")[0])
+                operands = OPERAND_RE.findall(inst.rest.split(")")[0])
                 if dims and operands:
-                    lhs = _first_shape_dims(shapes.get(operands[0], ""))
+                    lhs = first_shape_dims(shapes.get(operands[0], ""))
                     if lhs:
                         for d in dims.group(1).split(","):
                             if d:
                                 contract *= lhs[int(d)]
-                out_dims = _first_shape_dims(vtype) or []
+                out_dims = first_shape_dims(inst.type_str) or []
                 numel = 1
                 for d in out_dims:
                     numel *= d
                 flops_total += scale * 2.0 * numel * contract
-            if top and op in _MEM_OPS:
+            if top and inst.op in _MEM_OPS:
                 operand_bytes = 0
-                for name in _OPERAND_RE.findall(rest.split("),")[0]):
-                    operand_bytes += _shape_bytes(shapes.get(name, ""))
-                bytes_total += scale * (_shape_bytes(vtype) + operand_bytes)
+                for name in OPERAND_RE.findall(inst.rest.split("),")[0]):
+                    operand_bytes += shape_bytes(shapes.get(name, ""))
+                bytes_total += scale * (shape_bytes(inst.type_str)
+                                        + operand_bytes)
     return {"flops": flops_total, "bytes": bytes_total}
+
+
+# re-exported for callers that sized buffers off the roofline tables
+__all__ = [
+    "COLLECTIVE_KINDS", "COLLECTIVE_WIRE_FACTOR", "analyze_hlo",
+    "collective_stats", "total_collective_bytes",
+]

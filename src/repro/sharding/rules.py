@@ -25,7 +25,7 @@ the shard-local gather + psum exchange.
 """
 from __future__ import annotations
 
-from typing import Any, Optional, Sequence, Tuple
+from typing import Any, Sequence, Tuple
 
 import jax
 import numpy as np

@@ -200,14 +200,27 @@ def make_spmd_train_step(
         return jax.jit(sharded,
                        donate_argnums=(2,) if donate_batch else ())
 
-    def step(params, opt_state, batch, keys):
+    def _lookup(params, opt_state, batch):
         key = (jax.tree_util.tree_structure(opt_state),
                tuple(sorted(batch)))
         fn = cache.get(key)
         if fn is None:
             cache[key] = fn = build(params, opt_state, batch)
+        return fn
+
+    def step(params, opt_state, batch, keys):
+        fn = _lookup(params, opt_state, batch)
         return fn(params, opt_state, batch, keys)
 
+    def lower(params, opt_state, batch, keys):
+        """``jax.stages.Lowered`` for the same jit the step would run —
+        the hook ``repro.analysis.programs`` audits the post-SPMD HLO
+        through (compile it and read ``.as_text()`` for the per-device
+        module)."""
+        return _lookup(params, opt_state, batch).lower(
+            params, opt_state, batch, keys)
+
+    step.lower = lower
     return step
 
 

@@ -299,6 +299,26 @@ class KGETrainer:
                               model_axis=self._model_axis)
 
     # ------------------------------------------------------------------ #
+    def lower_step(self, batch=None):
+        """``jax.stages.Lowered`` of the trainer's jitted train step for
+        one real pipeline batch — the entry point the SPMD contract
+        auditor (``repro.analysis.programs``) lowers each production
+        configuration through.  ``batch`` defaults to the pipeline's
+        first batch of the next epoch; compile the result and read
+        ``.as_text()`` for the post-optimization per-device module."""
+        if batch is None:
+            it = self.pipeline.device_batches(self._epoch + 1)
+            batch = next(iter(it))
+            close = getattr(it, "close", None)
+            if close is not None:
+                close()
+        keys = split_trainer_keys(self._key, self.cfg.num_trainers,
+                                  self._epoch + 1)
+        if not self._fullgraph:
+            keys = jax.vmap(jax.random.fold_in, (0, None))(keys, 0)
+        return self._step.lower(self.params, self.opt_state, batch, keys)
+
+    # ------------------------------------------------------------------ #
     def train_epoch(self) -> Dict[str, float]:
         cfg = self.cfg
         self._epoch += 1

@@ -1,0 +1,429 @@
+"""Tests for ``repro.analysis`` — the shared HLO parsing core and the
+SPMD contract auditor.
+
+Three layers:
+
+* parser units pinned against hand-written HLO text (rank-0 shapes,
+  nested tuple types, both replica-group syntaxes, donation headers) and
+  against a LIVE ``jit(...).lower().compile().as_text()`` module so the
+  grammar tracks the real backend;
+* hand-written violation modules that must FAIL each audit — a stray
+  collective, a dropped donation, a replicated full-table buffer, a
+  wire-byte overshoot — plus the green-path module that passes all of
+  them (the auditor is tested in both directions);
+* the ``repro.launch.audit`` CLI run as a subprocess on a forced
+  multi-device CPU mesh over the real production programs.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis import (
+    CollectiveRule, CommContract, HloModule,
+    audit_hlo, buffer_donors, entry_parameters, format_report_table,
+    group_axes, input_output_aliases, iter_collectives,
+    parse_instruction, parse_replica_groups, shape_bytes, shape_dims,
+    used_parameter_numbers,
+)
+from repro.sharding.hlo_analysis import collective_stats
+
+
+# ---------------------------------------------------------------------- #
+# shape / instruction grammar
+# ---------------------------------------------------------------------- #
+class TestShapeGrammar:
+    def test_rank0_is_one_element(self):
+        # regression: a rank-0 ``f32[]`` is ONE element (4 bytes), not 0
+        assert shape_bytes("f32[]") == 4
+        assert shape_bytes("s32[]") == 4
+        assert shape_bytes("pred[]") == 1
+        assert shape_dims("f32[]") == [("f32", ())]
+
+    def test_tuple_sums_members(self):
+        assert shape_bytes("(f32[4], s32[])") == 16 + 4
+        assert shape_bytes("f32[2,3]") == 24
+
+    def test_nested_tuple_with_layouts(self):
+        t = "((f32[2,4]{1,0}, f32[]), s32[4])"
+        assert shape_bytes(t) == 32 + 4 + 16
+        assert shape_dims(t) == [
+            ("f32", (2, 4)), ("f32", ()), ("s32", (4,))]
+
+    def test_parse_instruction_simple(self):
+        inst = parse_instruction("  %p.1 = f32[8,16]{1,0} parameter(0)")
+        assert inst is not None
+        assert (inst.name, inst.op, inst.is_root) == ("p.1", "parameter",
+                                                      False)
+        assert inst.type_str == "f32[8,16]{1,0}"
+
+    def test_parse_instruction_nested_tuple_root(self):
+        # regression: the legacy single-regex parser rejected nested
+        # tuple result types entirely
+        line = ("  ROOT %t.9 = ((f32[2,4], f32[]), s32[4]) "
+                "tuple(%a.1, %b.2)")
+        inst = parse_instruction(line)
+        assert inst is not None
+        assert inst.is_root and inst.op == "tuple"
+        assert inst.type_str == "((f32[2,4], f32[]), s32[4])"
+        assert shape_bytes(inst.type_str) == 52
+
+    def test_live_lowering_rank0_tuple_root(self):
+        # pin the grammar against the real backend: the jitted program
+        # returns (scalar, vector); the entry ROOT must parse and its
+        # rank-0 member must count 4 bytes
+        x = jnp.arange(4, dtype=jnp.float32)
+        text = (jax.jit(lambda v: (jnp.sum(v), v))
+                .lower(x).compile().as_text())
+        mod = HloModule(text)
+        roots = [i for i in mod.instructions(mod.entry) if i.is_root]
+        assert len(roots) == 1
+        assert shape_bytes(roots[0].type_str) == 4 + 16
+
+
+# ---------------------------------------------------------------------- #
+# replica groups and mesh-axis classification
+# ---------------------------------------------------------------------- #
+MESH_2X2 = (("data", 2), ("model", 2))
+
+
+class TestReplicaGroups:
+    def test_absent_vs_empty(self):
+        assert parse_replica_groups("all-reduce(%x)") is None
+        assert parse_replica_groups(
+            "all-reduce(%x), replica_groups={}") == ()
+
+    def test_explicit(self):
+        line = "all-gather(%x), replica_groups={{0,1},{2,3}}, dimensions={1}"
+        assert parse_replica_groups(line) == ((0, 1), (2, 3))
+
+    def test_iota_plain(self):
+        assert parse_replica_groups(
+            "all-reduce(%x), replica_groups=[2,2]<=[4]"
+        ) == ((0, 1), (2, 3))
+
+    def test_iota_transposed(self):
+        assert parse_replica_groups(
+            "all-reduce(%x), replica_groups=[2,2]<=[2,2]T(1,0)"
+        ) == ((0, 2), (1, 3))
+
+    def test_group_axes_minor_is_model(self):
+        assert group_axes(((0, 1), (2, 3)), MESH_2X2) == {"model"}
+
+    def test_group_axes_major_is_data(self):
+        assert group_axes(((0, 2), (1, 3)), MESH_2X2) == {"data"}
+
+    def test_group_axes_flat_spans_all(self):
+        assert group_axes(None, MESH_2X2) == {"data", "model"}
+        assert group_axes((), MESH_2X2) == {"data", "model"}
+        assert group_axes(((0, 1, 2, 3),), MESH_2X2) == {"data", "model"}
+
+    def test_group_axes_singletons_span_none(self):
+        # a degenerate collective (all groups of size 1) moves no bytes
+        assert group_axes(((0,), (1,), (2,), (3,)), MESH_2X2) \
+            == frozenset()
+
+
+# ---------------------------------------------------------------------- #
+# donation headers / entry parameters
+# ---------------------------------------------------------------------- #
+_HEADER = ("HloModule jit_step, "
+           "input_output_alias={ {0}: (3, {}, may-alias), "
+           "{1,2}: (5, {1}, must-alias) }, "
+           "buffer_donor={ (4, {}), (6, {0}) }, "
+           "entry_computation_layout={(f32[4])->f32[4]}")
+
+
+class TestDonationHeaders:
+    def test_aliases_nested_indices(self):
+        aliases = input_output_aliases(_HEADER)
+        assert len(aliases) == 2
+        assert (aliases[0].output_index, aliases[0].param,
+                aliases[0].param_index, aliases[0].kind) \
+            == ((0,), 3, (), "may-alias")
+        assert (aliases[1].output_index, aliases[1].param,
+                aliases[1].param_index, aliases[1].kind) \
+            == ((1, 2), 5, (1,), "must-alias")
+
+    def test_buffer_donors(self):
+        assert buffer_donors(_HEADER) == {(4, ()), (6, (0,))}
+
+    def test_absent(self):
+        assert input_output_aliases("HloModule jit_step") == []
+        assert buffer_donors("HloModule jit_step") == set()
+
+    def test_entry_parameter_usage(self):
+        text = """\
+HloModule m
+
+ENTRY %main.5 (p0.1: f32[4], p1.2: f32[4], p2.3: s32[4]) -> f32[4] {
+  %p0.1 = f32[4] parameter(0)
+  %p1.2 = f32[4] parameter(1)
+  %p2.3 = s32[4] parameter(2)
+  ROOT %a.4 = f32[4] add(%p0.1, %p1.2)
+}
+"""
+        mod = HloModule(text)
+        assert set(entry_parameters(mod)) == {0, 1, 2}
+        assert used_parameter_numbers(mod) == {0, 1}  # p2.3 is dead
+
+
+# ---------------------------------------------------------------------- #
+# collective iteration / legacy collective_stats wrapper
+# ---------------------------------------------------------------------- #
+_ADD_COMP = """\
+%add.1 (lhs.2: f32[], rhs.3: f32[]) -> f32[] {
+  %lhs.2 = f32[] parameter(0)
+  %rhs.3 = f32[] parameter(1)
+  ROOT %s.4 = f32[] add(%lhs.2, %rhs.3)
+}
+"""
+
+
+def _module(body_lines, header="HloModule jit_step",
+            params="p0.1: f32[1,124,8], p1.2: f32[1,248,8], "
+                   "p2.3: f32[1,100,8], p3.4: s32[2,248], "
+                   "p4.5: s32[2,248]"):
+    body = "\n".join(f"  {ln}" for ln in body_lines)
+    return f"""\
+{header}
+
+{_ADD_COMP}
+ENTRY %main.20 ({params}) -> (f32[1,100,8], f32[]) {{
+  %p0.1 = f32[1,124,8] parameter(0)
+  %p1.2 = f32[1,248,8] parameter(1)
+  %p2.3 = f32[1,100,8] parameter(2)
+  %p3.4 = s32[2,248] parameter(3)
+  %p4.5 = s32[2,248] parameter(4)
+{body}
+  %loss.10 = f32[] constant(0)
+  ROOT %t.19 = (f32[1,100,8], f32[]) tuple(%gar.9, %loss.10)
+}}
+"""
+
+
+# the green-path module: one psum_scatter-style exchange on the model
+# axis (reduce-scatter + all-gather) plus a gradient all-reduce on the
+# data axis, batch buffers donated — exactly what the train contract
+# whitelists
+_GREEN_BODY = [
+    "%rs.6 = f32[1,124,8] reduce-scatter(%p1.2), "
+    "replica_groups={{0,1},{2,3}}, dimensions={1}, to_apply=%add.1",
+    "%ag.7 = f32[1,248,8] all-gather(%rs.6), "
+    "replica_groups={{0,1},{2,3}}, dimensions={1}",
+    "%gar.9 = f32[1,100,8] all-reduce(%p2.3), "
+    "replica_groups={{0,2},{1,3}}, to_apply=%add.1",
+]
+_GREEN_HEADER = ("HloModule jit_step, "
+                 "input_output_alias={ {0}: (3, {}, may-alias) }, "
+                 "buffer_donor={ (4, {}) }")
+GREEN = _module(_GREEN_BODY, header=_GREEN_HEADER)
+
+
+def _contract(**overrides):
+    base = dict(
+        name="snippet",
+        mesh_axes=MESH_2X2,
+        rules=(
+            CollectiveRule("reduce-scatter", ("model",),
+                           expected_bytes=124 * 8 * 4.0),
+            CollectiveRule("all-gather", ("model",),
+                           expected_bytes=248 * 8 * 4.0),
+            CollectiveRule("all-reduce", ("data",),
+                           expected_bytes=2.0 * 100 * 8 * 4),
+        ),
+        forbidden_suffixes=((200, 8),),
+        min_donated=2,
+    )
+    base.update(overrides)
+    return CommContract(**base)
+
+
+class TestCollectiveIteration:
+    def test_green_module_collectives(self):
+        cs = iter_collectives(HloModule(GREEN))
+        assert sorted(c.kind for c in cs) \
+            == ["all-gather", "all-reduce", "reduce-scatter"]
+        ar = next(c for c in cs if c.kind == "all-reduce")
+        assert ar.result_bytes == 100 * 8 * 4
+        assert ar.wire_bytes == 2.0 * 100 * 8 * 4  # ring factor
+
+    def test_async_pair_counted_once(self):
+        body = list(_GREEN_BODY)
+        body[2] = ("%gars.8 = f32[1,100,8] all-reduce-start(%p2.3), "
+                   "replica_groups={{0,2},{1,3}}, to_apply=%add.1")
+        body.append("%gar.9 = f32[1,100,8] all-reduce-done(%gars.8)")
+        cs = iter_collectives(HloModule(_module(body,
+                                                header=_GREEN_HEADER)))
+        assert len([c for c in cs if c.kind == "all-reduce"]) == 1
+        # and the whole contract still audits clean through async forms
+        assert audit_hlo(_module(body, header=_GREEN_HEADER),
+                         _contract()).ok
+
+    def test_nested_tuple_collective_bytes(self):
+        # regression: an all-to-all with a tuple result was invisible to
+        # the legacy single-regex parser; the shared core must count
+        # every member
+        body = list(_GREEN_BODY) + [
+            "%a2a.11 = (f32[64,8], f32[64,8]) all-to-all(%p0.1, %p0.1), "
+            "replica_groups={{0,1},{2,3}}, dimensions={0}",
+        ]
+        stats = collective_stats(_module(body, header=_GREEN_HEADER))
+        assert stats["all-to-all"]["count"] == 1
+        assert stats["all-to-all"]["bytes"] == 2 * 64 * 8 * 4
+
+
+# ---------------------------------------------------------------------- #
+# the audits, both directions
+# ---------------------------------------------------------------------- #
+class TestAuditGreenPath:
+    def test_green_module_passes_every_audit(self):
+        report = audit_hlo(GREEN, _contract())
+        assert report.ok, report.violations
+        assert [r.count for r in report.rule_results] == [1, 1, 1]
+        assert report.n_aliased == 1 and report.n_donor == 1
+
+    def test_report_row_shape(self):
+        row = audit_hlo(GREEN, _contract()).as_row()
+        assert row["ok"] and row["violations"] == []
+        assert row["wire_bytes"] == row["expected_bytes"] \
+            == 124 * 8 * 4 + 248 * 8 * 4 + 2 * 100 * 8 * 4
+
+    def test_degenerate_collective_ignored(self):
+        # all-singleton groups move no bytes: not a stray even with an
+        # empty whitelist
+        body = ["%gar.9 = f32[1,100,8] all-reduce(%p2.3), "
+                "replica_groups={{0},{1},{2},{3}}, to_apply=%add.1"]
+        report = audit_hlo(
+            _module(body, header=_GREEN_HEADER),
+            _contract(rules=(), min_donated=0))
+        assert report.ok, report.violations
+
+    def test_format_table(self):
+        good = audit_hlo(GREEN, _contract())
+        bad = audit_hlo(_module(_GREEN_BODY), _contract())  # no donation
+        table = format_report_table([good, bad])
+        assert "OK" in table and "FAIL" in table
+        assert "!! snippet: donation dropped" in table
+
+
+class TestAuditViolations:
+    def test_stray_all_gather_rejected(self):
+        body = list(_GREEN_BODY) + [
+            "%sg.12 = f32[1,248,8] all-gather(%p1.2), "
+            "replica_groups={{0,2},{1,3}}, dimensions={1}",
+        ]
+        report = audit_hlo(_module(body, header=_GREEN_HEADER),
+                           _contract())
+        assert not report.ok
+        assert any("stray collective: all-gather" in v
+                   and "data" in v for v in report.violations)
+        assert len(report.stray) == 1
+
+    def test_count_overflow_rejected(self):
+        body = list(_GREEN_BODY) + [
+            "%rs2.13 = f32[1,124,8] reduce-scatter(%p1.2), "
+            "replica_groups={{0,1},{2,3}}, dimensions={1}, "
+            "to_apply=%add.1",
+        ]
+        report = audit_hlo(_module(body, header=_GREEN_HEADER),
+                           _contract())
+        assert any("count 2 outside [1, 1]" in v
+                   for v in report.violations)
+
+    def test_byte_overshoot_rejected(self):
+        # the reduce-scatter result claims the FULL row block instead of
+        # the 1/S shard: double the closed-form budget
+        body = list(_GREEN_BODY)
+        body[0] = body[0].replace("f32[1,124,8] reduce-scatter",
+                                  "f32[1,248,8] reduce-scatter")
+        report = audit_hlo(_module(body, header=_GREEN_HEADER),
+                           _contract())
+        assert any("wire bytes 7936 vs closed-form 3968" in v
+                   for v in report.violations)
+
+    def test_replicated_table_buffer_rejected(self):
+        # a (V, d) = (200, 8) buffer materializing in the entry is the
+        # static signature of a replicated table
+        body = list(_GREEN_BODY) + [
+            "%bad.14 = f32[200,8] broadcast(%loss.10), dimensions={}",
+        ]
+        report = audit_hlo(_module(body, header=_GREEN_HEADER),
+                           _contract())
+        assert any("replicated buffer (200, 8)" in v
+                   for v in report.violations)
+
+    def test_forbidden_dim_rejected(self):
+        body = list(_GREEN_BODY) + [
+            "%bad.15 = f32[7,200] broadcast(%loss.10), dimensions={}",
+        ]
+        report = audit_hlo(
+            _module(body, header=_GREEN_HEADER),
+            _contract(forbidden_suffixes=(), forbidden_dims=(200,)))
+        assert any("replicated buffer (7, 200)" in v
+                   for v in report.violations)
+
+    def test_dropped_donation_rejected(self):
+        report = audit_hlo(_module(_GREEN_BODY), _contract())
+        assert any("donation dropped: 0 entry params" in v
+                   for v in report.violations)
+
+    def test_missing_required_collective_rejected(self):
+        body = [ln for ln in _GREEN_BODY if "reduce-scatter" not in ln]
+        body[0] = body[0].replace("all-gather(%rs.6)",
+                                  "all-gather(%p0.1)")
+        report = audit_hlo(_module(body, header=_GREEN_HEADER),
+                           _contract())
+        assert any("reduce-scatter@model: count 0 outside [1, 1]" in v
+                   for v in report.violations)
+
+
+# ---------------------------------------------------------------------- #
+# the CLI over the real production programs, forced multi-device CPU
+# ---------------------------------------------------------------------- #
+def _run_audit_cli(tmp_path, extra_args):
+    repo = os.path.join(os.path.dirname(__file__), "..")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(repo, "src")
+    # the CLI module appends --xla_force_host_platform_device_count
+    # itself, before importing jax
+    out = tmp_path / "audit.json"
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.audit", "--quiet",
+         "--json", str(out)] + extra_args,
+        cwd=repo, env=env, capture_output=True, text=True, timeout=540)
+    payload = json.loads(out.read_text()) if out.exists() else None
+    return proc, payload
+
+
+def test_audit_cli_two_device_mesh(tmp_path):
+    # 2 devices: 1x2 data x model mesh — the data axis degenerates and
+    # the contracts must still hold exactly
+    proc, payload = _run_audit_cli(
+        tmp_path, ["--devices", "2", "--exchanges", "psum_scatter"])
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert payload["devices"] == 2
+    rows = payload["comm_audit"]
+    assert [r["program"] for r in rows] == [
+        "train[psum_scatter]", "train[psum_scatter,dedup]",
+        "rank[all-entities]", "rank[candidates]", "serve[topk]"]
+    assert all(r["ok"] for r in rows), rows
+
+
+def test_audit_cli_full_sweep_four_devices(tmp_path):
+    # 4 devices: 2x2 mesh, BOTH axes carry collectives; every layout x
+    # dedup, both rank protocols, the serve step — all 9 programs
+    proc, payload = _run_audit_cli(tmp_path, ["--devices", "4"])
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    rows = payload["comm_audit"]
+    assert len(rows) == 9
+    assert all(r["ok"] for r in rows), rows
+    # byte budgets are exact closed forms, not just "within tolerance"
+    for r in rows:
+        if r["program"].startswith("train["):
+            assert r["expected_bytes"] > 0
+    assert "train[alltoall,dedup]" in proc.stdout
+    assert "audit ok: 9 programs" in proc.stderr

@@ -1,6 +1,4 @@
 """Constraint-based negative sampling (§3.3.1) + edge mini-batch (§3.3.2)."""
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -8,12 +6,11 @@ import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.core import (
-    BatchBudget, build_comp_graph, build_edge_minibatch,
+    build_comp_graph, build_edge_minibatch,
     constraint_based_negatives, global_closed_world_negatives,
     iterate_edge_minibatches, mix_pos_neg, plan_budgets,
     sample_epoch_negatives, stack_minibatches,
 )
-from repro.core.minibatch import _PartitionCSR
 
 
 class TestConstraintNegatives:

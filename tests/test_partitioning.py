@@ -6,7 +6,7 @@ from _hypothesis_compat import given, settings, st
 from repro.core import (
     expand_all, expand_partition, load_balance, make_synthetic_kg,
     pad_partitions, partition_graph, replication_factor,
-    verify_self_sufficiency, core_vertices,
+    verify_self_sufficiency,
 )
 
 

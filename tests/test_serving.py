@@ -13,7 +13,7 @@ import pytest
 
 from repro.core.graph import KnowledgeGraph
 from repro.eval.ranking import (
-    CSRFilterIndex, FILTER_BIAS, _filter_bias, build_filter_index,
+    CSRFilterIndex, _filter_bias, build_filter_index,
 )
 from repro.kernels.ops import merge_topk, topk_padded
 from repro.kernels.ref import topk_ref
@@ -21,7 +21,7 @@ from repro.models.decoders import (
     init_decoder_params, registered_decoders, score_against_candidates,
 )
 from repro.serving import (
-    KGEQuery, KGEServeEngine, KGEServer, Request, ServeEngine,
+    KGEServeEngine, KGEServer, Request, ServeEngine,
     ShardedKGEServer,
 )
 

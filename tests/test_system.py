@@ -5,7 +5,6 @@ These are the paper-level integration tests: full distributed pipeline
 scale that runs on CPU in seconds.
 """
 import numpy as np
-import pytest
 
 from repro.data import synthetic_citation2, synthetic_fb15k
 from repro.training import KGETrainer, TrainConfig
