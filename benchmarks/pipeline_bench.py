@@ -197,6 +197,50 @@ def _time_gather(fn, *args, iters: int = 30) -> float:
     return (time.perf_counter() - t0) / iters
 
 
+QUANT_BYTES_RATIO_LIMIT = 0.3   # int8 table bytes / fp32 bytes per device
+#   — closed form (d·1 + 4) / (d·4) = 0.266 at d=64; gated so a storage
+#   regression (e.g. accidentally materializing fp32 rows) cannot land
+QUANT_MRR_DRIFT_LIMIT = 0.02    # |MRR(int8) - MRR(fp32)| on the sharded
+#   eval — the documented accuracy cost of row-wise symmetric int8 with
+#   pow2 scales (per-element error <= scale/2); measured drift on the
+#   quick synthetic eval is ~1e-3
+
+
+def _quant_eval_drift(quick: bool, shards_out: List[Dict]) -> Dict:
+    """Measure the int8 table's end-to-end accuracy cost: filtered MRR of
+    the 2-shard sharded eval over the quantized table vs the identical
+    eval over the fp32 table, same embeddings, same filter index.  Gated
+    by ``benchmarks/run.py`` together with the per-device bytes ratio."""
+    from repro.core.graph import make_synthetic_kg, split_train_valid_test
+    from repro.eval import CSRFilterIndex, ranking_metrics
+
+    n_ent, n_rel, n_edge = (2000, 8, 12_000) if quick else \
+        (10_000, 24, 80_000)
+    d = 32 if quick else 64
+    kg = make_synthetic_kg(n_ent, n_rel, n_edge, seed=0)
+    splits = split_train_valid_test(kg)
+    graphs = [g.with_inverse_relations() for g in splits.values()]
+    csr = CSRFilterIndex.build(graphs)
+    rng = np.random.default_rng(1)
+    emb = rng.normal(size=(n_ent, d)).astype(np.float32)
+    dparams = {"rel_diag":
+               rng.normal(size=(2 * n_rel, d)).astype(np.float32)}
+    test = splits["test"].with_inverse_relations().triplets()[:256]
+    m_fp32 = ranking_metrics(emb, dparams, test, csr, num_shards=2)
+    m_int8 = ranking_metrics(emb, dparams, test, csr, num_shards=2,
+                             table_dtype="int8")
+    two = next(r for r in shards_out if r["num_shards"] == 2)
+    return {
+        "bytes_ratio_limit": QUANT_BYTES_RATIO_LIMIT,
+        "bytes_ratio_2shard": two["quant_bytes_ratio"],
+        "mrr_drift_limit": QUANT_MRR_DRIFT_LIMIT,
+        "mrr_fp32": round(m_fp32["mrr"], 6),
+        "mrr_int8": round(m_int8["mrr"], 6),
+        "mrr_drift": round(abs(m_int8["mrr"] - m_fp32["mrr"]), 6),
+        "eval": {"entities": n_ent, "dim": d, "test_triplets": len(test)},
+    }
+
+
 def _zipf_ids(rng, v: int, batch: int, a: float = 1.3) -> np.ndarray:
     """Skewed gather ids on the workload shape KGE batches actually have:
     Zipf-ranked popularity over a random entity permutation (so the hot
@@ -219,12 +263,21 @@ def run_embedding(quick: bool = True) -> List[Dict]:
     ``benchmarks/run.py`` exits non-zero when the 2-shard ratio exceeds
     ``GATE_RATIO``.  A zipfian id case measures dedup on skewed batches.
     Per-device table bytes must shrink ∝ 1/num_shards — that is the
-    capacity the sharding buys."""
+    capacity the sharding buys.
+
+    Each shard count also measures the quantized (int8) table: the
+    fused-dequant gather time, the per-device bytes
+    (``rows·(d + 4)`` — codes plus the f32 scale sidecar, gated at
+    ``QUANT_BYTES_RATIO_LIMIT`` x fp32) and the closed-form exchange
+    wire bytes per row; a top-level ``quant`` section measures the
+    end-to-end MRR drift of the int8 sharded eval vs fp32 (gated at
+    ``QUANT_MRR_DRIFT_LIMIT``)."""
     import jax
     import jax.numpy as jnp
     from repro.sharding.embedding import (
-        ShardedTableLayout, plan_local_gather, plan_unique_gather,
-        shard_table, sharded_gather,
+        QuantizedTableLayout, ShardedTableLayout, plan_local_gather,
+        plan_unique_gather, quantize_rows, shard_table, sharded_gather,
+        sharded_dequant_gather,
     )
 
     v, d = (20_000, 64) if quick else (200_000, 128)
@@ -238,6 +291,8 @@ def run_embedding(quick: bool = True) -> List[Dict]:
         jax.jit(lambda t, i: (t[i],)), table, jnp.asarray(ids)) * 1e6
 
     fused_fn = jax.jit(lambda t, i, o: (sharded_gather(t, i, o),))
+    quant_fn = jax.jit(lambda c, sc, i, o: (
+        sharded_dequant_gather(c, sc, i, o),))
     chain_fn = jax.jit(lambda t, i, o: (
         sharded_gather(t, i, o, exchange="masked_sum"),))
     dedup_fn = jax.jit(lambda t, i, o, inv: (
@@ -264,6 +319,15 @@ def run_embedding(quick: bool = True) -> List[Dict]:
         sh = shard_table(table, layout)
         uni = time_variants(layout, sh, ids)
         zip_ = time_variants(layout, sh, zipf)
+        # quantized (int8) variant: same gather plan over the int8 code
+        # stack + per-row f32 scales, dequant fused into the gather —
+        # per-device bytes drop to rows·(d·1 + 4) and only int8 codes
+        # (plus the 4-byte scale sidecar) would cross the wire
+        codes, scales = quantize_rows(sh)
+        li, ow = plan_local_gather(layout, ids)
+        quant_us = _time_gather(
+            quant_fn, codes, scales, jnp.asarray(li), jnp.asarray(ow)) * 1e6
+        q_bytes = QuantizedTableLayout(v, s).bytes_per_shard(d)
         shards_out.append({
             "num_shards": s,
             "gather_exchange_us": round(uni["fused_us"], 2),
@@ -280,6 +344,13 @@ def run_embedding(quick: bool = True) -> List[Dict]:
             },
             "table_bytes_per_device": layout.bytes_per_shard(d),
             "rows_per_shard": layout.rows_per_shard,
+            "quant_gather_us": round(quant_us, 2),
+            "quant_table_bytes_per_device": q_bytes,
+            "quant_bytes_ratio":
+                round(q_bytes / layout.bytes_per_shard(d), 4),
+            # closed-form wire bytes per gathered row on the exchange
+            "wire_bytes_per_row": d * 4,
+            "quant_wire_bytes_per_row": d * 1 + 4,
         })
 
     payload = {
@@ -289,6 +360,7 @@ def run_embedding(quick: bool = True) -> List[Dict]:
         "dense_gather_us": round(dense_us, 2),
         "gate_max_2shard_ratio": GATE_RATIO,
         "sharded": shards_out,
+        "quant": _quant_eval_drift(quick, shards_out),
     }
     with open(EMBED_JSON_PATH, "w") as f:
         json.dump(payload, f, indent=2)
@@ -306,7 +378,15 @@ def run_embedding(quick: bool = True) -> List[Dict]:
             "zipf_dedup_us": r["zipf"]["dedup_gather_us"],
             "table_mib_per_device":
                 round(r["table_bytes_per_device"] / 2**20, 2),
+            "quant_us": r["quant_gather_us"],
+            "quant_mib_per_device":
+                round(r["quant_table_bytes_per_device"] / 2**20, 2),
         })
+    q = payload["quant"]
+    rows.append({"name": "quant_mrr_drift",
+                 "us_per_call": 0.0,
+                 "mrr_fp32": q["mrr_fp32"], "mrr_int8": q["mrr_int8"],
+                 "drift": q["mrr_drift"], "limit": q["mrr_drift_limit"]})
     return rows
 
 

@@ -21,8 +21,10 @@ def check_embedding_gate() -> str:
     """Perf gate over the freshly written ``BENCH_embedding.json``: the
     2-shard gather+exchange must stay within ``GATE_RATIO``x the dense
     replicated gather (ROADMAP open item 2 — the old masked-sum chain sat
-    at ~3x and this keeps the regression from silently returning).
-    Returns a summary line; raises on violation."""
+    at ~3x and this keeps the regression from silently returning), the
+    int8 table must hold its per-device bytes ratio (<= 0.3x fp32), and
+    the int8 sharded-eval MRR must stay within the documented drift
+    tolerance of fp32.  Returns a summary line; raises on violation."""
     from benchmarks.pipeline_bench import EMBED_JSON_PATH, GATE_RATIO
     with open(EMBED_JSON_PATH) as f:
         payload = json.load(f)
@@ -34,8 +36,24 @@ def check_embedding_gate() -> str:
             f"{ratio:.2f}x dense (limit {GATE_RATIO}x) — "
             f"{two['gather_exchange_us']}us vs "
             f"{payload['dense_gather_us']}us dense")
+    quant = payload["quant"]
+    if quant["bytes_ratio_2shard"] > quant["bytes_ratio_limit"]:
+        raise RuntimeError(
+            f"embedding gate FAILED: int8 table bytes are "
+            f"{quant['bytes_ratio_2shard']:.3f}x fp32 per device "
+            f"(limit {quant['bytes_ratio_limit']}x)")
+    if quant["mrr_drift"] > quant["mrr_drift_limit"]:
+        raise RuntimeError(
+            f"embedding gate FAILED: int8 eval MRR drift "
+            f"{quant['mrr_drift']:.4f} exceeds the documented tolerance "
+            f"{quant['mrr_drift_limit']} (fp32 {quant['mrr_fp32']:.4f} "
+            f"vs int8 {quant['mrr_int8']:.4f})")
     return (f"embedding gate ok: 2-shard gather+exchange "
-            f"{ratio:.2f}x dense (limit {GATE_RATIO}x)")
+            f"{ratio:.2f}x dense (limit {GATE_RATIO}x); int8 table "
+            f"{quant['bytes_ratio_2shard']:.3f}x bytes "
+            f"(limit {quant['bytes_ratio_limit']}x), MRR drift "
+            f"{quant['mrr_drift']:.4f} "
+            f"(limit {quant['mrr_drift_limit']})")
 
 
 def check_serve_gate() -> str:

@@ -71,6 +71,11 @@ class CommContract:
     # (e.g. ((V, d), (S*rows, d))) and single dims that must not appear
     forbidden_suffixes: Tuple[Tuple[int, ...], ...] = ()
     forbidden_dims: Tuple[int, ...] = ()
+    # dtype-aware variant: suffixes forbidden ONLY for f32 buffers — the
+    # int8 table contract ("no fp32 full-table buffer in the compiled
+    # program") where the same-shaped int8 code stack is exactly what
+    # SHOULD exist
+    forbidden_f32_suffixes: Tuple[Tuple[int, ...], ...] = ()
     # donation audit: entry params that must stay aliased or donatable
     min_donated: int = 0
     notes: str = ""
@@ -164,18 +169,24 @@ def _audit_collectives(mod: HloModule, contract: CommContract,
 
 def _audit_replication(mod: HloModule, contract: CommContract,
                        report: AuditReport) -> None:
-    if not contract.forbidden_suffixes and not contract.forbidden_dims:
+    if not (contract.forbidden_suffixes or contract.forbidden_dims
+            or contract.forbidden_f32_suffixes):
         return
+
+    def suffix_match(dims, suffixes):
+        return any(len(dims) >= len(suf) and dims[-len(suf):] == suf
+                   for suf in suffixes)
+
     flagged = 0
     for comp in mod.comps:
         if not mod.top_level(comp):
             continue
         for inst in mod.instructions(comp):
-            for _dtype, dims in shape_dims(inst.type_str):
-                bad = any(
-                    len(dims) >= len(suf) and dims[-len(suf):] == suf
-                    for suf in contract.forbidden_suffixes
-                ) or any(d in contract.forbidden_dims for d in dims)
+            for dtype, dims in shape_dims(inst.type_str):
+                bad = (suffix_match(dims, contract.forbidden_suffixes)
+                       or any(d in contract.forbidden_dims for d in dims)
+                       or (dtype == "f32" and suffix_match(
+                           dims, contract.forbidden_f32_suffixes)))
                 if bad:
                     flagged += 1
                     if flagged <= 5:       # cap the noise, keep the count

@@ -19,6 +19,20 @@ repo ships — anything new belongs here with a contract):
   (``repro.serving.kge.ShardedKGEServer.topk_program``).  Contract: no
   collectives at all, and no buffer with a full-vocabulary dimension —
   the ``(B, N)`` dense score matrix provably never materializes.
+* ``train[psum_scatter,int8]`` / ``serve[topk,int8]`` — the quantized
+  table path (``table_dtype="int8"``), audited for the default exchange
+  and the serve program.  Train contract: the exchange moves int8 codes
+  plus the f32 per-row scale sidecar — reduce-scatter
+  ``U'/S·(d·1 + 4)`` and all-gather ``U'·(d·1 + 4)`` bytes per stacked
+  trainer (each rule allows up to two matches: XLA may keep the
+  codes/scales collectives separate or merge them variadically; the
+  auditor sums operand bytes so the budget holds either way); the
+  data-axis gradient all-reduce is unchanged (the fp32 master is the
+  parameter).  Serve contract additionally forbids any **f32** buffer
+  shaped like the full code stack ``(S, rows, d)`` or the flat table
+  ``(S·rows, d)`` — the static proof that the fp32 table is never
+  materialized on device; the same-shaped int8 codes are exactly what
+  should exist, and per-block ``(rows, d)`` dequants are legitimate.
 
 Byte closed-forms (verified against live lowerings; ``U`` = plan width,
 ``U'`` = ``U`` padded to a shard multiple, ``d`` = embedding dim, ``S``
@@ -93,7 +107,8 @@ def _guard_dims(name: str, legit: Sequence[int],
 # ---------------------------------------------------------------------- #
 # train step
 # ---------------------------------------------------------------------- #
-def _build_trainer(cfg: AuditConfig, exchange: str, dedup: bool):
+def _build_trainer(cfg: AuditConfig, exchange: str, dedup: bool,
+                   table_dtype: str = "fp32"):
     from repro.data.datasets import synthetic_fb15k
     from repro.training.trainer import KGETrainer, TrainConfig
     splits = synthetic_fb15k(scale=cfg.data_scale, seed=cfg.seed)
@@ -105,6 +120,7 @@ def _build_trainer(cfg: AuditConfig, exchange: str, dedup: bool):
         num_table_shards=cfg.num_table_shards,
         gather_exchange=exchange,
         gather_dedup=dedup,
+        table_dtype=table_dtype,
         pipeline="serial",
         spmd=True,
         epochs=1,
@@ -129,8 +145,19 @@ def train_contract(tr, batch: Dict, exchange: str,
     # exchange over them, so every exchange buffer (and its wire bytes)
     # scales by t_dev while the collective COUNT stays 1
     t_dev = int(tr.cfg.num_trainers) // data
+    quant = tr.cfg.table_dtype == "int8"
+    # int8 exchange wire format: one byte per code element plus the f32
+    # per-row scale sidecar; XLA may lower codes+scales as two separate
+    # collectives or one variadic — each rule tolerates both (count <= 2,
+    # bytes summed over matches)
+    row_bytes = (d * 1 + 4) if quant else d * itm
+    cap = 2 if quant else 1
     rules: List[CollectiveRule] = []
     if s > 1:
+        if quant and exchange != "psum_scatter":
+            raise ValueError(
+                f"int8 train contract is only derived for the default "
+                f"psum_scatter exchange, not {exchange!r}")
         if exchange == "psum":
             rules.append(CollectiveRule(
                 "all-reduce", ("model",),
@@ -138,13 +165,15 @@ def train_contract(tr, batch: Dict, exchange: str,
                 note="dense table-exchange psum"))
         elif exchange == "psum_scatter":
             rules.append(CollectiveRule(
-                "reduce-scatter", ("model",),
-                expected_bytes=float(t_dev * (u_pad // s) * d * itm),
-                note="scatter phase of the exchange"))
+                "reduce-scatter", ("model",), min_count=1, max_count=cap,
+                expected_bytes=float(t_dev * (u_pad // s) * row_bytes),
+                note="scatter phase of the exchange"
+                     + (" (int8 codes + f32 scales)" if quant else "")))
             rules.append(CollectiveRule(
-                "all-gather", ("model",),
-                expected_bytes=float(t_dev * u_pad * d * itm),
-                note="tiled gather phase of the exchange"))
+                "all-gather", ("model",), min_count=1, max_count=cap,
+                expected_bytes=float(t_dev * u_pad * row_bytes),
+                note="tiled gather phase of the exchange"
+                     + (" (int8 codes + f32 scales)" if quant else "")))
         elif exchange == "alltoall":
             rules.append(CollectiveRule(
                 "all-to-all", ("model",),
@@ -180,16 +209,17 @@ def train_contract(tr, batch: Dict, exchange: str,
 
 
 def audit_train_step(exchange: str, dedup: bool,
-                     cfg: Optional[AuditConfig] = None) -> AuditReport:
+                     cfg: Optional[AuditConfig] = None,
+                     table_dtype: str = "fp32") -> AuditReport:
     """Lower the production spmd train step for one exchange layout ×
-    dedup setting and audit its per-device HLO."""
+    dedup setting (× table dtype) and audit its per-device HLO."""
     from repro.training.distributed import (
         make_spmd_train_step, split_trainer_keys,
     )
     import jax
 
     cfg = cfg or AuditConfig()
-    tr = _build_trainer(cfg, exchange, dedup)
+    tr = _build_trainer(cfg, exchange, dedup, table_dtype)
     try:
         it = tr.pipeline.device_batches(1)
         batch = next(iter(it))
@@ -208,7 +238,8 @@ def audit_train_step(exchange: str, dedup: bool,
         keys = jax.vmap(jax.random.fold_in, (0, None))(keys, 0)
         lowered = step.lower(tr.params, tr.opt_state, batch, keys)
         hlo = lowered.compile().as_text()
-        name = f"train[{exchange}{',dedup' if dedup else ''}]"
+        name = (f"train[{exchange}{',dedup' if dedup else ''}"
+                f"{',int8' if table_dtype == 'int8' else ''}]")
         return audit_hlo(hlo, train_contract(tr, batch, exchange, name))
     finally:
         tr.close()
@@ -296,9 +327,13 @@ def audit_rank_step(protocol: str,
 # ---------------------------------------------------------------------- #
 # sharded top-k serve step
 # ---------------------------------------------------------------------- #
-def audit_serve_step(cfg: Optional[AuditConfig] = None) -> AuditReport:
+def audit_serve_step(cfg: Optional[AuditConfig] = None,
+                     table_dtype: str = "fp32") -> AuditReport:
     """Lower the sharded top-k serve program and audit it: no
-    collectives, and no buffer with a full-vocabulary dimension."""
+    collectives, and no buffer with a full-vocabulary dimension.  With
+    ``table_dtype="int8"`` additionally prove no **f32** buffer shaped
+    like the full code stack ``(S, rows, d)`` or the flat table
+    ``(S·rows, d)`` exists — dequantization stays per-block."""
     import jax
     import numpy as np
 
@@ -313,18 +348,27 @@ def audit_serve_step(cfg: Optional[AuditConfig] = None) -> AuditReport:
     emb = rng.standard_normal((v, d)).astype(np.float32)
     dparams = init_decoder_params(
         jax.random.PRNGKey(cfg.seed), "distmult", cfg.eval_relations, d)
-    server = ShardedKGEServer(emb, dparams, "distmult", num_shards=s)
+    server = ShardedKGEServer(emb, dparams, "distmult", num_shards=s,
+                              table_dtype=table_dtype)
     lowered = server.lower_topk(b, k)
-    _guard_dims("serve[topk]",
-                [b, d, k, server.layout.rows_per_shard,
-                 s * min(k, server.layout.rows_per_shard)], [v])
+    quant = table_dtype == "int8"
+    rows = server.layout.rows_per_shard
+    name = "serve[topk,int8]" if quant else "serve[topk]"
+    _guard_dims(name, [b, d, k, rows, s * min(k, rows)], [v])
     contract = CommContract(
-        name="serve[topk]",
+        name=name,
         mesh_axes=(),
         rules=(),                      # any collective is a stray
         forbidden_dims=(v,),
+        # the int8 contract: a same-shaped int8 code stack SHOULD exist,
+        # but its fp32 image must only ever appear one (rows, d) block at
+        # a time — never the whole stack or the flattened table
+        forbidden_f32_suffixes=(
+            ((s, rows, d), (s * rows, d)) if quant else ()),
         notes=f"V={v} B={b} k={k} S={s} — dense (B, N) scores must "
-              f"never materialize")
+              f"never materialize"
+              + (" and the fp32 table must stay per-block" if quant
+                 else ""))
     return audit_hlo(lowered.compile().as_text(), contract)
 
 
@@ -354,6 +398,12 @@ def run_audit(cfg: Optional[AuditConfig] = None,
                 note(f"lowering train[{exchange}"
                      f"{',dedup' if dedup else ''}] ...")
                 reports.append(audit_train_step(exchange, dedup, cfg))
+        if "psum_scatter" in exchanges:
+            # quantized-table variant of the default exchange: int8
+            # codes + f32 scale sidecar on the wire, fp32 master grads
+            note("lowering train[psum_scatter,int8] ...")
+            reports.append(audit_train_step(
+                "psum_scatter", False, cfg, table_dtype="int8"))
     if "rank" in programs:
         for protocol in RANK_PROTOCOLS:
             note(f"lowering rank[{protocol}] ...")
@@ -361,6 +411,8 @@ def run_audit(cfg: Optional[AuditConfig] = None,
     if "serve" in programs:
         note("lowering serve[topk] ...")
         reports.append(audit_serve_step(cfg))
+        note("lowering serve[topk,int8] ...")
+        reports.append(audit_serve_step(cfg, table_dtype="int8"))
     return reports
 
 

@@ -298,6 +298,7 @@ def ranking_metrics(
     batch_size: int = 256,
     decoder: Union[str, Decoder] = "distmult",
     num_shards: int = 1,
+    table_dtype: str = "fp32",
 ) -> Dict[str, float]:
     """Filtered MRR / Hits@k, tail-corruption direction.
 
@@ -323,12 +324,16 @@ def ranking_metrics(
     ``evaluate_both_directions`` does that.
     """
     dec = get_decoder(decoder)
-    if num_shards > 1:
+    if num_shards > 1 or table_dtype != "fp32":
+        # int8 always takes the sharded path (even single-shard): its
+        # block-at-a-time dequantization is what keeps the fp32 table off
+        # the device, and the sharded metrics are EXACTLY the dense
+        # metrics over the dequantized table
         from repro.eval.sharded import sharded_ranking_metrics
         return sharded_ranking_metrics(
             entity_emb, decoder_params, test_triplets, filter_index,
-            num_shards, hits_ks=hits_ks, batch_size=batch_size,
-            decoder=dec, candidates=candidates)
+            max(num_shards, 1), hits_ks=hits_ks, batch_size=batch_size,
+            decoder=dec, candidates=candidates, table_dtype=table_dtype)
 
     n = entity_emb.shape[0]
     emb = jnp.asarray(entity_emb)
@@ -391,6 +396,7 @@ def evaluate_both_directions(
     hits_ks: Sequence[int] = (1, 3, 10),
     decoder: Union[str, Decoder] = "distmult",
     num_shards: int = 1,
+    table_dtype: str = "fp32",
 ) -> Dict[str, float]:
     """Average of tail-corruption on (s,r,t) and on the inverse triplets
     (t, r+R, s) — i.e. head corruption.  ``decoder_params`` (the decoder's
@@ -403,7 +409,9 @@ def evaluate_both_directions(
     inv = np.stack([test_kg.dst, test_kg.rel + num_relations_base,
                     test_kg.src], axis=1)
     m_fwd = ranking_metrics(entity_emb, decoder_params, fwd, fidx, hits_ks,
-                            decoder=decoder, num_shards=num_shards)
+                            decoder=decoder, num_shards=num_shards,
+                            table_dtype=table_dtype)
     m_inv = ranking_metrics(entity_emb, decoder_params, inv, fidx, hits_ks,
-                            decoder=decoder, num_shards=num_shards)
+                            decoder=decoder, num_shards=num_shards,
+                            table_dtype=table_dtype)
     return {k: 0.5 * (m_fwd[k] + m_inv[k]) for k in m_fwd}

@@ -73,9 +73,27 @@ from repro.kernels.kge_score import apply_epilogue
 from repro.kernels.ops import kge_score_padded
 from repro.models.decoders import Decoder, get_decoder
 from repro.sharding.embedding import (
-    ShardedTableLayout, plan_local_gather, plan_local_gather_block,
-    shard_table, shard_table_block, sharded_gather,
+    TABLE_DTYPES, ShardedTableLayout, dequantize_rows, plan_local_gather,
+    plan_local_gather_block, quantize_rows, shard_table, shard_table_block,
+    sharded_dequant_gather, sharded_gather,
 )
+
+
+def _num_table_blocks(table) -> int:
+    """Shard count of a table argument — a ``(S, rows, d)`` fp32 stack or
+    an int8 ``(codes, scales)`` pair (``quantize_rows`` layout)."""
+    return (table[0] if isinstance(table, tuple) else table).shape[0]
+
+
+def _table_block(table, s) -> jax.Array:
+    """Shard ``s``'s fp32 ``(rows, d)`` row block.  For a quantized table
+    the block is dequantized HERE, transiently — only one shard's rows
+    ever exist in fp32, never the ``(S, rows, d)`` stack (the invariant
+    the replication audit checks on the serving program)."""
+    if isinstance(table, tuple):
+        codes, scales = table
+        return dequantize_rows(codes[s], scales[s])
+    return table[s]
 
 
 def shard_filter_bias_block(filter_index, batch: np.ndarray,
@@ -214,14 +232,15 @@ def sharded_rank_counts(
     b = q.shape[0]
     rows_idx = jnp.arange(b)
 
+    num_blocks = _num_table_blocks(table)
     if axis_name is None:
         # masked single-device simulation over the full shard stack
-        scores = [shard_scores(decoder, dec_params, table[s], q, q_bias,
-                               bias[s], interpret)
-                  for s in range(table.shape[0])]
+        scores = [shard_scores(decoder, dec_params, _table_block(table, s),
+                               q, q_bias, bias[s], interpret)
+                  for s in range(num_blocks)]
         true_score = sum(
             jnp.where(true_owned[s], scores[s][rows_idx, true_local[s]], 0.0)
-            for s in range(table.shape[0]))
+            for s in range(num_blocks))
         greater = sum(
             jnp.sum((sc > true_score[:, None]).astype(jnp.int32), axis=1)
             for sc in scores)
@@ -230,17 +249,17 @@ def sharded_rank_counts(
             for sc in scores)
         return greater, equal, true_score
 
-    if table.shape[0] != 1:
+    if num_blocks != 1:
         # same trap as sharded_gather: a replicated (S, rows, d) stack
         # inside shard_map would score shard 0's rows everywhere and psum
         # S wrong partial counts — fail at trace time instead
         raise ValueError(
             f"sharded_rank_counts under shard_map expects this device's "
-            f"(1, rows, d) row block, got {table.shape} — shard the table "
-            f"and bias over {axis_name!r}")
+            f"(1, rows, d) row block, got {num_blocks} blocks — shard the "
+            f"table and bias over {axis_name!r}")
     s = jax.lax.axis_index(axis_name)
-    scores = shard_scores(decoder, dec_params, table[0], q, q_bias,
-                          bias[0], interpret)
+    scores = shard_scores(decoder, dec_params, _table_block(table, 0), q,
+                          q_bias, bias[0], interpret)
     true_score = jax.lax.psum(
         jnp.where(true_owned[s], scores[rows_idx, true_local[s]], 0.0),
         axis_name)
@@ -302,17 +321,19 @@ def sharded_candidate_rank_counts(
             axis=1)
         return greater, equal
 
+    num_blocks = _num_table_blocks(table)
     if axis_name is None:
-        parts = [one(table[s], cand_local[s], cand_owned[s])
-                 for s in range(table.shape[0])]
+        parts = [one(_table_block(table, s), cand_local[s], cand_owned[s])
+                 for s in range(num_blocks)]
         return sum(p[0] for p in parts), sum(p[1] for p in parts)
 
-    if table.shape[0] != 1:
+    if num_blocks != 1:
         raise ValueError(
             f"sharded_candidate_rank_counts under shard_map expects this "
-            f"device's (1, rows, d) row block, got {table.shape} — shard "
-            f"the table and candidate plans over {axis_name!r}")
-    greater, equal = one(table[0], cand_local[0], cand_owned[0])
+            f"device's (1, rows, d) row block, got {num_blocks} blocks — "
+            f"shard the table and candidate plans over {axis_name!r}")
+    greater, equal = one(_table_block(table, 0), cand_local[0],
+                         cand_owned[0])
     return (jax.lax.psum(greater, axis_name),
             jax.lax.psum(equal, axis_name))
 
@@ -394,6 +415,7 @@ def sharded_ranking_metrics(
     rank_step=None,
     interpret: Optional[bool] = None,
     candidates: Optional[np.ndarray] = None,   # (T, C) per-test candidates
+    table_dtype: str = "fp32",
 ) -> Dict[str, float]:
     """Filtered MRR / Hits@k with candidate-axis-sharded ranking — the
     ``num_shards > 1`` twin of the dense ``ranking_metrics`` (any registered
@@ -416,6 +438,15 @@ def sharded_ranking_metrics(
     when ``candidates`` is given) runs the real ``shard_map`` + psum
     exchange, with table/bias/plan blocks ``device_put`` per model-axis
     device of the step's mesh.
+
+    ``table_dtype="int8"`` stores the table as row-wise symmetric codes +
+    fp32 per-row scales (``quantize_rows``); each shard's rows are
+    dequantized transiently at score time and heads/true tails are fetched
+    through the fused dequantizing gather, so no fp32 ``(S·rows, d)``
+    buffer ever exists — metrics are EXACTLY the dense metrics over the
+    dequantized table (the quantization error itself is the documented
+    ≤ scale/2 per element; the MRR drift it induces is gated in
+    ``benchmarks/run.py``).  Simulation path only (``rank_step=None``).
     """
     dec = get_decoder(decoder)
     step_dec = getattr(rank_step, "decoder", None)
@@ -435,25 +466,42 @@ def sharded_ranking_metrics(
     mesh = getattr(rank_step, "mesh", None)
     model_axis = getattr(rank_step, "model_axis", "model")
 
+    if table_dtype not in TABLE_DTYPES:
+        raise ValueError(
+            f"table_dtype={table_dtype!r} not in {TABLE_DTYPES}")
     n, d = entity_emb.shape
     layout = ShardedTableLayout(n, num_shards)
     emb_f32 = np.ascontiguousarray(np.asarray(entity_emb, np.float32))
-    if mesh is None:
+    if table_dtype == "int8":
+        if mesh is not None:
+            raise ValueError(
+                "table_dtype='int8' runs on the simulation path only — "
+                "pass rank_step=None (the shard_map rank step stays fp32)")
+        codes, scales = quantize_rows(shard_table(emb_f32, layout))
+        table: Any = (jnp.asarray(codes), jnp.asarray(scales))
+    elif mesh is None:
         table = jnp.asarray(shard_table(emb_f32, layout))
     else:
         table = _model_axis_put(
             (layout.num_shards, layout.rows_per_shard, d),
             lambda s: shard_table_block(emb_f32, layout, s),
             mesh, model_axis)
+
+    def gather_rows(li, ow):
+        # embeddings through the PR-2 shard-local gather + exchange —
+        # bitwise equal to the dense gather over the (dequantized) table
+        if table_dtype == "int8":
+            return sharded_dequant_gather(table[0], table[1],
+                                          jnp.asarray(li), jnp.asarray(ow))
+        return sharded_gather(table, jnp.asarray(li), jnp.asarray(ow))
+
     dparams = jax.tree_util.tree_map(jnp.asarray, decoder_params)
     ranks = []
 
     for lo in range(0, test_triplets.shape[0], batch_size):
         batch = np.asarray(test_triplets[lo: lo + batch_size])
-        # head embeddings through the PR-2 shard-local gather + exchange —
-        # bitwise equal to the dense emb[batch[:, 0]] gather
         h_li, h_ow = plan_local_gather(layout, batch[:, 0])
-        h_s = sharded_gather(table, jnp.asarray(h_li), jnp.asarray(h_ow))
+        h_s = gather_rows(h_li, h_ow)
         rel = jnp.asarray(batch[:, 1].astype(np.int32))
         q, q_bias = dec.prepare_query(dparams, h_s, rel)
         t_li, t_ow = plan_local_gather(layout, batch[:, 2])
@@ -474,8 +522,7 @@ def sharded_ranking_metrics(
             # ogbl list protocol: true-tail rows through the same sharded
             # gather (bitwise the dense emb[t] rows), candidate ids
             # scattered by owning row block
-            t_emb = sharded_gather(table, jnp.asarray(t_li),
-                                   jnp.asarray(t_ow))
+            t_emb = gather_rows(t_li, t_ow)
             c_true, cb_true = dec.prepare_candidates(dparams, t_emb)
             true_score = apply_epilogue(
                 jnp.sum(q * c_true, axis=1) + q_bias + cb_true,

@@ -293,6 +293,80 @@ def _fsg_bwd(res, g):
 
 fused_sharded_gather.defvjp(_fsg_fwd, _fsg_bwd)
 
+# Public alias: the quantized gathers reuse the SAME straight-through
+# backward (scatter-add of the output cotangents into the fp32 master
+# table), so master-weight gradients stay bitwise equal to the fp32
+# path's gradients on identical dequantized inputs.
+fsg_bwd = _fsg_bwd
+
+
+# ---------------------------------------------------------------------- #
+# Quantized (int8) sharded gather — fused dequant variants
+# ---------------------------------------------------------------------- #
+def dequant_sharded_gather(
+    codes: jax.Array,       # (S, rows, d) int8 row codes
+    scales: jax.Array,      # (S, rows) fp32 per-row scales
+    local_ids: jax.Array,   # (S, V) per-shard LOCAL row ids
+    owned: jax.Array,       # (S, V) ownership masks
+    interpret: Optional[bool] = None,
+    use_kernel: Optional[bool] = None,
+) -> jax.Array:
+    """Fused dequantizing gather over int8 row codes:
+    ``out[v] = any_owned[v] ? codes_flat[flat[v]].astype(f32) ·
+    scales_flat[flat[v]] : 0`` — the int8 twin of
+    :func:`fused_sharded_gather`'s forward.  Only the V gathered rows are
+    ever dequantized; no fp32 ``(S·rows, d)`` table exists at any point
+    (the replication audit asserts this on the compiled HLO).  On TPU the
+    ``sharded_gather.fused_dequant_gather`` Pallas kernel runs; elsewhere
+    the identical XLA lowering.  Oracle: ``ref.dequant_gather_ref``
+    (dequantize-then-gather), bitwise equal because ``code · scale`` is
+    computed in f32 either side of the gather."""
+    s, rows, d = codes.shape
+    flat, any_owned = flat_gather_plan(local_ids, owned, rows)
+    codes_flat = codes.reshape(s * rows, d)
+    scales_flat = scales.reshape(s * rows)
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    if use_kernel:
+        from repro.kernels.sharded_gather import fused_dequant_gather
+        return fused_dequant_gather(codes_flat, scales_flat, flat,
+                                    any_owned, interpret=interpret)
+    rows_f32 = (codes_flat[flat].astype(jnp.float32)
+                * scales_flat[flat][:, None])
+    return jnp.where(any_owned[:, None], rows_f32, 0.0)
+
+
+def _qsg_impl(table, local_ids, owned):
+    # function-level import: sharding.embedding imports this module
+    from repro.sharding.embedding import quantize_rows
+    codes, scales = quantize_rows(table)
+    return dequant_sharded_gather(codes, scales, local_ids, owned)
+
+
+@jax.custom_vjp
+def quantized_sharded_gather(
+    table: jax.Array,      # (S, rows, d) fp32 MASTER table stack
+    local_ids: jax.Array,  # (S, V) per-shard LOCAL row ids
+    owned: jax.Array,      # (S, V) ownership masks
+) -> jax.Array:
+    """int8 training gather: quantize the fp32 master table row-wise
+    in-program, then run the fused dequantizing gather — the optimizer
+    only ever sees the fp32 master.  Straight-through custom VJP: the
+    backward is :func:`fused_sharded_gather`'s scatter-add (``fsg_bwd``),
+    accumulating fp32 cotangents into the master rows, NOT the
+    zero-almost-everywhere derivative of round().  Consequence tested in
+    tests/test_sharded_embedding.py: master gradients are bitwise equal
+    to fp32-path gradients when the fp32 path runs on the dequantized
+    master."""
+    return _qsg_impl(table, local_ids, owned)
+
+
+def _qsg_fwd(table, local_ids, owned):
+    return _qsg_impl(table, local_ids, owned), (local_ids, owned, table)
+
+
+quantized_sharded_gather.defvjp(_qsg_fwd, _fsg_bwd)
+
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
 def wkv_chunked_op(

@@ -121,6 +121,84 @@ def sharded_scatter_add_ref(
         flat_ids].add(upd)
 
 
+def quantize_rows_ref(table: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Independent oracle for ``repro.sharding.embedding.quantize_rows``.
+
+    The contract: each row's scale is the SMALLEST power of two ``2^k``
+    (k in [-149, 127], the full fp32 exponent range incl. subnormals)
+    with ``127 · 2^k ≥ amax(row)``, or exactly 0.0 for an all-zero row;
+    codes are ``rint(row / scale)`` clipped to ±127.  This oracle runs
+    entirely in INTEGER arithmetic — k by explicit search over a
+    host-built table of every fp32 power of two (compared via the raw
+    bit patterns: for non-negative fp32 the bit ordering is the value
+    ordering), and each code by exact shift-and-round-half-even of the
+    element's integer mantissa — so it shares nothing with the
+    implementation's float construction and is immune to XLA's
+    flush-to-zero on subnormal float operands.  ``127 · 2^k`` is exact
+    in fp32 (127 needs 7 mantissa bits; subnormal products are exact
+    multiples of 2^-149), so the host-built thresholds are exact."""
+    import numpy as np
+    # thresholds 127·2^k for k = -149..127, exact in host numpy, compared
+    # as integer bit patterns (k >= 122 overflows to +inf, which still
+    # bit-compares above every finite amax — and the true k never exceeds
+    # 122 because 127·2^122 already covers the largest finite fp32)
+    with np.errstate(over="ignore"):
+        thresh = jnp.asarray(
+            (np.float32(127.0) * np.ldexp(np.float32(1.0),
+                                          np.arange(-149, 128)))
+            .astype(np.float32).view(np.int32))
+    pows = jnp.asarray(np.ldexp(np.float32(1.0), np.arange(-149, 128)))
+    table = table.astype(jnp.float32)
+    bits = jax.lax.bitcast_convert_type(table, jnp.int32)
+    mag = bits & 0x7FFFFFFF
+    amax_bits = jnp.max(mag, axis=-1)
+    idx = jnp.argmax(thresh >= amax_bits[..., None], axis=-1)
+    k = (idx - 149).astype(jnp.int32)
+    scale = pows[idx]
+    scale = jnp.where(amax_bits > 0, scale, jnp.float32(0.0))
+    # integer mantissa/exponent of each element: |x| = M · 2^E
+    e_f = mag >> 23
+    m_f = mag & 0x7FFFFF
+    big_m = jnp.where(e_f == 0, m_f, m_f | (1 << 23))
+    big_e = jnp.where(e_f == 0, -149, e_f - 150)
+    # code magnitude = rint(M · 2^(E - k)), |result| <= 127 by the scale
+    # contract, so left shifts cap at 7 and right shifts at 25 (beyond
+    # which the quotient is < 0.5 and rounds to zero)
+    shift = big_e - k[..., None]
+    left = big_m << jnp.clip(shift, 0, 7)
+    t = jnp.clip(-shift, 1, 25)
+    floor = big_m >> t
+    rem = big_m & ((1 << t) - 1)
+    half = 1 << (t - 1)
+    round_up = (rem > half) | ((rem == half) & ((floor & 1) == 1))
+    right = floor + round_up.astype(jnp.int32)
+    code_mag = jnp.where(shift >= 0, left, right)
+    codes = jnp.clip(jnp.where(bits < 0, -code_mag, code_mag),
+                     -127, 127).astype(jnp.int8)
+    return codes, scale
+
+
+def dequantize_rows_ref(codes: jax.Array, scales: jax.Array) -> jax.Array:
+    """``codes.astype(f32) · scale`` — exact (int8 ≤ 2^7 mantissa bits,
+    scale a power of two)."""
+    return codes.astype(jnp.float32) * scales[..., None]
+
+
+def dequant_gather_ref(
+    codes: jax.Array,      # (S, rows, d) int8 row codes
+    scales: jax.Array,     # (S, rows) fp32 per-row scales
+    local_ids: jax.Array,  # (S, V) per-shard LOCAL row ids
+    owned: jax.Array,      # (S, V) ownership masks
+) -> jax.Array:
+    """Dequantize-THEN-gather: materialize the full fp32 stack and run the
+    original exchange chain.  Oracle for
+    ``kernels.sharded_gather.fused_dequant_gather`` /
+    ``ops.dequant_sharded_gather``, which must match it bitwise on CPU —
+    ``code · scale`` is the same f32 product either side of the gather."""
+    return sharded_gather_ref(dequantize_rows_ref(codes, scales),
+                              local_ids, owned)
+
+
 def wkv_chunk_ref(
     r: jax.Array,          # (BH, S, hd)
     k: jax.Array,

@@ -20,6 +20,11 @@ This module provides that collapsed op as Pallas kernels:
   index map DMAs exactly the owner's row from the stacked table and the
   ownership mask is applied in-register.  No (S, V, d) intermediate, no
   S-way elementwise mask, no reduction.
+* ``fused_dequant_gather`` — the int8 variant: same grid, but the DMA'd
+  row is an int8 code row plus its (1, 1) fp32 per-row scale, and the
+  dequantize (``codes.astype(f32) · scale``) happens in-register — the
+  fp32 table is never materialized (``repro.sharding.embedding``'s
+  quantized layout).
 * ``scatter_add_onehot`` — backward: the transpose scatter-add as tiled
   one-hot matmuls (the TPU substitute for atomic scatter, same pattern as
   ``rgcn_message.segment_sum_onehot``): for a (row tile, cotangent tile)
@@ -86,6 +91,56 @@ def fused_gather(
         interpret=interpret,
     )(flat_ids.astype(jnp.int32),
       any_owned.astype(jnp.int32).reshape(v, 1), table_flat)
+
+
+# ====================================================================== #
+# Forward (int8): fused dequantize + gather + mask
+# ====================================================================== #
+def _fused_dequant_gather_kernel(flat_ref, mask_ref, codes_ref, scale_ref,
+                                 out_ref):
+    """int8 twin of ``_fused_gather_kernel``: the scalar-prefetched flat
+    index DMAs the owner's (1, d) int8 code row AND its (1, 1) fp32 scale;
+    the row is dequantized in-register (``codes.astype(f32) · scale``) —
+    the fp32 row never exists outside this tile."""
+    del flat_ref  # consumed by the index maps (scalar prefetch)
+    row = codes_ref[...].astype(jnp.float32) * scale_ref[...]
+    out_ref[...] = jnp.where(mask_ref[...] != 0, row, 0.0)
+
+
+def fused_dequant_gather(
+    codes_flat: jax.Array,   # (R, d) int8 stacked row codes
+    scales_flat: jax.Array,  # (R,) fp32 per-row scales
+    flat_ids: jax.Array,     # (V,) int32 flat row index (owner-resolved)
+    any_owned: jax.Array,    # (V,) bool/int — does ANY shard own this slot
+    *, interpret: bool | None = None,
+) -> jax.Array:
+    """Fused dequantizing gather: ``out[v] = any_owned[v] ?
+    codes_flat[flat_ids[v]].astype(f32) · scales_flat[flat_ids[v]] : 0``.
+    Same grid/DMA structure as :func:`fused_gather` with one extra (1, 1)
+    scale operand riding the same index map; output is fp32.  Oracle:
+    ``ref.dequant_gather_ref``."""
+    v = flat_ids.shape[0]
+    r, d = codes_flat.shape
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(v,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, ids: (i, 0)),
+            pl.BlockSpec((1, d), lambda i, ids: (ids[i], 0)),
+            pl.BlockSpec((1, 1), lambda i, ids: (ids[i], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda i, ids: (i, 0)),
+    )
+    return pl.pallas_call(
+        _fused_dequant_gather_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((v, d), jnp.float32),
+        interpret=interpret,
+    )(flat_ids.astype(jnp.int32),
+      any_owned.astype(jnp.int32).reshape(v, 1), codes_flat,
+      scales_flat.astype(jnp.float32).reshape(r, 1))
 
 
 # ====================================================================== #

@@ -44,14 +44,20 @@ def build_server(args):
         filter_index = CSRFilterIndex.build([g])
     server = ShardedKGEServer(
         emb, params, args.decoder, num_shards=args.table_shards,
-        filter_index=filter_index, cache_size=args.cache_size)
+        filter_index=filter_index, cache_size=args.cache_size,
+        table_dtype=args.table_dtype)
     return server, emb, params
 
 
 def check_equal_dense(server, emb, params, args) -> bool:
-    """The serving contract: sharded top-k == dense ``jax.lax.top_k``."""
+    """The serving contract: sharded top-k == dense ``jax.lax.top_k``
+    (over the dequantized table for ``--table-dtype int8`` — dequant is
+    an exact pow2 multiply, so equality stays exact)."""
     from repro.models.decoders import score_against_candidates
 
+    if args.table_dtype == "int8":
+        from repro.sharding.embedding import dequantize_rows, quantize_rows
+        emb = np.asarray(dequantize_rows(*quantize_rows(emb)))
     rng = np.random.default_rng(args.seed + 1)
     heads = rng.integers(0, args.entities, args.slots)
     rels = rng.integers(0, args.relations, args.slots)
@@ -89,6 +95,12 @@ def main() -> None:
     ap.add_argument("--filtered", action="store_true",
                     help="filter known tails via the column-range "
                          "CSRFilterIndex bias (serving sentinel t=-1)")
+    ap.add_argument("--table-dtype", default="fp32",
+                    choices=("fp32", "int8"),
+                    help="entity-table storage: int8 keeps only row-wise "
+                         "symmetric codes + fp32 pow2 scales on device "
+                         "(~0.27x bytes at d=64) and fuses the dequant "
+                         "into the top-k program")
     ap.add_argument("--cache-size", type=int, default=0,
                     help="hot-entity head-embedding LRU entries "
                          "(0 disables; bits never change)")
@@ -108,6 +120,7 @@ def main() -> None:
           f"{args.table_shards}-shard table "
           f"(rows/shard={server.layout.rows_per_shard}), "
           f"slots={args.slots}, max_k={engine.max_k}"
+          + (", int8 table" if args.table_dtype == "int8" else "")
           + (", filtered" if args.filtered else "")
           + (f", cache={args.cache_size}" if args.cache_size else ""))
 

@@ -46,6 +46,7 @@ def train_kge(args) -> None:
         sharded_transfer=args.sharded_transfer,
         gather_dedup=args.gather_dedup,
         gather_exchange=args.gather_exchange,
+        table_dtype=args.table_dtype,
         spmd=args.spmd,
         decoder=args.decoder, num_negatives=args.num_negatives,
         **({"hidden_dim": args.hidden_dim} if args.hidden_dim > 0 else {}))
@@ -56,6 +57,8 @@ def train_kge(args) -> None:
     xfer += ", deduped gather" if cfg.gather_dedup else ""
     if cfg.gather_exchange:
         xfer += f", {cfg.gather_exchange} exchange"
+    if cfg.table_dtype != "fp32":
+        xfer += f", {cfg.table_dtype} table"
     print(f"[train] {name}: {splits['train'].num_edges} train edges, "
           f"{splits['train'].num_entities} entities; "
           f"{cfg.decoder} decoder, {cfg.num_negatives} negatives/edge; "
@@ -174,6 +177,14 @@ def main() -> None:
                     help="sharded-gather exchange layout (default: fused "
                          "on the sim path, psum_scatter under shard_map; "
                          "all layouts are bitwise equal)")
+    ap.add_argument("--table-dtype", default="fp32",
+                    choices=("fp32", "int8"),
+                    help="entity-table storage: int8 stores row-wise "
+                         "symmetric codes + fp32 per-row scales "
+                         "(~0.27x the fp32 bytes at d=64) with dequant "
+                         "fused into the gather; the optimizer keeps an "
+                         "fp32 master, so training dynamics match the "
+                         "fp32 path on the dequantized table")
     from repro.models.decoders import registered_decoders
     ap.add_argument("--decoder", default="distmult",
                     choices=registered_decoders(),

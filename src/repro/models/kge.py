@@ -83,6 +83,12 @@ def vertex_input(params: Dict[str, Any], cfg: KGEConfig,
     """
     if cfg.rgcn.feature_dim is None:
         table = params["entity_embedding"]
+        table_dtype = cfg.rgcn.table_dtype
+        if table.ndim == 2 and table_dtype == "int8":
+            # dense (unsharded) master: run the same quantized gather over
+            # a single-shard stack so the int8 semantics don't depend on
+            # num_table_shards
+            table = table[None]
         if table.ndim == 3:
             if shard_local_ids is None:
                 num_shards = (table.shape[0] if model_axis is None
@@ -92,7 +98,8 @@ def vertex_input(params: Dict[str, Any], cfg: KGEConfig,
             return sharded_gather(table, shard_local_ids, shard_owned,
                                   axis_name=model_axis,
                                   exchange=cfg.rgcn.gather_exchange,
-                                  inverse=shard_inverse)
+                                  inverse=shard_inverse,
+                                  table_dtype=table_dtype)
         return table[gather_global]
     assert features is not None, "feature-mode model needs features"
     return features[gather_global]

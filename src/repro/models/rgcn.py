@@ -45,6 +45,12 @@ class RGCNConfig:
     #   gather (None = per-path default: "fused" sim, "psum_scatter" under
     #   shard_map; see sharding.embedding.SIM_EXCHANGES/SPMD_EXCHANGES) —
     #   all layouts are bitwise equal, this picks the comm pattern only
+    table_dtype: str = "fp32"  # "fp32" | "int8": int8 keeps the optimizer's
+    #   fp32 MASTER table but runs every gather as quantize → fused-dequant
+    #   (repro.sharding.embedding.quantize_rows; int8 codes cross the wire
+    #   under shard_map, fp32 per-row scales ride along) — forward values
+    #   round to ≤ scale/2 per element, gradients accumulate into the
+    #   master bitwise equal to the fp32 path on the dequantized table
 
     def layer_in_dim(self, layer: int) -> int:
         if layer == 0:

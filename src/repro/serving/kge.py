@@ -65,7 +65,8 @@ from repro.eval.sharded import shard_filter_bias_block, shard_scores
 from repro.kernels.ops import merge_topk, topk_padded
 from repro.models.decoders import Decoder, get_decoder
 from repro.sharding.embedding import (
-    ShardedTableLayout, plan_local_gather, plan_unique_gather, shard_table,
+    TABLE_DTYPES, ShardedTableLayout, dequantize_rows, plan_local_gather,
+    plan_unique_gather, quantize_rows, shard_table, sharded_dequant_gather,
     sharded_gather,
 )
 
@@ -85,18 +86,34 @@ class ShardedKGEServer:
     def __init__(self, entity_emb: np.ndarray, decoder_params,
                  decoder: Union[str, Decoder] = "distmult", *,
                  num_shards: int = 1, filter_index=None,
-                 cache_size: int = 0, interpret: Optional[bool] = None):
+                 cache_size: int = 0, interpret: Optional[bool] = None,
+                 table_dtype: str = "fp32"):
+        if table_dtype not in TABLE_DTYPES:
+            raise ValueError(
+                f"table_dtype={table_dtype!r} not in {TABLE_DTYPES}")
         self.decoder = get_decoder(decoder)
+        self.table_dtype = table_dtype
         emb = np.ascontiguousarray(np.asarray(entity_emb, np.float32))
         self.num_entities, self.dim = emb.shape
         self.layout = ShardedTableLayout(self.num_entities, num_shards)
-        self.table = jnp.asarray(shard_table(emb, self.layout))
+        if table_dtype == "int8":
+            # only the int8 codes + fp32 per-row scales live on device;
+            # shard blocks are dequantized transiently inside the top-k
+            # program (the replication audit proves no fp32 full-table
+            # buffer exists in the lowered HLO), so the candidate cache
+            # is rebuilt in-program instead of precomputed
+            codes, scales = quantize_rows(shard_table(emb, self.layout))
+            self.table: object = (jnp.asarray(codes), jnp.asarray(scales))
+            self._prepared = None
+        else:
+            self.table = jnp.asarray(shard_table(emb, self.layout))
         self.params = jax.tree_util.tree_map(jnp.asarray, decoder_params)
         self.filter_index = filter_index
         self.interpret = interpret
-        self._prepared = [
-            self.decoder.prepare_candidates(self.params, self.table[s])
-            for s in range(self.layout.num_shards)]
+        if table_dtype == "fp32":
+            self._prepared = [
+                self.decoder.prepare_candidates(self.params, self.table[s])
+                for s in range(self.layout.num_shards)]
         # per-shard base bias: -inf on layout-padded tail columns (zero
         # rows holding no entity), 0 on real rows — shared by every batch
         rows = self.layout.rows_per_shard
@@ -115,6 +132,19 @@ class ShardedKGEServer:
     # ------------------------------------------------------------------ #
     # head-embedding fetch (sharded exchange + optional LRU)
     # ------------------------------------------------------------------ #
+    def _gather(self, li, ow, inverse=None) -> jax.Array:
+        """Sharded-exchange row fetch for either storage dtype: fp32 runs
+        the PR-6 fused gather, int8 the fused dequantizing gather — both
+        bitwise the dense gather over the (dequantized) table."""
+        if self.table_dtype == "int8":
+            codes, scales = self.table
+            return sharded_dequant_gather(
+                codes, scales, jnp.asarray(li), jnp.asarray(ow),
+                inverse=None if inverse is None else jnp.asarray(inverse))
+        return sharded_gather(
+            self.table, jnp.asarray(li), jnp.asarray(ow),
+            inverse=None if inverse is None else jnp.asarray(inverse))
+
     def head_embeddings(self, heads: np.ndarray) -> jax.Array:
         """``(B, d)`` head rows via the sharded gather exchange — bitwise
         the dense ``emb[heads]`` rows.  With ``cache_size > 0`` only cache
@@ -123,8 +153,7 @@ class ShardedKGEServer:
         heads = np.asarray(heads, np.int64)
         if self._cache_size <= 0:
             li, ow = plan_local_gather(self.layout, heads)
-            return sharded_gather(self.table, jnp.asarray(li),
-                                  jnp.asarray(ow))
+            return self._gather(li, ow)
         uniq = np.unique(heads)
         missing = np.array([e for e in uniq if int(e) not in self._cache],
                            np.int64)
@@ -132,9 +161,7 @@ class ShardedKGEServer:
         self.cache_misses += len(missing)
         if len(missing):
             li, ow, inv = plan_unique_gather(self.layout, missing)
-            rows = np.asarray(sharded_gather(
-                self.table, jnp.asarray(li), jnp.asarray(ow),
-                inverse=jnp.asarray(inv)))
+            rows = np.asarray(self._gather(li, ow, inverse=inv))
             for e, row in zip(missing, rows):
                 self._cache[int(e)] = row
         for e in uniq:                       # LRU touch, then evict
@@ -147,8 +174,7 @@ class ShardedKGEServer:
         if any(v is None for v in rows_by_id.values()):
             # batch larger than the cache: fall back to a direct gather
             li, ow = plan_local_gather(self.layout, heads)
-            return sharded_gather(self.table, jnp.asarray(li),
-                                  jnp.asarray(ow))
+            return self._gather(li, ow)
         return jnp.asarray(np.stack([rows_by_id[int(e)] for e in heads]))
 
     # ------------------------------------------------------------------ #
@@ -176,13 +202,22 @@ class ShardedKGEServer:
         kp = min(k, rows)    # per-shard k': enough for any global winner
         num_shards = self.layout.num_shards
         decoder, interpret = self.decoder, self.interpret
+        quantized = self.table_dtype == "int8"
 
         def program(table, prepared, params, q, q_bias, bias):
             vals_parts, ids_parts = [], []
             for s in range(num_shards):
+                if quantized:
+                    # dequantize ONE shard's (rows, d) block transiently
+                    # and prepare its candidate form in-program; the fp32
+                    # (S, rows, d) stack never exists
+                    block = dequantize_rows(table[0][s], table[1][s])
+                    prep = None
+                else:
+                    block, prep = table[s], prepared[s]
                 scores = shard_scores(
-                    decoder, params, table[s], q, q_bias, bias[s],
-                    interpret, prepared=prepared[s])
+                    decoder, params, block, q, q_bias, bias[s],
+                    interpret, prepared=prep)
                 v, i = topk_padded(scores, kp, interpret=interpret)
                 vals_parts.append(v)
                 ids_parts.append(i + s * rows)   # local → global id

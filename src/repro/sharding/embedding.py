@@ -40,6 +40,22 @@ identical to the replicated gather:
   ``"psum"`` is the original dense replicated AllReduce and ``"alltoall"``
   routes each shard's owned chunk point-to-point.  See ``docs/sharding.md``
   for when to use which.
+* ``QuantizedTableLayout`` / ``quantize_rows`` / ``dequantize_rows`` —
+  row-wise symmetric int8 storage (``table_dtype="int8"``): int8 codes in
+  ``[-127, 127]`` plus one fp32 scale per row.  Scales are snapped to the
+  smallest POWER OF TWO ``>= amax / 127`` (clamped to the fp32 subnormal
+  floor ``2^-149``; exactly ``0.0`` for all-zero rows), which makes both
+  directions exact fp32 arithmetic: ``codes = rint(x / scale)`` divides by
+  a power of two and ``dequant = codes * scale`` multiplies by one, so
+  quantize ∘ dequantize is bitwise idempotent, the elementwise error obeys
+  ``|x - codes·scale| <= scale / 2``, and dequantization commutes bitwise
+  with the gather/exchange (``docs/sharding.md`` § Quantized tables).  The
+  training path keeps the fp32 master table as the parameter and routes
+  through a straight-through fused-dequant gather
+  (``repro.kernels.ops.quantized_sharded_gather``) whose backward is the
+  IDENTICAL scatter-add the fp32 gather uses, so optimizer and gradients
+  are untouched; eval/serving store only codes+scales and dequantize one
+  ``(rows, d)`` block at a time in-program.
 """
 from __future__ import annotations
 
@@ -81,6 +97,146 @@ class ShardedTableLayout:
         entity; scoring paths mask them with ``-inf``)."""
         lo = shard * self.rows_per_shard
         return lo, max(lo, min(self.num_rows, lo + self.rows_per_shard))
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantizedTableLayout(ShardedTableLayout):
+    """Row-block layout for the int8-quantized entity table.
+
+    Same row-block geometry as :class:`ShardedTableLayout` (gather plans,
+    ``shard_row_span`` and layout conversions interchange 1:1), but the
+    per-device footprint counts the ``(rows, d)`` int8 codes plus the
+    ``(rows,)`` fp32 scale sidecar instead of ``(rows, d)`` fp32 — the
+    ``(d + 4) / (4 d)`` compression that multiplies the 1/S sharding win
+    (e.g. 0.266x at d=64)."""
+
+    def bytes_per_shard(self, dim: int, itemsize: int = 1) -> int:
+        """int8 codes (``itemsize=1``) + one fp32 scale per row."""
+        return self.rows_per_shard * (dim * itemsize + 4)
+
+
+# ---------------------------------------------------------------------- #
+# Row-wise symmetric int8 quantization (power-of-two scales)
+# ---------------------------------------------------------------------- #
+TABLE_DTYPES = ("fp32", "int8")
+INT8_QMAX = 127          # symmetric code range [-127, 127]
+_MIN_SCALE_EXP = -149    # exponent of the smallest positive fp32
+
+
+def _bitcast_i32(x, xp):
+    if xp is np:
+        return np.ascontiguousarray(x).view(np.int32)
+    import jax
+    return jax.lax.bitcast_convert_type(x, xp.int32)
+
+
+def _bitcast_f32(bits, xp):
+    if xp is np:
+        return np.ascontiguousarray(bits.astype(np.int32)).view(np.float32)
+    import jax
+    return jax.lax.bitcast_convert_type(bits.astype(xp.int32), xp.float32)
+
+
+def _pow2_f32(e, xp):
+    """``2.0^e`` for integer ``e`` in the NORMAL range ``[-126, 127]``,
+    built from the raw bit pattern — exact under numpy and XLA
+    (``jnp.ldexp`` flushes subnormal results and XLA's CPU backend
+    flushes subnormal *operands*, so no float arithmetic touches
+    anything subnormal here)."""
+    return _bitcast_f32((e + 127) << 23, xp)
+
+
+def _pow2_scales(amax, xp):
+    """Per element: the smallest power of two ``>= amax / 127``, clamped
+    to ``[2^-149, 2^127]`` (exactly ``0.0`` where ``amax == 0``), plus
+    its integer exponent.
+
+    XLA's CPU backend flushes subnormal float operands to zero (numpy
+    does not), so a subnormal ``amax`` is rebuilt as a NORMAL float from
+    its integer mantissa (an exact int→float conversion of
+    ``amax · 2^149`` — for ``amax >= 0`` the raw bit pattern IS the
+    scaled magnitude) before any float op sees it.  With
+    ``amax = m · 2^e`` (``m in [0.5, 1)``), ``127 · 2^(e-7) >= amax``
+    iff ``m <= 127/128`` — so the exponent is ``e - 7`` or ``e - 6`` and
+    the scale is built from its raw fp32 bit pattern."""
+    amax = amax.astype(xp.float32)
+    bits_in = _bitcast_i32(amax, xp)
+    is_sub = bits_in < (1 << 23)       # biased exponent 0: subnormal or 0
+    a_eff = xp.where(is_sub, bits_in.astype(xp.float32), amax)
+    m, e = xp.frexp(a_eff)
+    e = (e - xp.where(is_sub, 149, 0)).astype(xp.int32)
+    e = xp.where(m > xp.float32(127.0 / 128.0), e - 6, e - 7)
+    e = xp.clip(e, _MIN_SCALE_EXP, 127).astype(xp.int32)
+    bits = xp.where(
+        e >= -126,
+        (xp.clip(e, -126, 127) + 127) << 23,          # normal 2^e
+        xp.int32(1) << xp.clip(e + 149, 0, 22))       # subnormal 2^e
+    scale = _bitcast_f32(bits, xp)
+    # positivity via the integer bits — XLA CPU flushes subnormal float
+    # COMPARE operands too (subnormal > 0 is False under jit)
+    return xp.where(bits_in > 0, scale, xp.float32(0.0)), e
+
+
+def quantize_rows(table):
+    """Row-wise symmetric int8 quantization: ``(..., rows, d)`` fp32 →
+    ``(codes (..., rows, d) int8, scales (..., rows) f32)``.
+
+    Works on numpy or jax arrays (bitwise-identical results — the host
+    pipeline and the in-jit training path must agree).  Per row,
+    ``scale`` is the smallest power of two ``>= amax / 127``
+    (:func:`_pow2_scales`), so ``codes = rint(x / scale)`` is an EXACT
+    division landing in ``[-127, 127]`` and dequantization is an exact
+    multiply; the round-trip error is ``<= scale / 2`` per element and
+    ``quantize(dequantize(codes, scales))`` returns the same
+    ``(codes, scales)`` bitwise.  All-zero rows get ``scale == 0`` and
+    all-zero codes."""
+    import jax.numpy as jnp
+    xp = np if isinstance(table, np.ndarray) else jnp
+    table = table.astype(xp.float32)
+    bits = _bitcast_i32(table, xp)
+    mag = bits & 0x7FFFFFFF
+    # amax from the integer magnitudes: for non-negative fp32 the bit
+    # pattern is monotone in the value, and integer max never flushes
+    # subnormals the way XLA CPU float arithmetic does
+    amax = _bitcast_f32(xp.max(mag, axis=-1), xp)
+    scales, e = _pow2_scales(amax, xp)
+    # codes = rint(x / 2^e) computed flush-proof: subnormal elements are
+    # rebuilt as normal floats from their integer mantissa (exactly
+    # x · 2^149), and the pow2 division becomes two exact multiplies by
+    # NORMAL powers of two (the exponent split keeps every intermediate
+    # that could still round to a nonzero code in the normal range, so
+    # numpy and XLA agree bitwise; intermediates that underflow only
+    # occur when the true quotient rounds to 0 on both)
+    is_sub = mag < (1 << 23)
+    sign = xp.where(bits < 0, xp.float32(-1.0), xp.float32(1.0))
+    x_eff = xp.where(is_sub, sign * mag.astype(xp.float32), table)
+    b_total = (-e)[..., None] - xp.where(is_sub, 149, 0)
+    b1 = xp.clip(b_total, -126, 126)
+    b2 = xp.clip(b_total - b1, -126, 126)
+    q = (x_eff * _pow2_f32(b1, xp)) * _pow2_f32(b2, xp)
+    codes = xp.clip(xp.rint(q), -INT8_QMAX, INT8_QMAX).astype(xp.int8)
+    return codes, scales
+
+
+def dequantize_rows(codes, scales):
+    """``codes (..., rows, d) int8 × scales (..., rows) f32 → fp32`` — one
+    exact power-of-two multiply per element (see :func:`quantize_rows`)."""
+    import jax.numpy as jnp
+    xp = (np if isinstance(codes, np.ndarray)
+          and isinstance(scales, np.ndarray) else jnp)
+    return codes.astype(xp.float32) * scales[..., None]
+
+
+def quantize_table(table):
+    """Stacked ``(S, rows, d)`` (or dense ``(V, d)``) fp32 table → the
+    ``{"codes", "scales"}`` dict checkpoint/serving representation."""
+    codes, scales = quantize_rows(table)
+    return {"codes": codes, "scales": scales}
+
+
+def dequantize_table(quantized):
+    """Inverse of :func:`quantize_table` (same stacked/dense shape)."""
+    return dequantize_rows(quantized["codes"], quantized["scales"])
 
 
 def shard_table(table, layout: ShardedTableLayout):
@@ -317,8 +473,104 @@ def _replicated_exchange(axis_name: str, exchange: str):
     return exchange_fn
 
 
+def _quantized_exchange(axis_name: str, exchange: str):
+    """The shard_map exchange for ``table_dtype="int8"``: int8 codes cross
+    the wire, per-slot fp32 scales ride along as a sidecar.
+
+    Forward: quantize this device's ``(1, rows, d)`` fp32 master block
+    row-wise (in-jit, per step — the fp32 table is never stacked), gather
+    the owned slots' int8 codes and fp32 scales locally, run the SAME
+    collective layout as the fp32 exchange on both (exactly one device
+    contributes a nonzero value per slot, so the int8 integer sum is
+    exact), and dequantize AFTER the exchange — the same single
+    power-of-two multiply a pre-exchange dequant would do, so the output
+    is bitwise equal to the fp32 exchange over the dequantized master.
+
+    Backward: straight-through — the identical masked scatter-add of the
+    cotangent into the master block that the fp32 path composes (fused
+    local gather backward ∘ identity exchange backward), so master-table
+    gradients are bitwise equal to the fp32 path's on the same master.
+    """
+    key = (axis_name, exchange, "int8")
+    fn = _EXCHANGE_FNS.get(key)
+    if fn is not None:
+        return fn
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+
+    def collective(x):
+        if exchange == "psum":
+            return jax.lax.psum(x, axis_name)
+        if exchange == "psum_scatter":
+            y = jax.lax.psum_scatter(
+                x, axis_name, scatter_dimension=0, tiled=True)
+            return jax.lax.all_gather(y, axis_name, axis=0, tiled=True)
+        s = jax.lax.psum(1, axis_name)            # static axis size
+        pieces = jax.lax.all_to_all(
+            x.reshape((s, x.shape[0] // s) + x.shape[1:]), axis_name,
+            split_axis=0, concat_axis=0)
+        return jax.lax.all_gather(
+            jnp.sum(pieces, axis=0).astype(x.dtype), axis_name, axis=0,
+            tiled=True)
+
+    def gather_impl(table, local_ids, owned):
+        codes, scales = quantize_rows(table)      # (1, rows, d) / (1, rows)
+        rows = table.shape[1]
+        flat, any_owned = ops.flat_gather_plan(local_ids, owned, rows)
+        c = jnp.where(any_owned[:, None],
+                      codes.reshape(rows, -1)[flat], jnp.int8(0))
+        sc = jnp.where(any_owned, scales.reshape(rows)[flat],
+                       jnp.float32(0.0))
+        v = c.shape[0]
+        if exchange == "psum":
+            v_pad = v
+        else:
+            s = jax.lax.psum(1, axis_name)
+            v_pad = -(-v // s) * s
+        if v_pad != v:
+            c = jnp.pad(c, ((0, v_pad - v), (0, 0)))
+            sc = jnp.pad(sc, ((0, v_pad - v),))
+        c = collective(c)[:v]
+        sc = collective(sc)[:v]
+        return c.astype(jnp.float32) * sc[:, None]
+
+    @jax.custom_vjp
+    def qx_gather(table, local_ids, owned):
+        return gather_impl(table, local_ids, owned)
+
+    qx_gather.defvjp(
+        lambda t, li, ow: (gather_impl(t, li, ow), (li, ow, t)),
+        ops.fsg_bwd)
+    _EXCHANGE_FNS[key] = qx_gather
+    return qx_gather
+
+
+def sharded_dequant_gather(codes, scales, local_ids, owned, *,
+                           inverse=None, interpret=None, use_kernel=None):
+    """Gather ``(V_b, d)`` fp32 rows straight from a quantized stacked
+    table (``codes (S, rows, d)`` int8 + ``scales (S, rows)`` f32) with
+    the dequant fused into the gather — the eval/serving path, where only
+    codes+scales live on device and the fp32 table never materializes.
+
+    Bitwise equal to dequantizing the whole stack and gathering densely
+    (each output row is one exact power-of-two multiply either way;
+    ``kernels/ref.py: dequant_gather_ref`` is the oracle).  No gradient —
+    training goes through ``ops.quantized_sharded_gather``, which keeps
+    the fp32 master as the differentiable input."""
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+
+    out = ops.dequant_sharded_gather(codes, scales, local_ids, owned,
+                                     interpret=interpret,
+                                     use_kernel=use_kernel)
+    return out if inverse is None else jnp.take(out, inverse, axis=0)
+
+
 def sharded_gather(table, local_ids, owned, *, axis_name=None,
-                   exchange=None, inverse=None):
+                   exchange=None, inverse=None, table_dtype="fp32"):
     """Gather ``(V_b, d)`` rows from a row-sharded table.
 
     * ``axis_name=None`` (single-device simulation): ``table`` is the full
@@ -356,18 +608,36 @@ def sharded_gather(table, local_ids, owned, *, axis_name=None,
     ``inverse`` (from a deduped plan) expands the exchanged unique rows
     back to batch slots with ``out[inverse]`` AFTER the exchange, so the
     exchange payload scales with unique ids, not batch slots.
+
+    ``table_dtype="int8"`` routes through the straight-through quantized
+    paths while keeping ``table`` the fp32 MASTER (the differentiable
+    parameter): the forward quantizes row-wise in-jit and gathers with the
+    fused-dequant kernel (``ops.quantized_sharded_gather`` on the sim
+    path; ``_quantized_exchange`` — int8 codes + fp32 scale sidecar over
+    the collective — under ``shard_map``), and the backward is the
+    IDENTICAL scatter-add the fp32 path uses, so master gradients match
+    the fp32 path bitwise on the same master.  Both sim exchange layouts
+    coincide for int8 (a ``masked_sum`` chain through the quantizer would
+    have zero gradient through ``rint``; the straight-through op is the
+    one correct estimator).
     """
     import jax
     import jax.numpy as jnp
 
     from repro.kernels import ops
 
+    if table_dtype not in TABLE_DTYPES:
+        raise ValueError(
+            f"unknown table_dtype {table_dtype!r}: one of {TABLE_DTYPES}")
+
     if axis_name is None:
         exchange = exchange or "fused"
         if exchange not in SIM_EXCHANGES:
             raise ValueError(
                 f"unknown sim exchange {exchange!r}: one of {SIM_EXCHANGES}")
-        if exchange == "fused":
+        if table_dtype == "int8":
+            out = ops.quantized_sharded_gather(table, local_ids, owned)
+        elif exchange == "fused":
             out = ops.fused_sharded_gather(table, local_ids, owned)
         else:
             g = jax.vmap(lambda t, i: t[i])(table, local_ids)  # (S, V, d)
@@ -400,6 +670,9 @@ def sharded_gather(table, local_ids, owned, *, axis_name=None,
         li = jax.lax.dynamic_index_in_dim(local_ids, i, keepdims=True)
         ow = jax.lax.dynamic_index_in_dim(owned, i, keepdims=True)
         s = local_ids.shape[0]
+    if table_dtype == "int8":
+        out = _quantized_exchange(axis_name, exchange)(table, li, ow)
+        return out if inverse is None else jnp.take(out, inverse, axis=0)
     # this device's masked local gather, via the fused S=1 flat-plan path
     x = ops.fused_sharded_gather(table, li, ow)                  # (V, d)
     if exchange == "psum":

@@ -248,6 +248,16 @@ def kge_param_specs(params: PyTree, mesh: Mesh) -> PyTree:
                     f"entity table has {shape[0]} shards but the model "
                     f"axis has {model} devices")
             return P("model", None, None)
+        if (names[-1] in ("codes", "scales") and len(names) >= 2
+                and names[-2] == "entity_embedding"):
+            # quantized table (serving/export form): int8 codes
+            # (S, rows, d) and fp32 scales (S, rows) both split the shard
+            # dim over the model axis, like the fp32 stack they encode
+            if shape[0] != model:
+                raise ValueError(
+                    f"quantized entity table has {shape[0]} shards but "
+                    f"the model axis has {model} devices")
+            return P("model", *([None] * (len(shape) - 1)))
         return P()
     return jax.tree_util.tree_map_with_path(one, params)
 

@@ -107,26 +107,117 @@ def restore_checkpoint(path: str, like: PyTree,
     Pass ``entity_rows`` (the model's true entity count) to verify the
     conversion exactly; without it, sharded layouts can only be checked up
     to their tail padding.  Every other leaf keeps the strict shape check.
+
+    Quantized tables round-trip too.  A quantized tree stores the entity
+    table as ``entity_embedding/{codes, scales}`` (``repro.sharding.
+    embedding.quantize_table`` — the serving/export form; training keeps
+    the fp32 master).  Four conversions compose with the layout
+    conversion above:
+
+    * quantized → quantized across shard counts: codes and scales are
+      pad/trim-reshaped EXACTLY (padding rows are all-zero, which is also
+      their quantized form — no requantization, bits preserved);
+    * quantized checkpoint → fp32 model: dequantize (exact: code · pow2
+      scale) then convert the layout;
+    * fp32 checkpoint → quantized model: convert the layout then
+      requantize — deterministic, ``quantize_rows`` has no randomness,
+      so restoring the same checkpoint twice yields identical codes;
+    * anything else (wrong dtype, wrong row count) fails with an explicit
+      error, never a silent cast.
     """
-    from repro.sharding.embedding import convert_table_layout
+    from repro.sharding.embedding import (
+        convert_table_layout, dequantize_rows, quantize_rows,
+    )
 
     data = np.load(path)
     with open(path.replace(".npz", ".json")) as f:
         manifest = json.load(f)
     flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    names = set(getattr(data, "files", ()))
+
+    def convert_scales(arr, target_shape):
+        # scales are (..., rows) — a table with d=1 as far as the
+        # row-block pad/trim is concerned
+        return convert_table_layout(
+            arr[..., None], tuple(target_shape) + (1,),
+            num_rows=entity_rows)[..., 0]
+
+    requant_cache: Dict[str, Tuple[np.ndarray, np.ndarray]] = {}
+
+    def requantized(parent, codes_shape):
+        # fp32 checkpoint table → the model's quantized layout: layout
+        # conversion FIRST (per-row amax is layout-invariant; padding
+        # rows quantize to zero codes + zero scale), then one
+        # deterministic quantization shared by the codes and scales leaves
+        if parent not in requant_cache:
+            src = data[parent]
+            if src.dtype != np.float32:
+                raise ValueError(
+                    f"cannot quantize checkpoint leaf {parent!r} of dtype "
+                    f"{src.dtype} into an int8 table — expected float32")
+            codes, scales = quantize_rows(
+                convert_table_layout(src, codes_shape,
+                                     num_rows=entity_rows))
+            requant_cache[parent] = (np.asarray(codes), np.asarray(scales))
+        return requant_cache[parent]
+
     out = []
     for p, v in flat:
         k = _path_str(p)
-        if k not in data:
-            raise KeyError(f"checkpoint missing leaf {k!r}")
-        arr = data[k]
-        if tuple(arr.shape) != tuple(np.shape(v)):
-            if k.split("/")[-1] == "entity_embedding":
-                arr = convert_table_layout(arr, np.shape(v),
-                                           num_rows=entity_rows)
-            else:
+        parts = k.split("/")
+        leaf = parts[-1]
+        parent = "/".join(parts[:-1])
+        quant_leaf = (leaf in ("codes", "scales") and len(parts) >= 2
+                      and parts[-2] == "entity_embedding")
+        if k in names:
+            arr = data[k]
+            if tuple(arr.shape) != tuple(np.shape(v)):
+                if leaf == "entity_embedding":
+                    arr = convert_table_layout(arr, np.shape(v),
+                                               num_rows=entity_rows)
+                elif quant_leaf and leaf == "codes":
+                    if arr.dtype != np.int8:
+                        raise ValueError(
+                            f"dtype mismatch at {k}: ckpt {arr.dtype} vs "
+                            f"int8 codes — not a quantized table")
+                    arr = convert_table_layout(arr, np.shape(v),
+                                               num_rows=entity_rows)
+                elif quant_leaf:
+                    arr = convert_scales(arr, np.shape(v))
+                else:
+                    raise ValueError(
+                        f"shape mismatch at {k}: ckpt {arr.shape} vs model "
+                        f"{np.shape(v)}")
+        elif leaf == "entity_embedding" and f"{k}/codes" in names:
+            # quantized checkpoint into an fp32 model: exact dequantize,
+            # then the usual layout conversion
+            codes = data[f"{k}/codes"]
+            if codes.dtype != np.int8:
                 raise ValueError(
-                    f"shape mismatch at {k}: ckpt {arr.shape} vs model "
-                    f"{np.shape(v)}")
+                    f"dtype mismatch at {k}/codes: ckpt {codes.dtype} vs "
+                    f"int8 — not a quantized table")
+            arr = convert_table_layout(
+                np.asarray(dequantize_rows(codes, data[f"{k}/scales"])),
+                np.shape(v), num_rows=entity_rows)
+        elif quant_leaf and parent in names:
+            # fp32 checkpoint into a quantized model: deterministic
+            # requantization in the model's layout
+            codes_shape = (np.shape(v) if leaf == "codes"
+                           else tuple(np.shape(v)) + (np.shape(v)[-1],))
+            if leaf == "scales":
+                # the codes leaf of the same table fixes the row layout;
+                # scales only need the leading dims
+                codes_like = [vv for pp, vv in flat
+                              if _path_str(pp) == f"{parent}/codes"]
+                codes_shape = np.shape(codes_like[0]) if codes_like else \
+                    codes_shape
+            codes, scales = requantized(parent, tuple(codes_shape))
+            arr = codes if leaf == "codes" else scales
+        else:
+            raise KeyError(f"checkpoint missing leaf {k!r}")
+        if tuple(arr.shape) != tuple(np.shape(v)):
+            raise ValueError(
+                f"shape mismatch at {k}: converted {arr.shape} vs model "
+                f"{np.shape(v)}")
         out.append(arr)
     return manifest["step"], jax.tree_util.tree_unflatten(treedef, out)

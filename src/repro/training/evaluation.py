@@ -112,5 +112,7 @@ def evaluate_split(
         decoder=decoder,
         num_shards=(kge_cfg.num_table_shards
                     if kge_cfg.rgcn.feature_dim is None else 1),
+        table_dtype=(kge_cfg.rgcn.table_dtype
+                     if kge_cfg.rgcn.feature_dim is None else "fp32"),
     )
     return {f"{split}_{k}": v for k, v in metrics.items()}

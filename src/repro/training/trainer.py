@@ -75,6 +75,12 @@ class TrainConfig:
     #   batch is transferred once, so there is nothing to save.
     gather_exchange: Optional[str] = None  # sharded-gather exchange layout
     #   (None = per-path default; see sharding.embedding.sharded_gather)
+    table_dtype: str = "fp32"           # "fp32" | "int8" entity-table
+    #   storage: int8 keeps an fp32 master for the optimizer but every
+    #   gather runs quantize → fused-dequant (int8 codes + fp32 per-row
+    #   scales cross the wire under shard_map) — values round to ≤ scale/2,
+    #   master grads stay bitwise equal to the fp32 path on the
+    #   dequantized table (repro.sharding.embedding)
     spmd: Optional[bool] = None         # run the REAL shard_map step over a
     #   data×model mesh (repro.training.distributed.make_spmd_train_step):
     #   params + adam moments placed with kge_param_specs (the row-sharded
@@ -103,6 +109,14 @@ class KGETrainer:
             raise ValueError(
                 "num_table_shards > 1 requires learned entity embeddings "
                 "(feature-mode models have no table to shard)")
+        from repro.sharding.embedding import TABLE_DTYPES
+        if cfg.table_dtype not in TABLE_DTYPES:
+            raise ValueError(
+                f"table_dtype={cfg.table_dtype!r} not in {TABLE_DTYPES}")
+        if cfg.table_dtype == "int8" and feat is not None:
+            raise ValueError(
+                "table_dtype='int8' requires learned entity embeddings "
+                "(feature-mode models have no table to quantize)")
 
         # ---- offline preprocessing (paper §3.2) ----
         self.pre: PreprocessedGraph = preprocess_graph(
@@ -127,6 +141,7 @@ class KGETrainer:
                 use_kernel=cfg.use_kernel,
                 num_table_shards=cfg.num_table_shards,
                 gather_exchange=cfg.gather_exchange,
+                table_dtype=cfg.table_dtype,
             ),
             decoder=cfg.decoder,
             num_negatives=cfg.num_negatives,

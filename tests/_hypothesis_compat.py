@@ -8,15 +8,24 @@ Usage in a test module::
 With hypothesis present these are the real objects.  Without it, ``given``
 returns a decorator that marks the test skipped, and ``st`` is a stand-in
 whose strategy expressions (``st.integers(0, 5)``, ``.map(f)``, …) evaluate
-to inert placeholders so module-level decorators still build.
+to inert placeholders so module-level decorators still build.  The
+fallback emits a ``PytestWarning`` at import so a CI run silently missing
+hypothesis (the property suites all skipping) is visible in the warnings
+summary instead of looking green by omission.
 """
 try:
     from hypothesis import given, settings, strategies as st
     HAVE_HYPOTHESIS = True
 except ImportError:                                   # clean environment
+    import warnings
+
     import pytest
 
     HAVE_HYPOTHESIS = False
+    warnings.warn(
+        "hypothesis is not installed: property-based tests will be "
+        "SKIPPED (pip install hypothesis to run them)",
+        pytest.PytestWarning, stacklevel=2)
 
     class _AnyStrategy:
         """Absorbs any strategy construction/chaining."""

@@ -409,21 +409,25 @@ def test_audit_cli_two_device_mesh(tmp_path):
     rows = payload["comm_audit"]
     assert [r["program"] for r in rows] == [
         "train[psum_scatter]", "train[psum_scatter,dedup]",
-        "rank[all-entities]", "rank[candidates]", "serve[topk]"]
+        "train[psum_scatter,int8]", "rank[all-entities]",
+        "rank[candidates]", "serve[topk]", "serve[topk,int8]"]
     assert all(r["ok"] for r in rows), rows
 
 
 def test_audit_cli_full_sweep_four_devices(tmp_path):
     # 4 devices: 2x2 mesh, BOTH axes carry collectives; every layout x
-    # dedup, both rank protocols, the serve step — all 9 programs
+    # dedup, both rank protocols, the serve step, plus the two int8
+    # programs (quantized train exchange + quantized serve) — 11 programs
     proc, payload = _run_audit_cli(tmp_path, ["--devices", "4"])
     assert proc.returncode == 0, proc.stdout + proc.stderr
     rows = payload["comm_audit"]
-    assert len(rows) == 9
+    assert len(rows) == 11
     assert all(r["ok"] for r in rows), rows
     # byte budgets are exact closed forms, not just "within tolerance"
     for r in rows:
         if r["program"].startswith("train["):
             assert r["expected_bytes"] > 0
     assert "train[alltoall,dedup]" in proc.stdout
-    assert "audit ok: 9 programs" in proc.stderr
+    assert "train[psum_scatter,int8]" in proc.stdout
+    assert "serve[topk,int8]" in proc.stdout
+    assert "audit ok: 11 programs" in proc.stderr

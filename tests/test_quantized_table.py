@@ -1,0 +1,268 @@
+"""Quantized (int8) entity table: property-based differential suite.
+
+Three contracts, each against an independent oracle:
+
+* **Round trip** — ``dequantize(quantize(x))`` is within ``scale/2`` of
+  ``x`` per element, for arbitrary row magnitudes (all-zero rows,
+  single-element rows, deep-subnormal through near-overflow dynamic
+  range), and quantization is idempotent / bitwise identical between the
+  numpy (host pipeline) and jax (in-jit) implementations and the
+  independent search-table oracle in ``repro.kernels.ref``.
+* **Fused-dequant gather** — the production gather over ``(codes,
+  scales)`` equals dequantize-then-gather bitwise on CPU, for random
+  plans with duplicate and out-of-order ids, on both the XLA lowering
+  and the Pallas kernel in interpret mode.
+* **Checkpoint round trip** — quantized ⇄ fp32 ⇄ resharded restores
+  preserve codes+scales exactly, fp32 → int8 requantizes
+  deterministically, and dtype/shape mismatches fail with explicit
+  errors.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.kernels import ref
+from repro.kernels.ops import dequant_sharded_gather
+from repro.sharding.embedding import (
+    INT8_QMAX, QuantizedTableLayout, ShardedTableLayout,
+    dequantize_rows, dequantize_table, plan_local_gather, quantize_rows,
+    quantize_table, shard_table, sharded_dequant_gather,
+)
+from repro.training.checkpoint import restore_checkpoint, save_checkpoint
+
+
+def _table(seed: int, rows: int, d: int, emin: int, emax: int,
+           zero_row: bool) -> np.ndarray:
+    """Random fp32 table with magnitudes spanning ``2^[emin, emax]`` —
+    the exponent sweep is the point: uniform floats never exercise the
+    subnormal-scale and near-overflow branches of the quantizer."""
+    rng = np.random.default_rng(seed)
+    lo, hi = sorted((emin, emax))
+    exp = rng.uniform(lo, hi, size=(rows, d))
+    mant = rng.uniform(1.0, 2.0, size=(rows, d))
+    sign = rng.choice([-1.0, 1.0], size=(rows, d))
+    x = (sign * mant * np.exp2(exp)).astype(np.float32)
+    if zero_row:
+        x[0] = 0.0
+    return x
+
+
+# ---------------------------------------------------------------------- #
+# round trip + cross-implementation equivalence
+# ---------------------------------------------------------------------- #
+@settings(max_examples=50, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), rows=st.integers(1, 16),
+       d=st.integers(1, 33), emin=st.integers(-140, 35),
+       emax=st.integers(-140, 35), zero_row=st.booleans())
+def test_property_round_trip_error_bound(seed, rows, d, emin, emax,
+                                         zero_row):
+    x = _table(seed, rows, d, emin, emax, zero_row)
+    codes, scales = quantize_rows(x)
+    assert codes.dtype == np.int8 and scales.dtype == np.float32
+    assert np.all(np.abs(codes.astype(np.int32)) <= INT8_QMAX)
+    err = np.abs(dequantize_rows(codes, scales) - x)
+    # scale is a power of two >= amax/127, so rint never clips and the
+    # round-trip error is the rounding error alone: <= scale/2 exactly
+    assert np.all(err <= scales[:, None] / 2.0)
+    # all-zero rows quantize to scale 0 + zero codes (not a tiny scale)
+    zero = np.all(x == 0.0, axis=-1)
+    np.testing.assert_array_equal(scales[zero], 0.0)
+    np.testing.assert_array_equal(codes[zero], 0)
+
+
+@settings(max_examples=50, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), rows=st.integers(1, 16),
+       d=st.integers(1, 33), emin=st.integers(-140, 35),
+       emax=st.integers(-140, 35), zero_row=st.booleans())
+def test_property_impl_matches_oracle_bitwise(seed, rows, d, emin, emax,
+                                              zero_row):
+    x = _table(seed, rows, d, emin, emax, zero_row)
+    codes_np, scales_np = quantize_rows(x)
+    codes_jx, scales_jx = quantize_rows(jnp.asarray(x))
+    codes_rf, scales_rf = ref.quantize_rows_ref(jnp.asarray(x))
+    # numpy == jax == independent search-table oracle, bitwise
+    np.testing.assert_array_equal(codes_np, np.asarray(codes_jx))
+    np.testing.assert_array_equal(scales_np, np.asarray(scales_jx))
+    np.testing.assert_array_equal(codes_np, np.asarray(codes_rf))
+    np.testing.assert_array_equal(scales_np, np.asarray(scales_rf))
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), rows=st.integers(1, 12),
+       d=st.integers(1, 17), emin=st.integers(-140, 35),
+       emax=st.integers(-140, 35))
+def test_property_quantization_idempotent(seed, rows, d, emin, emax):
+    x = _table(seed, rows, d, emin, emax, zero_row=False)
+    codes, scales = quantize_rows(x)
+    codes2, scales2 = quantize_rows(dequantize_rows(codes, scales))
+    np.testing.assert_array_equal(codes, codes2)
+    np.testing.assert_array_equal(scales, scales2)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), v=st.integers(1, 64),
+       s=st.sampled_from([1, 2, 4]), d=st.integers(1, 19),
+       batch=st.integers(1, 48))
+def test_property_fused_dequant_gather_matches_ref(seed, v, s, d, batch):
+    rng = np.random.default_rng(seed)
+    emb = _table(seed + 1, v, d, -20, 20, zero_row=v > 1)
+    layout = ShardedTableLayout(v, s)
+    codes, scales = quantize_rows(shard_table(emb, layout))
+    # ids with duplicates (sampled with replacement) and out-of-order
+    # structure (a reversed block appended)
+    ids = rng.integers(0, v, size=batch)
+    ids = np.concatenate([ids, ids[::-1]])
+    li, ow = plan_local_gather(layout, ids)
+    li, ow = jnp.asarray(li), jnp.asarray(ow)
+    want = np.asarray(ref.dequant_gather_ref(
+        jnp.asarray(codes), jnp.asarray(scales), li, ow))
+    got_xla = np.asarray(sharded_dequant_gather(
+        jnp.asarray(codes), jnp.asarray(scales), li, ow))
+    got_pallas = np.asarray(dequant_sharded_gather(
+        jnp.asarray(codes), jnp.asarray(scales), li, ow,
+        use_kernel=True, interpret=True))
+    np.testing.assert_array_equal(got_xla, want)
+    np.testing.assert_array_equal(got_pallas, want)
+    # equals a dense gather of the dequantized table at the global ids —
+    # in the contiguous row-block layout global row g sits at flat row g
+    dq_flat = np.asarray(dequantize_rows(codes, scales)).reshape(-1, d)
+    np.testing.assert_array_equal(want, dq_flat[ids])
+
+
+def test_layout_bytes_ratio_below_gate():
+    # the acceptance bar: int8 per-device bytes <= 0.3x fp32 at equal
+    # shard count, closed form (d + 4) / (4 d) at d=64
+    for v, s in [(20_000, 1), (20_000, 2), (11_111, 4), (64, 8)]:
+        q = QuantizedTableLayout(v, s)
+        f = ShardedTableLayout(v, s)
+        assert q.rows_per_shard == f.rows_per_shard
+        ratio = q.bytes_per_shard(64) / f.bytes_per_shard(64)
+        assert ratio <= 0.3
+        assert q.bytes_per_shard(64) == q.rows_per_shard * (64 + 4)
+
+
+def test_quantize_table_dict_round_trip():
+    emb = _table(0, 12, 8, -4, 4, zero_row=True)
+    stacked = shard_table(emb, ShardedTableLayout(12, 2))
+    q = quantize_table(stacked)
+    assert set(q) == {"codes", "scales"}
+    codes, scales = quantize_rows(stacked)
+    np.testing.assert_array_equal(q["codes"], codes)
+    err = np.abs(np.asarray(dequantize_table(q)) - stacked)
+    assert np.all(err <= np.asarray(scales)[..., None] / 2.0)
+
+
+# ---------------------------------------------------------------------- #
+# checkpoint round trips
+# ---------------------------------------------------------------------- #
+V, D = 37, 8
+
+
+def _quant_tree(emb: np.ndarray, s: int):
+    stacked = shard_table(emb, ShardedTableLayout(V, s))
+    return {"params": {"entity_embedding": quantize_table(stacked)},
+            "w": np.ones((3, 3), np.float32)}
+
+
+def _fp32_tree(emb: np.ndarray, s: int):
+    table = emb if s == 0 else shard_table(emb, ShardedTableLayout(V, s))
+    return {"params": {"entity_embedding": table},
+            "w": np.ones((3, 3), np.float32)}
+
+
+@pytest.fixture()
+def emb():
+    return _table(7, V, D, -6, 6, zero_row=True)
+
+
+def test_ckpt_quant_reshard_exact(tmp_path, emb):
+    # quantized @ 2 shards -> quantized @ 4 shards -> back: codes and
+    # scales are pad/trim-reshaped bitwise, never requantized
+    path = save_checkpoint(str(tmp_path), 1, _quant_tree(emb, 2))
+    _, t4 = restore_checkpoint(path, _quant_tree(emb, 4), entity_rows=V)
+    want4 = _quant_tree(emb, 4)["params"]["entity_embedding"]
+    np.testing.assert_array_equal(
+        t4["params"]["entity_embedding"]["codes"], want4["codes"])
+    np.testing.assert_array_equal(
+        t4["params"]["entity_embedding"]["scales"], want4["scales"])
+    path4 = save_checkpoint(str(tmp_path / "b"), 2, t4)
+    _, t2 = restore_checkpoint(path4, _quant_tree(emb, 2), entity_rows=V)
+    want2 = _quant_tree(emb, 2)["params"]["entity_embedding"]
+    np.testing.assert_array_equal(
+        t2["params"]["entity_embedding"]["codes"], want2["codes"])
+    np.testing.assert_array_equal(
+        t2["params"]["entity_embedding"]["scales"], want2["scales"])
+
+
+def test_ckpt_quant_to_fp32_is_dequantize(tmp_path, emb):
+    path = save_checkpoint(str(tmp_path), 1, _quant_tree(emb, 2))
+    _, tree = restore_checkpoint(path, _fp32_tree(emb, 0), entity_rows=V)
+    stacked = shard_table(emb, ShardedTableLayout(V, 2))
+    codes, scales = quantize_rows(stacked)
+    want = np.asarray(dequantize_rows(codes, scales)).reshape(-1, D)[:V]
+    np.testing.assert_array_equal(
+        tree["params"]["entity_embedding"], want)
+
+
+def test_ckpt_fp32_to_quant_requantizes_deterministically(tmp_path, emb):
+    path = save_checkpoint(str(tmp_path), 1, _fp32_tree(emb, 0))
+    _, a = restore_checkpoint(path, _quant_tree(emb, 2), entity_rows=V)
+    _, b = restore_checkpoint(path, _quant_tree(emb, 2), entity_rows=V)
+    want = _quant_tree(emb, 2)["params"]["entity_embedding"]
+    got = a["params"]["entity_embedding"]
+    np.testing.assert_array_equal(got["codes"], want["codes"])
+    np.testing.assert_array_equal(got["scales"], want["scales"])
+    # restoring the same checkpoint twice yields identical bits
+    np.testing.assert_array_equal(
+        got["codes"], b["params"]["entity_embedding"]["codes"])
+    np.testing.assert_array_equal(
+        got["scales"], b["params"]["entity_embedding"]["scales"])
+
+
+def test_ckpt_full_cycle_fp32_quant_reshard_fp32(tmp_path, emb):
+    # fp32 dense -> int8 @ 2 -> int8 @ 4 -> fp32 sharded @ 2: the final
+    # table is exactly the dequantized image of the single quantization
+    p1 = save_checkpoint(str(tmp_path / "1"), 1, _fp32_tree(emb, 0))
+    _, q2 = restore_checkpoint(p1, _quant_tree(emb, 2), entity_rows=V)
+    p2 = save_checkpoint(str(tmp_path / "2"), 2, q2)
+    _, q4 = restore_checkpoint(p2, _quant_tree(emb, 4), entity_rows=V)
+    p3 = save_checkpoint(str(tmp_path / "3"), 3, q4)
+    _, f2 = restore_checkpoint(p3, _fp32_tree(emb, 2), entity_rows=V)
+    stacked = shard_table(emb, ShardedTableLayout(V, 2))
+    codes, scales = quantize_rows(stacked)
+    np.testing.assert_array_equal(
+        f2["params"]["entity_embedding"],
+        np.asarray(dequantize_rows(codes, scales)))
+
+
+def test_ckpt_wrong_code_dtype_errors(tmp_path, emb):
+    tree = _quant_tree(emb, 2)
+    tree["params"]["entity_embedding"]["codes"] = \
+        tree["params"]["entity_embedding"]["codes"].astype(np.int16)
+    path = save_checkpoint(str(tmp_path), 1, tree)
+    with pytest.raises(ValueError, match="not a quantized table"):
+        restore_checkpoint(path, _fp32_tree(emb, 0), entity_rows=V)
+    with pytest.raises(ValueError, match="not a quantized table"):
+        restore_checkpoint(path, _quant_tree(emb, 4), entity_rows=V)
+
+
+def test_ckpt_non_f32_source_refuses_requantize(tmp_path, emb):
+    tree = _fp32_tree(emb, 0)
+    tree["params"]["entity_embedding"] = \
+        tree["params"]["entity_embedding"].astype(np.float64)
+    path = save_checkpoint(str(tmp_path), 1, tree)
+    with pytest.raises(ValueError, match="expected float32"):
+        restore_checkpoint(path, _quant_tree(emb, 2), entity_rows=V)
+
+
+def test_ckpt_vocab_mismatch_errors(tmp_path, emb):
+    path = save_checkpoint(str(tmp_path), 1, _quant_tree(emb, 2))
+    wrong = _table(8, V + 5, D, -4, 4, zero_row=False)
+
+    def like(s):
+        stacked = shard_table(wrong, ShardedTableLayout(V + 5, s))
+        return {"params": {"entity_embedding": quantize_table(stacked)},
+                "w": np.ones((3, 3), np.float32)}
+    with pytest.raises((ValueError, KeyError)):
+        restore_checkpoint(path, like(2), entity_rows=V + 5)

@@ -139,6 +139,45 @@ class TestShardedTopk:
         with pytest.raises(ValueError):
             srv.topk_tails(np.array([0]), np.array([0]), k=0)
 
+    @pytest.mark.parametrize("decoder", registered_decoders())
+    @pytest.mark.parametrize("shards", [1, 2, 4])
+    def test_int8_equal_dense_over_dequantized_table(self, emb, decoder,
+                                                     shards):
+        """``table_dtype="int8"``: only codes + scales live on device and
+        the top-k program dequantizes per shard block — values AND indices
+        must EXACTLY equal dense top-k over the dequantized table (the
+        dequant is one exact power-of-two multiply per element, so the
+        sharded and dense paths see bit-identical scores)."""
+        from repro.sharding.embedding import dequantize_rows, quantize_rows
+        dq = np.asarray(dequantize_rows(*quantize_rows(emb)))
+        p = init_decoder_params(jax.random.PRNGKey(0), decoder, N_REL, DIM)
+        heads = np.array([0, 7, 19, 19, 50])   # duplicates + tied rows
+        rels = np.array([0, 1, 2, 2, 0])
+        srv = ShardedKGEServer(emb, p, decoder, num_shards=shards,
+                               table_dtype="int8")
+        sv, si = srv.topk_tails(heads, rels, 11)
+        dv, di = dense_topk(dq, p, decoder, heads, rels, 11)
+        assert (si == di).all()
+        assert (sv == dv).all()
+
+    @pytest.mark.parametrize("shards", [1, 2, 4])
+    def test_int8_filtered_equal_dense(self, emb, graph, shards):
+        """Filtered int8 serving == dense + filter bias over the
+        dequantized table, exactly."""
+        from repro.sharding.embedding import dequantize_rows, quantize_rows
+        dq = np.asarray(dequantize_rows(*quantize_rows(emb)))
+        p = init_decoder_params(jax.random.PRNGKey(1), "distmult",
+                                N_REL, DIM)
+        heads = np.array([0, 3, 7, 19])
+        rels = np.array([0, 1, 2, 2])
+        csr = CSRFilterIndex.build([graph])
+        dv, di = dense_topk(dq, p, "distmult", heads, rels, 9, csr)
+        srv = ShardedKGEServer(emb, p, num_shards=shards,
+                               filter_index=csr, table_dtype="int8")
+        sv, si = srv.topk_tails(heads, rels, 9, filtered=True)
+        assert (si == di).all()
+        assert (sv == dv).all()
+
     @pytest.mark.parametrize("shards", [1, 2, 4])
     def test_filtered_equal_dense_csr_and_dict(self, emb, graph, shards):
         """Filtered serving == dense + serving-sentinel filter bias, for

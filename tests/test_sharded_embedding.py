@@ -24,8 +24,8 @@ from repro.models import (
 )
 from repro.sharding.embedding import (
     ShardedGatherPlan, ShardedTableLayout, convert_table_layout,
-    plan_local_gather, plan_local_gather_device, shard_table, sharded_gather,
-    unshard_table,
+    dequantize_rows, plan_local_gather, plan_local_gather_device,
+    quantize_rows, shard_table, sharded_gather, unshard_table,
 )
 
 SHARD_COUNTS = (1, 2, 4)
@@ -271,7 +271,6 @@ class TestDedupPlans:
         lay = ShardedTableLayout(v, s)
         table = shard_table(dense, lay)
         ids = np.full(17, 42, np.int32)
-        from repro.sharding.embedding import plan_unique_gather
         li, ow, inv = self._check(lay, table, dense, ids)
         assert ow.sum() == 1                      # one owned slot total
         w = jnp.arange(1.0, d + 1)
@@ -651,6 +650,148 @@ class TestLayoutConversion:
 
 
 # ====================================================================== #
+# Quantized (int8) table: the straight-through gather contract at every
+# shard count and exchange layout
+# ====================================================================== #
+class TestQuantizedGatherSweep:
+    """``table_dtype="int8"`` sweep: forward within the per-row ``scale/2``
+    bound of dense fp32 at 1/2/4 shards, master-weight gradients BITWISE
+    equal to the fp32 path on the identical dequantized inputs (the
+    straight-through backward is the same scatter-add), and every
+    shard_map exchange layout bitwise equal to the single-device int8
+    simulation."""
+
+    V, D = 301, 16
+
+    def _setup(self, s):
+        table = jax.random.normal(jax.random.PRNGKey(4), (self.V, self.D))
+        # duplicates, out-of-order, boundary rows; 13 ids so V_b % s != 0
+        # for s in (2, 4) — the pad-around-collective path
+        ids = np.array([5, 3, 5, 0, self.V - 1, 3, 299, 150, 150, 7, 0,
+                        self.V - 1, 42], np.int32)
+        lay = ShardedTableLayout(self.V, s)
+        shards = shard_table(table, lay)
+        li, ow = plan_local_gather(lay, ids)
+        return table, ids, shards, jnp.asarray(li), jnp.asarray(ow)
+
+    @pytest.mark.parametrize("s", SHARD_COUNTS)
+    def test_forward_within_half_scale_of_dense(self, s):
+        table, ids, shards, li, ow = self._setup(s)
+        codes, scales = quantize_rows(np.asarray(shards))
+        out = np.asarray(sharded_gather(shards, li, ow, table_dtype="int8"))
+        dense = np.asarray(table)[ids]
+        # contiguous row blocks put global row g at flat row g
+        row_scale = scales.reshape(-1)[ids]
+        assert (np.abs(out - dense) <= row_scale[:, None] / 2.0).all()
+        # and bitwise equal to the dense gather of the dequantized master
+        dq = np.asarray(dequantize_rows(codes, scales))
+        np.testing.assert_array_equal(out, dq.reshape(-1, self.D)[ids])
+
+    @pytest.mark.parametrize("s", SHARD_COUNTS)
+    def test_loss_and_grads_within_tolerance_of_fp32(self, s):
+        table, ids, shards, li, ow = self._setup(s)
+        w = jnp.arange(1.0, self.D + 1)
+
+        def loss(t, dtype):
+            return jnp.sum(jnp.tanh(
+                sharded_gather(t, li, ow, table_dtype=dtype)) * w)
+
+        l8, g8 = jax.value_and_grad(loss)(shards, "int8")
+        lf, gf = jax.value_and_grad(loss)(shards, "fp32")
+        # |tanh(a) - tanh(b)| <= |a - b| <= scale/2 per gathered element,
+        # so the loss bound is sum(w) * scale_max / 2 per batch slot and
+        # the per-table-element grad bound follows from |tanh'| shifts
+        # (<= 2|a-b|) times the duplicate count (<= 3 here)
+        _, scales = quantize_rows(np.asarray(shards))
+        s_max = float(scales.max())
+        assert abs(float(l8) - float(lf)) <= \
+            len(ids) * float(jnp.sum(w)) * s_max / 2.0
+        np.testing.assert_allclose(np.asarray(g8), np.asarray(gf),
+                                   atol=3 * self.D * s_max, rtol=0)
+
+    @pytest.mark.parametrize("s", SHARD_COUNTS)
+    def test_master_grads_bitwise_fp32_path_on_dequant(self, s):
+        _, ids, shards, li, ow = self._setup(s)
+        dq = jnp.asarray(dequantize_rows(*quantize_rows(np.asarray(shards))))
+        w = jnp.arange(1.0, self.D + 1)
+
+        def loss(t, dtype):
+            return jnp.sum(jnp.tanh(
+                sharded_gather(t, li, ow, table_dtype=dtype)) * w)
+
+        lq, gq = jax.value_and_grad(loss)(shards, "int8")
+        lf, gf = jax.value_and_grad(loss)(dq, "fp32")
+        assert float(lq) == float(lf)
+        np.testing.assert_array_equal(np.asarray(gq), np.asarray(gf))
+
+    @pytest.mark.parametrize("exchange",
+                             ("psum", "psum_scatter", "alltoall"))
+    @pytest.mark.parametrize("s", (2, 4))
+    def test_spmd_exchange_matches_sim_and_fp32_grads(self, s, exchange):
+        _, ids, shards, li, ow = self._setup(s)
+        sim = np.asarray(sharded_gather(shards, li, ow, table_dtype="int8"))
+        w = jnp.arange(1.0, self.D + 1)
+
+        def spmd_loss_and_out(stack, dtype):
+            out = jax.vmap(lambda t: sharded_gather(
+                t[None], li, ow, axis_name="model", exchange=exchange,
+                table_dtype=dtype), axis_name="model")(stack)
+            return out
+
+        out = spmd_loss_and_out(shards, "int8")
+        for shard in range(s):          # replicated output == simulation
+            np.testing.assert_array_equal(np.asarray(out[shard]), sim)
+
+        # int8 spmd master grads == fp32 spmd grads at the dequantized
+        # master (same vmap-inlined collective-transpose backward path as
+        # the fp32 exchange grad test above: loss consumes shard 0's copy)
+        dq = jnp.asarray(dequantize_rows(*quantize_rows(np.asarray(shards))))
+
+        def loss(stack, dtype):
+            return jnp.sum(jnp.tanh(spmd_loss_and_out(stack, dtype)[0]) * w)
+
+        gq = jax.grad(loss)(shards, "int8")
+        gf = jax.grad(loss)(dq, "fp32")
+        np.testing.assert_array_equal(np.asarray(gq), np.asarray(gf))
+
+    @pytest.mark.parametrize("s", SHARD_COUNTS)
+    def test_fullgraph_loss_matches_fp32_on_dequantized_master(
+            self, small_kg, s):
+        """Model-level: the int8 full-graph loss and ALL parameter
+        gradients are bitwise what the fp32 model produces when handed the
+        dequantized master table — the quantizer is exactly a forward-only
+        table substitution."""
+        parts = expand_all(
+            small_kg, partition_graph(small_kg, 2, "vertex_cut", seed=0), 2)
+        pb = pad_partitions(parts)
+        part0 = {f.name: jnp.asarray(getattr(pb, f.name)[0])
+                 for f in dataclasses.fields(pb)}
+        rgcn = dict(num_entities=small_kg.num_entities,
+                    num_relations=small_kg.num_relations, hidden_dim=16,
+                    num_layers=2, num_bases=2, dropout=0.0,
+                    num_table_shards=s)
+        cfg8 = KGEConfig(rgcn=RGCNConfig(**rgcn, table_dtype="int8"))
+        cfgf = KGEConfig(rgcn=RGCNConfig(**rgcn))
+        p = init_kge_params(jax.random.PRNGKey(0), cfgf)
+        emb = np.asarray(p["entity_embedding"])
+        dq = dequantize_rows(*quantize_rows(
+            emb if emb.ndim == 3 else emb[None]))
+        p_dq = dict(p)
+        p_dq["entity_embedding"] = jnp.asarray(
+            dq if emb.ndim == 3 else dq[0])
+        key = jax.random.PRNGKey(3)
+        l8, g8 = jax.value_and_grad(lambda q: fullgraph_loss(
+            q, cfg8, part0, key, train=False)[0])(p)
+        lf, gf = jax.value_and_grad(lambda q: fullgraph_loss(
+            q, cfgf, part0, key, train=False)[0])(p_dq)
+        assert float(l8) == float(lf)
+        _tree_equal(g8, gf)
+        # and the quantization error stays small at model level
+        l_fp32 = fullgraph_loss(p, cfgf, part0, key, train=False)[0]
+        np.testing.assert_allclose(float(l8), float(l_fp32), rtol=0.05)
+
+
+# ====================================================================== #
 # Real multi-device mesh: the psum exchange itself (subprocess: forcing
 # host device count must happen before jax import)
 # ====================================================================== #
@@ -753,3 +894,98 @@ def test_spmd_two_device_model_axis_psum_exchange():
         capture_output=True, text=True, timeout=540)
     assert proc.returncode == 0, proc.stdout + proc.stderr
     assert "TWO_DEVICE_OK" in proc.stdout
+
+
+_TWO_DEVICE_INT8_SCRIPT = """
+import dataclasses
+import jax, jax.numpy as jnp, numpy as np
+assert jax.device_count() == 2, jax.devices()
+from repro.core import expand_all, make_synthetic_kg, pad_partitions, \\
+    partition_graph
+from repro.launch.mesh import make_host_mesh
+from repro.models import KGEConfig, RGCNConfig, fullgraph_loss, \\
+    init_kge_params
+from repro.sharding import kge_param_specs
+from repro.training import adam
+from repro.training.distributed import (
+    make_simulated_train_step, make_spmd_train_step,
+)
+
+kg = make_synthetic_kg(150, 6, 1200, seed=1).with_inverse_relations()
+parts = expand_all(kg, partition_graph(kg, 1, "vertex_cut", seed=0), 2)
+pb = pad_partitions(parts)
+batch = {f.name: jnp.asarray(getattr(pb, f.name))
+         for f in dataclasses.fields(pb)}
+cfg = KGEConfig(rgcn=RGCNConfig(
+    num_entities=kg.num_entities, num_relations=kg.num_relations,
+    hidden_dim=16, num_layers=2, num_bases=2, dropout=0.0,
+    num_table_shards=2, table_dtype="int8"))
+params = init_kge_params(jax.random.PRNGKey(0), cfg)
+assert params["entity_embedding"].shape[0] == 2
+assert params["entity_embedding"].dtype == jnp.float32   # fp32 master
+mesh = make_host_mesh(1, 2)                      # data=1 x model=2
+opt = adam(0.01)
+keys = jax.random.split(jax.random.PRNGKey(2), 1)
+
+# the REAL quantized exchange (int8 codes + f32 scale sidecar over the
+# 2-device model axis) must be bitwise equal to the single-device int8
+# simulation: same loss, same updated fp32 master, two steps deep
+step_spmd = make_spmd_train_step(
+    lambda p, b, k: fullgraph_loss(p, cfg, b, k, train=False,
+                                   model_axis="model"),
+    opt, mesh, param_specs=kge_param_specs(params, mesh))
+step_sim = make_simulated_train_step(
+    lambda p, b, k: fullgraph_loss(p, cfg, b, k, train=False), opt)
+p1, o1, m1 = step_spmd(params, opt.init(params), batch, keys)
+p2, o2, m2 = step_sim(params, opt.init(params), batch, keys)
+assert float(m1["loss"]) == float(m2["loss"])
+for a, b in zip(jax.tree_util.tree_leaves(p1),
+                jax.tree_util.tree_leaves(p2)):
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+keys2 = jax.random.split(jax.random.PRNGKey(5), 1)
+_, _, m1b = step_spmd(p1, o1, batch, keys2)
+_, _, m2b = step_sim(p2, o2, batch, keys2)
+assert float(m1b["loss"]) == float(m2b["loss"])
+assert float(m1b["loss"]) < float(m1["loss"])    # it is actually learning
+
+# every exchange layout carries the int8 codes + scales bitwise equal
+ref_p = ref_m = None
+for exchange in ("psum", "psum_scatter", "alltoall"):
+    cfg_x = KGEConfig(rgcn=dataclasses.replace(
+        cfg.rgcn, gather_exchange=exchange))
+    step_x = make_spmd_train_step(
+        lambda p, b, k: fullgraph_loss(p, cfg_x, b, k, train=False,
+                                       model_axis="model"),
+        opt, mesh, param_specs=kge_param_specs(params, mesh))
+    p_x, _, m_x = step_x(params, opt.init(params), batch, keys)
+    if ref_p is None:
+        ref_p, ref_m = p_x, m_x
+    else:
+        assert float(m_x["loss"]) == float(ref_m["loss"]), exchange
+        for a, b in zip(jax.tree_util.tree_leaves(p_x),
+                        jax.tree_util.tree_leaves(ref_p)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+print("TWO_DEVICE_INT8_OK")
+"""
+
+
+@pytest.mark.slow
+def test_spmd_two_device_int8_table_matches_simulation():
+    """The int8 table over a REAL 2-device model axis: each device
+    quantizes its fp32 master block in-jit and exchanges int8 codes with
+    the f32 scale sidecar; the training trajectory (loss, updated master,
+    two steps) must be BITWISE equal to the single-device int8 simulation,
+    for every exchange layout."""
+    import os
+    import subprocess
+    import sys
+    repo = os.path.join(os.path.dirname(__file__), "..")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(repo, "src")
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        " --xla_force_host_platform_device_count=2").strip()
+    proc = subprocess.run(
+        [sys.executable, "-c", _TWO_DEVICE_INT8_SCRIPT], cwd=repo, env=env,
+        capture_output=True, text=True, timeout=540)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "TWO_DEVICE_INT8_OK" in proc.stdout
